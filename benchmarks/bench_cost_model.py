@@ -1,0 +1,16 @@
+"""Paper Table 2: total cost of ownership — exact reproduction plus the
+TPU re-parameterization for both payload modes."""
+from __future__ import annotations
+
+from repro.core.cost_model import cloudsort_tco, tpu_cloudsort_tco
+
+
+def run():
+    rows = []
+    b = cloudsort_tco()
+    for name, val in b.rows():
+        rows.append((f"paper_{name}", val * 1e6, val))
+    for mode in ("through", "late"):
+        tb = tpu_cloudsort_tco(payload_mode=mode)
+        rows.append((f"tpu256_{mode}_total", tb.total * 1e6, tb.total))
+    return rows

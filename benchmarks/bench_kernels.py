@@ -1,0 +1,47 @@
+"""Kernel microbenchmarks: the paper's C++ sort/merge component (§2.6)
+re-benchmarked as Pallas kernels (interpret on CPU; Mosaic on real TPU)
+against the XLA-native reference path."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _time(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    for n in (1 << 12, 1 << 15):
+        k = rng.integers(0, 2**32, n, dtype=np.uint32)
+        v = rng.integers(0, 2**32, n, dtype=np.uint32)
+        for impl in ("ref", "pallas"):
+            t = _time(jax.jit(lambda a, b, i=impl: ops.sort_kv(a, b, impl=i)),
+                      k, v)
+            rows.append((f"sort_{impl}_n{n}", t * 1e6, n / t))
+    # merge tournament
+    runs_k = np.sort(rng.integers(0, 2**32, (8, 1 << 12), dtype=np.uint32), -1)
+    runs_v = np.zeros_like(runs_k)
+    for impl in ("ref", "pallas"):
+        t = _time(jax.jit(lambda a, b, i=impl: ops.kway_merge(a, b, impl=i)),
+                  runs_k, runs_v)
+        rows.append((f"kway8_{impl}", t * 1e6, runs_k.size / t))
+    # partition
+    sk = np.sort(rng.integers(0, 2**32, (4, 1 << 14), dtype=np.uint32), -1)
+    bounds = np.sort(rng.integers(0, 2**32, 255, dtype=np.uint32))
+    for impl in ("ref", "pallas"):
+        t = _time(jax.jit(lambda a, b, i=impl: ops.partition_offsets(a, b, impl=i)),
+                  sk, bounds)
+        rows.append((f"partition_{impl}", t * 1e6, sk.size / t))
+    return rows

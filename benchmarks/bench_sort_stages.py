@@ -1,0 +1,62 @@
+"""Paper Table 1: job-completion-time breakdown (map+shuffle vs reduce).
+
+On this CPU container we measure the CPU-scale smoke sort's per-stage
+wall time and throughput (records/s), then project the paper's 100 TB /
+40-node setting with the TPU time model (core/cost_model.py) — reported
+side by side with the paper's measured 3508 s / 1870 s / 5378 s.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cost_model import TpuPodCostParams, tpu_sort_time_model
+from repro.core.exoshuffle import ShuffleConfig, _shuffle_round
+from repro.core.sortlib import merge_runs, partition_sorted, sort_records
+from repro.data import gensort
+
+
+def _time(fn, *args, repeats=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(n_records: int = 1 << 17, impl: str = "ref"):
+    rows = []
+    keys, ids = gensort.gen_keys(0, n_records)
+    cfg = ShuffleConfig(num_workers=8, impl=impl)
+
+    # stage timings on a single worker's share (the paper reports per-task
+    # averages: map 24 s, shuffle 7 s, merge 17 s, reduce 22 s)
+    sort_t = _time(jax.jit(lambda k, v: sort_records(k, v, impl=impl)), keys, ids)
+    rows.append(("map_sort", sort_t * 1e6, n_records / sort_t))
+
+    sk, sv = sort_records(keys, ids, impl=impl)
+    wb = cfg.keyspace.worker_boundaries()
+    part_t = _time(
+        jax.jit(lambda k: partition_sorted(k, wb, impl=impl)), sk
+    )
+    rows.append(("map_partition", part_t * 1e6, n_records / part_t))
+
+    runs_k = sk.reshape(8, -1)
+    runs_v = sv.reshape(8, -1)
+    # rows of reshape are each sorted slices? build sorted runs properly
+    runs_k = jnp.sort(runs_k, axis=-1)
+    merge_t = _time(
+        jax.jit(lambda k, v: merge_runs(k, v, impl=impl)), runs_k, runs_v
+    )
+    rows.append(("merge_8way", merge_t * 1e6, n_records / merge_t))
+
+    # TPU-pod projection of the 100 TB job vs the paper's Table 1
+    for mode in ("through", "late"):
+        t = tpu_sort_time_model(100e12, TpuPodCostParams(), payload_mode=mode)
+        rows.append((f"tpu100tb_{mode}_total_s", t["t_total_s"] * 1e6,
+                     t["job_hours"]))
+    rows.append(("paper_total_s", 5378 * 1e6, 5378 / 3600))
+    return rows

@@ -1,0 +1,97 @@
+"""§Perf hillclimb driver: re-lower one (arch x shape) cell with config
+overrides and print the roofline-term delta vs the recorded baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch tinyllama-1.1b \
+      --shape train_4k --set attn_sharding=heads --tag heads \
+      [--multi-pod] [--record]
+
+--record appends the run to results/dryrun.jsonl under --tag so
+EXPERIMENTS.md §Perf can cite it; without it the run is printed only.
+Override values are parsed as python literals (attn_sharding=heads stays
+a string, train_microbatches=4 becomes an int).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import ast
+import json
+
+
+def _parse_set(items):
+    out = {}
+    for it in items or []:
+        k, _, v = it.partition("=")
+        try:
+            out[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. attn_sharding=heads")
+    ap.add_argument("--tag", default="hillclimb")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--record", action="store_true")
+    ap.add_argument("--baseline", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    from benchmarks import roofline
+    from repro.launch.dryrun import run_cell
+
+    overrides = _parse_set(args.set)
+    out_path = args.baseline if args.record else None
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   out_path=out_path, overrides=overrides, tag=args.tag)
+    if not rec.get("ok"):
+        print(f"FAILED: {rec.get('error')}")
+        print(rec.get("traceback", ""))
+        return
+
+    mesh = rec["mesh"]
+    base = None
+    if os.path.exists(args.baseline):
+        for line in open(args.baseline):
+            r = json.loads(line)
+            if (r.get("arch"), r.get("shape"), r.get("mesh"),
+                    r.get("tag")) == (args.arch, args.shape, mesh, "baseline"):
+                base = r  # keep the last matching baseline
+    new = roofline.derive(rec)
+
+    def row(name, rec_d):
+        print(f"  {name:10s} C={rec_d['t_compute_s']*1e3:10.3f}ms "
+              f"M={rec_d['t_memory_s']*1e3:10.3f}ms "
+              f"X={rec_d['t_collective_s']*1e3:10.3f}ms "
+              f"dom={rec_d['dominant']:10s} useful={rec_d['useful_flop_ratio']:.3f} "
+              f"roofline={rec_d['roofline_fraction']:.3f}")
+
+    print(f"\n{args.arch} x {args.shape} [{mesh}] overrides={overrides}")
+    if base is not None:
+        bd = roofline.derive(base)
+        row("baseline", bd)
+        row(args.tag, new)
+        dom = bd["dominant"]
+        key = {"compute": "t_compute_s", "memory": "t_memory_s",
+               "collective": "t_collective_s"}[dom]
+        if bd[key] > 0:
+            print(f"  dominant term ({dom}): {bd[key]*1e3:.3f} -> "
+                  f"{new[key]*1e3:.3f} ms  "
+                  f"({(1 - new[key]/bd[key])*100:+.1f}% better)")
+        print(f"  peak GiB/dev: {base.get('peak_bytes_per_dev',0)/2**30:.2f}"
+              f" -> {rec.get('peak_bytes_per_dev',0)/2**30:.2f}")
+    else:
+        row(args.tag, new)
+    print(f"  while trips: {rec.get('while_trips')}  "
+          f"collectives: { {k: f'{v:.3g}' for k, v in rec['collective_bytes'].items()} }")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+results/dryrun.jsonl. Usage:
+
+  PYTHONPATH=src python -m benchmarks.make_experiments [results/dryrun.jsonl]
+
+Prints markdown to stdout; EXPERIMENTS.md embeds the output.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks import roofline
+
+
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}TiB"
+
+
+def _fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.2f}"
+
+
+def dryrun_table(path: str, mesh: str, tag: str = "baseline") -> str:
+    rows = []
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("mesh") != mesh or r.get("tag", "baseline") != tag:
+            continue
+        rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    out = [
+        "| arch | shape | ok | peak GiB/dev | flops/dev | HLO bytes/dev |"
+        " collective bytes/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        coll = (r.get("collective_bytes") or {}).get("total", 0)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {'Y' if r.get('ok') else 'FAIL'}"
+            f" | {r.get('peak_bytes_per_dev', 0) / 2**30:.2f}"
+            f" | {r.get('flops', 0):.3e} | {r.get('bytes_accessed', 0):.3e}"
+            f" | {_fmt_bytes(coll)} | {r.get('compile_s', 0):.0f} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(path: str, mesh: str = "16x16", tag: str = "baseline") -> str:
+    rows = roofline.table(path, tag=tag, mesh=mesh)
+    out = [
+        "| arch | shape | compute ms | memory ms | collective ms | dominant |"
+        " useful flops ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_ms(r['t_compute_s'])}"
+            f" | {_fmt_ms(r['t_memory_s'])} | {_fmt_ms(r['t_collective_s'])}"
+            f" | **{r['dominant']}** | {r['useful_flop_ratio']:.3f}"
+            f" | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def collective_breakdown(path: str, mesh: str, tag: str = "baseline") -> str:
+    rows = []
+    for line in open(path):
+        r = json.loads(line)
+        if r.get("mesh") != mesh or r.get("tag", "baseline") != tag:
+            continue
+        if not r.get("ok"):
+            continue
+        rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    ops = ["all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+           "collective-permute"]
+    out = [
+        "| arch | shape | " + " | ".join(ops) + " |",
+        "|---|---|" + "---|" * len(ops),
+    ]
+    for r in rows:
+        cb = r.get("collective_bytes") or {}
+        cells = " | ".join(_fmt_bytes(cb.get(o, 0)) for o in ops)
+        out.append(f"| {r['arch']} | {r['shape']} | {cells} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    print("### Dry-run — single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(path, "16x16"))
+    print("\n### Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(path, "2x16x16"))
+    print("\n### Roofline — single pod baseline\n")
+    print(roofline_table(path))
+    print("\n### Collective-bytes breakdown (per device, 16x16)\n")
+    print(collective_breakdown(path, "16x16"))
+
+
+if __name__ == "__main__":
+    main()

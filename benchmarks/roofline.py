@@ -1,0 +1,115 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh)
+from the dry-run's compiled artifacts (results/dryrun.jsonl).
+
+  compute term    = HLO_FLOPs / (chips x 197e12 bf16 FLOP/s)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+cost_analysis() reports whole-program FLOPs/bytes; collective bytes are
+parsed from the optimized HLO (launch/dryrun.py:collective_bytes). The
+dominant term is the bottleneck the §Perf loop iterates on. MODEL_FLOPS
+(6·N·D forward+backward, or 2·N·D for inference) over HLO_FLOPs measures
+how much compiled compute is 'useful'.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import get
+from repro.models import api as mapi
+
+PEAK_FLOPS = 197e12  # bf16 per chip (v5e)
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+
+def model_flops(arch_id: str, shape_name: str) -> float:
+    cfg = get(arch_id)
+    spec = mapi.SHAPES[shape_name]
+    n_active = cfg.params_active()
+    tokens = spec["batch"] * spec["seq"]
+    if spec["kind"] == "train":
+        return 6.0 * n_active * tokens
+    if spec["kind"] == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * spec["batch"]
+
+
+def derive(rec: dict) -> dict:
+    chips = rec["devices"]
+    flops = rec.get("flops") or 0.0
+    byts = rec.get("bytes_accessed") or 0.0
+    coll = (rec.get("collective_bytes") or {}).get("total", 0)
+    # cost_analysis flops on the CPU backend are per-device post-SPMD.
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_per_chip = mf / chips
+    useful = mf_per_chip / flops if flops else 0.0
+    # roofline fraction: useful work at peak over the modeled step time
+    t_step = max(t_compute, t_memory, t_coll)
+    frac = (mf_per_chip / PEAK_FLOPS) / t_step if t_step else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", "baseline"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf_per_chip, "hlo_flops": flops,
+        "useful_flop_ratio": useful, "roofline_fraction": frac,
+        "peak_gib_per_dev": rec.get("peak_bytes_per_dev", 0) / 2**30,
+    }
+
+
+def load(path: str = "results/dryrun.jsonl", tag: str | None = None):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        rec = json.loads(line)
+        if not rec.get("ok"):
+            continue
+        if tag and rec.get("tag") != tag:
+            continue
+        rows.append(derive(rec))
+    return rows
+
+
+def run():
+    """benchmarks.run hook: one CSV row per dry-run cell."""
+    rows = []
+    for r in load():
+        if r["mesh"] != "16x16" or r["tag"] != "baseline":
+            continue
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        t_us = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6
+        rows.append((name, t_us, r["roofline_fraction"]))
+    return rows
+
+
+def table(path: str = "results/dryrun.jsonl", tag: str = "baseline",
+          mesh: str = "16x16"):
+    rows = load(path, tag=tag)
+    out = [r for r in rows if r["mesh"] == mesh]
+    out.sort(key=lambda r: (r["arch"], r["shape"]))
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    for r in table(path):
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+            f"C={r['t_compute_s']*1e3:9.3f}ms M={r['t_memory_s']*1e3:9.3f}ms "
+            f"X={r['t_collective_s']*1e3:9.3f}ms dom={r['dominant']:10s} "
+            f"useful={r['useful_flop_ratio']:.2f} "
+            f"roofline={r['roofline_fraction']:.3f}"
+        )

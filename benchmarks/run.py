@@ -1,0 +1,34 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_sort_stages     — Table 1 (job completion / stage breakdown)
+  bench_cost_model      — Table 2 (TCO, reproduced to the cent)
+  bench_pipeline_overlap— Figure 1 (stage overlap factor)
+  bench_kernels         — §2.6 C++ sort/merge component as Pallas kernels
+  roofline              — §Roofline rows from the dry-run artifacts
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_cost_model, bench_kernels,
+                            bench_pipeline_overlap, bench_sort_stages,
+                            roofline)
+
+    print("name,us_per_call,derived")
+    for mod in (bench_cost_model, bench_sort_stages, bench_pipeline_overlap,
+                bench_kernels, roofline):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived:.6g}")
+        except Exception:  # noqa: BLE001 — keep the harness running
+            print(f"{mod.__name__},error,0", file=sys.stderr)
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""The paper's own benchmark configuration (Exoshuffle-CloudSort §2.1).
+
+Scaled variants for CPU validation (`smoke`), pod-scale dry-run
+(`pod256`/`pod512`), and the paper-parameter record (`paper` — 100 TB,
+kept for the cost model; never materialized on this container).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudSortConfig:
+    total_records: int
+    num_workers: int  # W
+    reducers_per_worker: int  # R1
+    num_rounds: int  # merge-controller rounds (streaming)
+    payload_words: int = 23  # 92 B payload + 8 B header = 100 B records
+    capacity_factor: float = 1.5
+    impl: str = "pallas"
+
+    @property
+    def records_per_worker(self) -> int:
+        return self.total_records // self.num_workers
+
+
+# Paper parameters (§2.1): 100 TB = 10^12 records of 100 B; M=50k maps of
+# 2 GB; W=40 workers; R=25k reducers (R1=625). Records here are 100 B too.
+PAPER = CloudSortConfig(
+    total_records=10**12,
+    num_workers=64,  # nearest pow2 of the paper's 40 (merge tournament)
+    reducers_per_worker=625,
+    num_rounds=1250,  # M / W map tasks per worker, batched 10 per round
+)
+
+SMOKE = CloudSortConfig(
+    total_records=1 << 17,
+    num_workers=8,
+    reducers_per_worker=4,
+    num_rounds=4,
+    impl="ref",
+)
+
+POD256 = CloudSortConfig(
+    total_records=1 << 24,
+    num_workers=256,
+    reducers_per_worker=64,
+    num_rounds=8,
+    impl="ref",
+)
+
+POD512 = CloudSortConfig(
+    total_records=1 << 25,
+    num_workers=512,
+    reducers_per_worker=64,
+    num_rounds=8,
+    impl="ref",
+)

@@ -1,0 +1,251 @@
+"""Distributed two-stage external sort — the paper's algorithm on a TPU mesh.
+
+Paper (§2.1): map tasks sort input partitions and push range-partitioned
+slices to per-worker merge controllers; merge tasks merge accumulated blocks
+and spill per-reducer runs; reduce tasks merge the spilled runs into final
+output partitions.
+
+TPU mapping (DESIGN.md §2): every mesh device is simultaneously a map
+worker, a merge controller, and a reducer (W = #devices). One *shuffle
+round* is:
+
+  map     : local bitonic sort of the round's records          (Pallas)
+  partition: searchsorted at the W worker boundaries            (Pallas)
+  shuffle : a single tiled all_to_all of fixed-capacity blocks  (ICI)
+  merge   : log2(W)-round bitonic merge tournament of the W
+            received sorted blocks -> one sorted run            (Pallas)
+
+`distributed_sort` is the one-round version (whole local shard in one
+round). `core.streaming.streaming_sort` is the multi-round pipelined version
+that reproduces the paper's bounded merge-controller buffer and two-stage
+(map+shuffle+merge, then reduce) structure.
+
+Raggedness: Ray gives the paper variable-sized blocks for free; a static
+SPMD all_to_all needs fixed shapes, so blocks are padded to
+capacity = next_pow2(n/W * capacity_factor) with lex-max records (the Indy
+category's uniform keys keep the imbalance, and hence the padding waste,
+small). `overflow` reports if any block exceeded capacity — the checksum
+validation in data/valsort.py would also catch any dropped record, exactly
+like the paper's valsort gate (§3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sortlib
+from repro.core.keyspace import KeySpace
+
+
+@dataclasses.dataclass(frozen=True)
+class ShuffleConfig:
+    """Tunables of the distributed sort (paper §2.1 parameter list)."""
+
+    num_workers: int  # W — product of the mesh axes the sort runs over
+    reducers_per_worker: int = 1  # R1; R = W * R1
+    capacity_factor: float = 1.5  # block slack over the uniform-key mean
+    num_rounds: int = 1  # merge-controller rounds (streaming)
+    impl: str = "pallas"  # "pallas" | "ref"
+
+    @property
+    def keyspace(self) -> KeySpace:
+        return KeySpace(
+            num_reducers=self.num_workers * self.reducers_per_worker,
+            num_workers=self.num_workers,
+        )
+
+    def block_capacity(self, records_per_round: int) -> int:
+        """Fixed all_to_all block size for a round of n records/worker."""
+        mean = records_per_round / self.num_workers
+        cap = int(math.ceil(mean * self.capacity_factor))
+        # Power of two so merge-network run lengths stay aligned.
+        p = 1
+        while p < cap:
+            p *= 2
+        return p
+
+
+def _shuffle_round(keys, vals, *, cfg: ShuffleConfig, axis, capacity: int):
+    """One map->partition->all_to_all->merge round. Per-device code.
+
+    keys/vals: (n,) local records. Returns (run_k, run_v, counts, overflow):
+    run_* (W*capacity,) lex-sorted with pads at the tail; counts (W,) int32
+    records received from each source worker.
+    """
+    ks = cfg.keyspace
+    # --- map: sort the local partition (paper §2.3 step 1) ---
+    sk, sv = sortlib.sort_records(keys, vals, impl=cfg.impl)
+    # --- partition at worker boundaries (paper §2.2) ---
+    wb = ks.worker_boundaries()  # (W-1,)
+    starts, counts = sortlib.partition_sorted(sk, wb, impl=cfg.impl)
+    bk, bv, overflow = sortlib.gather_range_blocks(sk, sv, starts, counts, capacity)
+    # --- shuffle: one tiled all_to_all replaces Ray's eager block push ---
+    rk = jax.lax.all_to_all(bk, axis, split_axis=0, concat_axis=0, tiled=True)
+    rv = jax.lax.all_to_all(bv, axis, split_axis=0, concat_axis=0, tiled=True)
+    rcounts = jax.lax.all_to_all(counts, axis, split_axis=0, concat_axis=0, tiled=True)
+    # --- merge: the merge task (paper §2.3), a bitonic tournament ---
+    mk, mv = sortlib.merge_runs(rk, rv, impl=cfg.impl)
+    return mk, mv, rcounts, overflow
+
+
+def _sort_shard(keys, vals, *, cfg: ShuffleConfig, axis):
+    """Whole-shard (single-round) sort. Per-device code under shard_map."""
+    n = keys.shape[-1]
+    capacity = cfg.block_capacity(n)
+    mk, mv, rcounts, overflow = _shuffle_round(keys, vals, cfg=cfg, axis=axis, capacity=capacity)
+    valid = jnp.sum(rcounts).astype(jnp.int32)
+    any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
+    return mk, mv, valid[None], any_overflow
+
+
+def distributed_sort(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_names: Sequence[str] | str,
+    cfg: ShuffleConfig | None = None,
+    impl: str = "pallas",
+    capacity_factor: float = 1.5,
+):
+    """Globally sort (key, val) records sharded over `axis_names`.
+
+    keys/vals: global (N,) uint32, N divisible by W = prod(mesh[a]).
+    Returns (sorted_keys, sorted_vals, valid_counts, overflow):
+      sorted_keys/vals: (W * W * capacity,) — device d's segment is its
+        worker range, lex-sorted, valid prefix of length valid_counts[d];
+      valid_counts: (W,) int32; overflow: bool.
+    """
+    axis = tuple([axis_names] if isinstance(axis_names, str) else axis_names)
+    w = int(math.prod(mesh.shape[a] for a in axis))
+    if cfg is None:
+        cfg = ShuffleConfig(num_workers=w, impl=impl, capacity_factor=capacity_factor)
+    assert cfg.num_workers == w, (cfg.num_workers, w)
+    assert w & (w - 1) == 0, "worker count must be a power of two (merge tournament)"
+
+    spec = P(axis)
+    fn = jax.shard_map(
+        lambda k, v: _sort_shard(k, v, cfg=cfg, axis=axis),
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=(spec, spec, spec, P()),
+        check_vma=False,  # pallas_call out_shapes carry no vma info
+    )
+    return fn(keys, vals)
+
+
+def _sort_shard_payload(keys, ids, payload, *, cfg: ShuffleConfig, axis, mode: str):
+    """Per-device whole-record sort: headers through the merge network,
+    payload via `mode` ("through" = paper-faithful, "late" = deferred fetch).
+    """
+    from repro.core import payload as pay
+
+    n = keys.shape[-1]
+    w = cfg.num_workers
+    capacity = cfg.block_capacity(n)
+    ks = cfg.keyspace
+
+    # map + partition (as in _shuffle_round, but we keep the blocks around).
+    sk, sv = sortlib.sort_records(keys, ids, impl=cfg.impl)
+    wb = ks.worker_boundaries()
+    starts, counts = sortlib.partition_sorted(sk, wb, impl=cfg.impl)
+    bk, bv, overflow = sortlib.gather_range_blocks(sk, sv, starts, counts, capacity)
+
+    rk = jax.lax.all_to_all(bk, axis, 0, 0, tiled=True)
+    rv = jax.lax.all_to_all(bv, axis, 0, 0, tiled=True)
+    rcounts = jax.lax.all_to_all(counts, axis, 0, 0, tiled=True)
+
+    if mode == "through":
+        # Payload rows ride the same wire hop, block-aligned with headers.
+        my = jax.lax.axis_index(axis).astype(jnp.uint32)
+        local_row = jnp.minimum(
+            bv - my * jnp.uint32(n), jnp.uint32(n - 1)
+        ).astype(jnp.int32)
+        bp = payload[local_row]  # (W, C, pw)
+        rp = pay.exchange_payload_blocks(bp, axis)
+
+    mk, mv = sortlib.merge_runs(rk, rv, impl=cfg.impl)
+
+    if mode == "through":
+        pout = pay.align_payload_to_merge(
+            rv.reshape(-1), rp.reshape(-1, rp.shape[-1]), mv
+        )
+        fetch_overflow = jnp.bool_(False)
+    elif mode == "late":
+        fetch_cap = cfg.block_capacity(mv.shape[0])
+        pout, fetch_overflow = pay.late_fetch_payload(
+            mv,
+            payload,
+            axis=axis,
+            num_workers=w,
+            records_per_worker=n,
+            capacity=fetch_cap,
+        )
+    else:
+        raise ValueError(f"unknown payload mode {mode!r}")
+
+    valid = jnp.sum(rcounts).astype(jnp.int32)
+    ovf = jax.lax.pmax(
+        (overflow | fetch_overflow).astype(jnp.int32), axis
+    ) > 0
+    return mk, mv, pout, valid[None], ovf
+
+
+def distributed_sort_payload(
+    keys: jax.Array,
+    ids: jax.Array,
+    payload: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_names: Sequence[str] | str,
+    mode: str = "through",
+    cfg: ShuffleConfig | None = None,
+    impl: str = "pallas",
+    capacity_factor: float = 1.5,
+):
+    """Sort whole records: (key, global id, payload row).
+
+    keys/ids: (N,) uint32; ids must be globally unique with
+    id // (N/W) == producing worker (the data/gensort.py layout).
+    payload: (N, pw) uint32. Returns (sorted_keys, sorted_ids, payload_rows,
+    valid_counts, overflow) — payload_rows[i] is the payload of the record
+    at output position i.
+    """
+    axis = tuple([axis_names] if isinstance(axis_names, str) else axis_names)
+    w = int(math.prod(mesh.shape[a] for a in axis))
+    if cfg is None:
+        cfg = ShuffleConfig(num_workers=w, impl=impl, capacity_factor=capacity_factor)
+    assert w & (w - 1) == 0
+
+    spec = P(axis)
+    pspec = P(axis, None)
+    fn = jax.shard_map(
+        lambda k, i, p: _sort_shard_payload(k, i, p, cfg=cfg, axis=axis, mode=mode),
+        mesh=mesh,
+        in_specs=(spec, spec, pspec),
+        out_specs=(spec, spec, pspec, spec, P()),
+        check_vma=False,
+    )
+    return fn(keys, ids, payload)
+
+
+def reduce_partitions(sorted_keys: jax.Array, cfg: ShuffleConfig, worker_id: jax.Array):
+    """Paper §2.4: split a worker's final sorted run into its R1 reducer ranges.
+
+    Per-device helper: sorted_keys (m,) is this worker's lex-sorted output;
+    returns (starts, counts) of shape (R1,) delimiting each output partition
+    (the paper uploads each as one S3 object).
+    """
+    ks = cfg.keyspace
+    if cfg.reducers_per_worker == 1:
+        n = sorted_keys.shape[-1]
+        return jnp.zeros((1,), jnp.int32), jnp.full((1,), n, jnp.int32)
+    lrb = ks.local_reducer_boundaries()  # (W, R1-1) host constant
+    mine = jax.lax.dynamic_index_in_dim(lrb, worker_id, axis=0, keepdims=False)
+    starts, counts = sortlib.partition_sorted(sorted_keys, mine, impl=cfg.impl)
+    return starts, counts

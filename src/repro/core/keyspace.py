@@ -1,0 +1,116 @@
+"""Range partitioner over the uint32 key space (paper §2.2).
+
+The paper partitions the u64 key space [0, 2^64) into R = 25 000 equal
+reducer ranges, grouped R1 = R/W = 625 per worker. We reproduce the same
+construction over uint32 (see DESIGN.md §2 for the key-width adaptation):
+
+  - R reducer ranges: range j covers [j * 2^32/R, (j+1) * 2^32/R).
+  - W worker ranges: worker w owns reducer ranges [w*R1, (w+1)*R1), i.e.
+    keys in [w * 2^32/W, (w+1) * 2^32/W).
+
+Boundaries are *internal* (R-1 / W-1 values): the count of keys below the
+last (2^32) boundary is always n, so it is implicit — this also avoids the
+uint32-representability problem for 2^32 itself.
+
+The Indy category assumes uniformly distributed keys, so equal key-space
+ranges yield balanced partitions without sampling; `sampled_boundaries`
+provides the Daytona-style fallback for skewed data.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KEY_BITS = 32
+KEY_SPACE = 1 << KEY_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class KeySpace:
+    """The paper's (R, W) range partition of the sort key space."""
+
+    num_reducers: int  # R
+    num_workers: int  # W
+
+    def __post_init__(self):
+        assert self.num_reducers % self.num_workers == 0, (
+            "R must be a multiple of W (paper: R1 = R/W reducer ranges per worker)"
+        )
+
+    @property
+    def reducers_per_worker(self) -> int:  # R1
+        return self.num_reducers // self.num_workers
+
+    def reducer_boundaries(self) -> jax.Array:
+        """(R-1,) uint32 internal boundaries of the reducer ranges."""
+        return _equal_boundaries(self.num_reducers)
+
+    def worker_boundaries(self) -> jax.Array:
+        """(W-1,) uint32 internal boundaries of the worker ranges."""
+        return _equal_boundaries(self.num_workers)
+
+    def local_reducer_boundaries(self) -> jax.Array:
+        """(W, R1-1) uint32: per-worker internal boundaries of its R1 ranges."""
+        r = _equal_boundaries(self.num_reducers)  # (R-1,)
+        # Worker w's internal boundaries are reducer boundaries w*R1 .. w*R1+R1-2.
+        full = np.asarray(r).reshape(-1)
+        out = np.stack(
+            [
+                full[w * self.reducers_per_worker : (w + 1) * self.reducers_per_worker - 1]
+                for w in range(self.num_workers)
+            ]
+        )
+        return jnp.asarray(out, jnp.uint32)
+
+    def worker_of_key(self, keys: jax.Array) -> jax.Array:
+        """Destination worker id for each key — the paper's routing function.
+
+        Power-of-two W uses the exact shift form ((key * W) >> 32); other W
+        fall back to a searchsorted over the floor boundaries so routing is
+        always consistent with `partition_sorted` slicing.
+        """
+        w = self.num_workers
+        if w == 1:
+            return jnp.zeros(keys.shape, jnp.int32)
+        if w & (w - 1) == 0:
+            # key >> (32 - log2(W)): pure-uint32 form of (key*W) >> 32.
+            # (The multiply form needs uint64, which silently truncates
+            # to uint32 under JAX's default x64-disabled mode.)
+            shift = KEY_BITS - (w.bit_length() - 1)
+            return (keys >> jnp.uint32(shift)).astype(jnp.int32)
+        return jnp.searchsorted(
+            self.worker_boundaries(), keys, side="right"
+        ).astype(jnp.int32)
+
+    def reducer_of_key(self, keys: jax.Array) -> jax.Array:
+        r = self.num_reducers
+        if r == 1:
+            return jnp.zeros(keys.shape, jnp.int32)
+        if r & (r - 1) == 0:
+            shift = KEY_BITS - (r.bit_length() - 1)
+            return (keys >> jnp.uint32(shift)).astype(jnp.int32)
+        return jnp.searchsorted(
+            self.reducer_boundaries(), keys, side="right"
+        ).astype(jnp.int32)
+
+
+def _equal_boundaries(parts: int) -> jax.Array:
+    """(parts-1,) uint32 internal boundaries of an equal split of [0, 2^32)."""
+    js = np.arange(1, parts, dtype=np.uint64)
+    bounds = (js * np.uint64(KEY_SPACE)) // np.uint64(parts)
+    return jnp.asarray(bounds.astype(np.uint32))
+
+
+def sampled_boundaries(sample_keys: jax.Array, parts: int) -> jax.Array:
+    """Daytona-style splitter estimation: quantiles of a key sample.
+
+    Returns (parts-1,) uint32 internal boundaries that approximately balance
+    `parts` ranges for the sampled distribution.
+    """
+    srt = jnp.sort(sample_keys.reshape(-1))
+    n = srt.shape[0]
+    idx = (jnp.arange(1, parts) * n) // parts
+    return srt[idx]

@@ -1,0 +1,267 @@
+"""MoE token->expert dispatch as an exoshuffle (DESIGN.md §4.2).
+
+Token routing in expert-parallel MoE *is* the paper's shuffle with
+expert-id as the sort key: map (sort tokens by expert), partition (experts
+are range-owned by EP shards), shuffle (all_to_all), merge (group per local
+expert), compute, and an inverse shuffle home. Two implementations:
+
+  - "sort"   : the exoshuffle pipeline above under shard_map. Dispatch cost
+               is O(T log T) sort + O(T·d) gathers + one all_to_all of the
+               selected activations. This is the paper's technique as a
+               first-class framework feature.
+  - "onehot" : GShard/Switch-style dense dispatch einsums with a (T, E, C)
+               one-hot tensor; pure pjit/GSPMD (no shard_map). Cost is
+               O(T·E·C) for mask construction plus O(T·E·C·d) for the
+               dispatch/combine einsums — the classical baseline we compare
+               against in EXPERIMENTS.md §Perf.
+
+Both drop tokens over expert capacity (standard capacity-factor semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeDispatchConfig:
+    num_experts: int  # routed experts E (global)
+    top_k: int
+    capacity_factor: float = 1.25
+    impl: str = "sort"  # "sort" | "onehot"
+    ep_axis: str = "model"  # mesh axis experts are sharded over
+
+
+def route_topk(gate_logits: jax.Array, top_k: int):
+    """Softmax-then-topk router. gate_logits (..., T, E).
+
+    Returns (weights (..., T, K) f32 normalized over K, ids (..., T, K) i32).
+    """
+    probs = jax.nn.softmax(gate_logits.astype(jnp.float32), axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, ids.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# "onehot" baseline (GShard-style, pure GSPMD)
+# ---------------------------------------------------------------------------
+
+
+def onehot_dispatch_combine(x, weights, ids, *, num_experts: int, capacity: int,
+                            expert_fn):
+    """x (T, d); weights/ids (T, K). Returns (T, d_out).
+
+    expert_fn: (E, C, d) -> (E, C, d_out), batched over experts.
+    """
+    t, _ = x.shape
+    k = ids.shape[-1]
+    # Position of each (token, k) inside its expert queue, k-major priority.
+    onehot = jax.nn.one_hot(ids, num_experts, dtype=jnp.int32)  # (T, K, E)
+    flat = onehot.reshape(t * k, num_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat  # (T*K, E) position if routed
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, k)  # (T, K)
+    keep = pos < capacity
+    w = weights * keep.astype(weights.dtype)
+    # dispatch (T, E, C) one-hot — the classical dense formulation.
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    disp = jnp.einsum("tke,tkc->tec", onehot.astype(x.dtype), pos_oh)
+    expert_in = jnp.einsum("tec,td->ecd", disp, x)  # (E, C, d)
+    expert_out = expert_fn(expert_in)
+    # combine: each (t,k) takes expert_out[id_k, pos_k] weighted by w[t,k].
+    gathered = jnp.einsum("tkc,ecd,tke->tkd", pos_oh, expert_out,
+                          onehot.astype(x.dtype))
+    return jnp.sum(gathered * w[..., None].astype(gathered.dtype), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# "sort" implementation (the exoshuffle pipeline)
+# ---------------------------------------------------------------------------
+
+
+def sort_dispatch_shard(
+    x,
+    weights,
+    ids,
+    expert_params,
+    *,
+    cfg: MoeDispatchConfig,
+    ep_size: int,
+    expert_fn,
+):
+    """Per-device dispatch under shard_map. The exoshuffle pipeline:
+
+    map:      sort local (expert_id, slot) pairs by expert id
+    partition: count pairs per owner shard (searchsorted at shard bounds)
+    shuffle:  all_to_all fixed-capacity activation blocks over the EP axis
+    merge:    regroup arrivals per local expert (second small sort)
+    reduce:   batched expert FFN; then the whole pipeline reverses.
+
+    x: (T, d) local tokens; weights/ids: (T, K); expert_params: pytree with
+    leading axis E_local. Returns (T, d_out).
+    """
+    t, d = x.shape
+    k = ids.shape[-1]
+    e = cfg.num_experts
+    e_local = e // ep_size
+    tk = t * k
+    axis = cfg.ep_axis
+
+    # --- map: sort (expert, slot) pairs by expert id ------------------------
+    flat_e = ids.reshape(tk).astype(jnp.uint32)
+    slots = jnp.arange(tk, dtype=jnp.uint32)
+    se, sslot = jax.lax.sort((flat_e, slots), num_keys=1)
+
+    # --- partition at EP shard boundaries -----------------------------------
+    shard_bounds = (jnp.arange(1, ep_size, dtype=jnp.uint32)) * jnp.uint32(e_local)
+    starts = jnp.searchsorted(se, shard_bounds, side="left").astype(jnp.int32)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), starts])
+    ends = jnp.concatenate([starts[1:], jnp.full((1,), tk, jnp.int32)])
+    counts = ends - starts  # (ep,)
+
+    cap = int(_round_up(tk / ep_size * cfg.capacity_factor, 8))
+    c = jnp.arange(cap, dtype=jnp.int32)[None, :]
+    src = jnp.clip(starts[:, None] + c, 0, tk - 1)  # (ep, C)
+    valid = c < counts[:, None]
+
+    send_e = jnp.where(valid, se[src], jnp.uint32(e))  # sentinel expert = E
+    send_slot = jnp.where(valid, sslot[src], jnp.uint32(0xFFFFFFFF))
+    slot_clip = jnp.minimum(send_slot, jnp.uint32(tk - 1)).astype(jnp.int32)
+    send_tok = slot_clip // k  # (ep, C) source token of each routed pair
+    send_x = jnp.where(valid[..., None], x[send_tok], 0)  # (ep, C, d)
+    send_w = jnp.where(valid, weights.reshape(tk)[slot_clip], 0.0)  # (ep, C)
+
+    # --- shuffle -------------------------------------------------------------
+    if ep_size > 1:
+        a2a = functools.partial(
+            jax.lax.all_to_all, axis_name=axis, split_axis=0, concat_axis=0,
+            tiled=True,
+        )
+    else:  # single-shard ("dense") fallback: the exchange is the identity
+        a2a = lambda t: t
+    recv_e, recv_x = a2a(send_e), a2a(send_x)
+
+    # --- merge: regroup arrivals per local expert ----------------------------
+    m = ep_size * cap
+    re = recv_e.reshape(m)
+    rx = recv_x.reshape(m, d)
+    arrival = jnp.arange(m, dtype=jnp.uint32)
+    ge, gperm = jax.lax.sort((re, arrival), num_keys=1)
+
+    my = (
+        jax.lax.axis_index(axis).astype(jnp.uint32)
+        if ep_size > 1
+        else jnp.uint32(0)
+    )
+    first = my * jnp.uint32(e_local)
+    local_bounds = first + jnp.arange(e_local, dtype=jnp.uint32)
+    estarts = jnp.searchsorted(ge, local_bounds, side="left").astype(jnp.int32)
+    # rank of each sorted arrival within its expert queue
+    local_eid = jnp.clip(ge - first, 0, e_local - 1).astype(jnp.int32)
+    rank = jnp.arange(m, dtype=jnp.int32) - estarts[local_eid]
+
+    # Mean pairs per local expert is tk/e_local (every device receives ~tk
+    # pairs back); the capacity factor absorbs routing imbalance.
+    ecap = max(int(_round_up(tk / e_local * cfg.capacity_factor, 8)), 8)
+    keep = (rank < ecap) & (ge < jnp.uint32(e))  # drop overflow + sentinels
+
+    # scatter into (E_local, ecap, d); dropped entries get an out-of-bounds
+    # rank and are discarded by mode="drop" (no collision with real slots).
+    exp_in = jnp.zeros((e_local, ecap, d), x.dtype)
+    sel_rank = jnp.where(keep, rank, ecap)
+    exp_in = exp_in.at[local_eid, sel_rank].set(rx[gperm], mode="drop")
+
+    # --- reduce: batched expert computation ----------------------------------
+    exp_out = expert_fn(expert_params, exp_in)  # (E_local, ecap, d_out)
+    d_out = exp_out.shape[-1]
+
+    # --- inverse pipeline -----------------------------------------------------
+    y_sorted = jnp.where(
+        keep[:, None], exp_out[local_eid, jnp.minimum(sel_rank, ecap - 1)], 0
+    )  # (m, d_out) in sorted-arrival order
+    y_arrival = jnp.zeros((m, d_out), y_sorted.dtype).at[gperm].set(y_sorted)
+    y_back = a2a(y_arrival.reshape(ep_size, cap, d_out))  # home shuffle
+
+    # combine at source: out[tok] += w * y  for each of this device's sent pairs
+    y_flat = y_back.reshape(ep_size * cap, d_out)
+    w_flat = send_w.reshape(-1)[:, None].astype(y_flat.dtype)
+    tok_flat = send_tok.reshape(-1)
+    out = jnp.zeros((t, d_out), y_flat.dtype)
+    out = out.at[tok_flat].add(y_flat * w_flat, mode="drop")
+    return out
+
+
+def _round_up(x: float, m: int) -> int:
+    import math
+
+    return int(math.ceil(x / m) * m)
+
+
+def make_sort_dispatch(mesh, cfg: MoeDispatchConfig, expert_fn, *, token_spec,
+                       param_spec):
+    """Wrap sort_dispatch_shard in shard_map over the full mesh.
+
+    token_spec: PartitionSpec of (T_global, d) token arrays (usually
+    P(("data",), None) with the EP all_to_all over cfg.ep_axis).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    ep_size = mesh.shape[cfg.ep_axis]
+    w_spec = P(token_spec[0], None)
+
+    def fn(x, weights, ids, expert_params):
+        return sort_dispatch_shard(
+            x, weights, ids, expert_params, cfg=cfg, ep_size=ep_size,
+            expert_fn=expert_fn,
+        )
+
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(token_spec, w_spec, w_spec, param_spec),
+        out_specs=token_spec,
+        check_vma=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode-time EP dispatch: tokens replicated over the EP axis
+# ---------------------------------------------------------------------------
+
+
+def ep_replicated_shard(x, weights, ids, expert_params, *, cfg, ep_size,
+                        expert_fn):
+    """Per-device decode dispatch under shard_map.
+
+    At decode the token count (B) is far below the mesh size, so the
+    all_to_all pipeline has nothing to shard. Instead every EP shard sees
+    ALL tokens (replicated over the EP axis), masks the routing weights to
+    the experts it owns, runs its local expert bank, and the partial
+    outputs are psum'd over the EP axis — the standard small-batch EP
+    pattern (an all_to_all degenerates to broadcast + reduce at T << ep).
+
+    x (T, d) — identical on every shard of cfg.ep_axis; weights/ids (T, K);
+    expert_params: pytree with leading axis E_local. Returns (T, d_out),
+    summed over shards by the caller-visible psum.
+    """
+    e = cfg.num_experts
+    e_local = e // ep_size
+    my = jax.lax.axis_index(cfg.ep_axis).astype(jnp.int32)
+    lo = my * e_local
+    local = (ids >= lo) & (ids < lo + e_local)
+    w_local = jnp.where(local, weights, 0.0)
+    # Non-local routes are clipped into the local id range as weight-0
+    # "ghosts"; capacity = T*K makes every queue large enough that ghosts
+    # can never displace a real token (exact, and trivially cheap at
+    # decode's tiny T).
+    ids_local = jnp.clip(ids - lo, 0, e_local - 1)
+    t = x.shape[0]
+    cap = t * ids.shape[-1]
+    out = onehot_dispatch_combine(
+        x, w_local, ids_local, num_experts=e_local, capacity=cap,
+        expert_fn=lambda xin: expert_fn(expert_params, xin),
+    )
+    return jax.lax.psum(out, cfg.ep_axis)

@@ -1,0 +1,123 @@
+"""Payload movement strategies for the distributed sort.
+
+A gensort record is a 10-byte key + 90-byte payload (§2.2). The shuffle
+kernels sort (key: u32, id: u32) headers; this module decides how the wide
+payload bytes follow their header:
+
+  - "through" (paper-faithful): the payload physically accompanies its
+    record through the shuffle all_to_all, as in the paper where whole
+    100-byte records flow map -> network -> merge -> disk -> reduce.
+
+  - "late" (beyond-paper optimization, see EXPERIMENTS.md §Perf): the
+    shuffle moves only the 8-byte headers; after the final merge each worker
+    *fetches* the payloads of its output records from their producing
+    workers with one extra all_to_all, keyed by global record id. Total
+    network bytes are comparable, but payloads never traverse the merge
+    tournament or the stage-1/stage-2 spill, cutting the memory-bound merge
+    traffic by the payload/record ratio (~12.5x for 100-byte records).
+
+Global record ids: records are numbered so that id // records_per_worker is
+the producing worker (the data/gensort.py layout), making the late fetch a
+static-capacity exchange under uniform output ranges.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sortlib
+
+
+def align_payload_to_merge(recv_ids, recv_payload, merged_ids):
+    """Reorder received payload rows to follow the post-merge record order.
+
+    recv_ids: (m,) u32 global ids in arrival (pre-merge) order;
+    recv_payload: (m, pw) payload rows aligned with recv_ids;
+    merged_ids: (m,) the same multiset of ids in post-merge order.
+    Returns (m, pw) payload aligned with merged_ids.
+
+    The merge network permutes (key, id) pairs; rather than dragging pw
+    words through every compare-exchange, we re-derive the permutation by
+    an id join: sort arrival ids once, binary-search each merged id.
+    Pad ids (0xFFFFFFFF) join against pad rows, which is harmless.
+    """
+    perm = jnp.argsort(recv_ids)  # (m,)
+    sids = recv_ids[perm]
+    pos = jnp.searchsorted(sids, merged_ids)
+    pos = jnp.clip(pos, 0, sids.shape[0] - 1)
+    return recv_payload[perm[pos]]
+
+
+def exchange_payload_blocks(block_payload, axis):
+    """all_to_all of (W, C, pw) payload blocks — the 'through' mode wire hop."""
+    return jax.lax.all_to_all(
+        block_payload, axis, split_axis=0, concat_axis=0, tiled=True
+    )
+
+
+def late_fetch_payload(
+    final_ids,
+    local_payload,
+    *,
+    axis,
+    num_workers: int,
+    records_per_worker: int,
+    capacity: int,
+):
+    """'late' mode: fetch payload rows for `final_ids` from their producers.
+
+    Per-device code under shard_map.
+    final_ids: (m,) u32 global record ids this worker's output needs (pads
+      0xFFFFFFFF allowed); local_payload: (records_per_worker, pw) rows this
+      worker produced (row r holds global id = my_rank*records_per_worker+r).
+    capacity: static per-(requester, producer) request budget; with uniform
+      keys m/W requests go to each producer (+ slack).
+    Returns (m, pw) payload rows aligned with final_ids, and overflow flag.
+
+    Implementation: route *requests* (the ids) to producers with the same
+    fixed-capacity block protocol as the shuffle itself, gather rows there,
+    and route the rows back by reversing the all_to_all.
+    """
+    m = final_ids.shape[0]
+    # Producer of each id. Pad ids (lex-max sentinels past the valid prefix)
+    # are spread round-robin so no producer's request block overflows; their
+    # fetched rows are garbage and ignored by the caller (count-sliced).
+    pos = jnp.arange(m, dtype=jnp.uint32)
+    is_pad = final_ids == jnp.uint32(0xFFFFFFFF)
+    prod = jnp.minimum(final_ids // jnp.uint32(records_per_worker),
+                       jnp.uint32(num_workers - 1))
+    prod = jnp.where(is_pad, pos % jnp.uint32(num_workers), prod)
+    # Sort requests by producer so each producer's requests are contiguous.
+    sprod, sids = jax.lax.sort((prod.astype(jnp.uint32), final_ids), num_keys=1)
+    req_perm_src = jnp.argsort(prod.astype(jnp.uint32))  # position in sorted of each
+    bounds = (jnp.arange(1, num_workers, dtype=jnp.uint32))
+    starts, counts = sortlib.partition_sorted(sprod, bounds, impl="ref")
+    req_blocks, _, overflow = sortlib.gather_range_blocks(
+        sids, sids, starts, counts, capacity
+    )  # (W, C) ids (key==val here; second copy unused)
+    # Requests travel requester -> producer.
+    recv_req = jax.lax.all_to_all(req_blocks, axis, 0, 0, tiled=True)  # (W, C)
+    # Serve: local row index of each requested id (u32 math; foreign/pad ids
+    # wrap and are clamped — their rows are never read by the requester).
+    my = jax.lax.axis_index(axis).astype(jnp.uint32)
+    diff = recv_req - my * jnp.uint32(records_per_worker)
+    local_row = jnp.minimum(diff, jnp.uint32(records_per_worker - 1)).astype(jnp.int32)
+    served = local_payload[local_row]  # (W, C, pw)
+    # Rows travel producer -> requester (reverse exchange).
+    back = jax.lax.all_to_all(served, axis, 0, 0, tiled=True)  # (W, C, pw)
+    # Un-block: requester's row j of block w corresponds to sorted request
+    # starts[w] + j.
+    c = back.shape[1]
+    j = jnp.arange(c, dtype=jnp.int32)[None, :]
+    dest_sorted_pos = jnp.clip(starts[:, None] + j, 0, m - 1)  # (W, C)
+    gathered_sorted = jnp.zeros((m, back.shape[-1]), back.dtype)
+    gathered_sorted = gathered_sorted.at[dest_sorted_pos.reshape(-1)].set(
+        back.reshape(-1, back.shape[-1])
+    )
+    # Invert the request sort back to final_ids order.
+    inv = jnp.zeros((m,), jnp.int32).at[req_perm_src].set(
+        jnp.arange(m, dtype=jnp.int32)
+    )
+    # req_perm_src maps sorted_pos -> original pos; we need original -> sorted.
+    out = gathered_sorted[inv]
+    return out, overflow

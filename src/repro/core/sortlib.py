@@ -1,0 +1,69 @@
+"""Single-device sort/merge primitives used by the distributed shuffle.
+
+This is the analogue of the paper's ~300-line C++ component (§2.6): "sorting
+and partitioning records, and merging sorted record arrays". Here each
+primitive is backed by a Pallas TPU kernel (kernels/) with a pure-jnp
+reference (kernels/ref.py); `impl` selects between them.
+
+Records are (key: uint32, val: uint32) pairs; `val` is a rank into an
+external payload table (the 90-byte gensort payload lives in data/gensort.py
+and is gathered by rank after the keys settle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+PAD_KEY = ops.PAD_KEY
+PAD_VAL = ops.PAD_VAL
+
+
+def sort_records(keys, vals, *, impl: str = "pallas"):
+    """Paper map-task step 1: sort a partition in memory."""
+    return ops.sort_kv(keys, vals, impl=impl)
+
+
+def merge_runs(keys, vals, *, impl: str = "pallas"):
+    """Paper merge/reduce task: merge K sorted runs. keys/vals: (..., K, L)."""
+    return ops.kway_merge(keys, vals, impl=impl)
+
+
+def partition_sorted(sorted_keys, boundaries, *, impl: str = "pallas"):
+    """Paper map-task step 2: slice a sorted partition at range boundaries.
+
+    Returns (offsets, counts): offsets (..., P) int32 start of each of the
+    P = len(boundaries)+1 ranges, counts (..., P) int32 sizes.
+    """
+    n = sorted_keys.shape[-1]
+    off_internal = ops.partition_offsets(sorted_keys, boundaries, impl=impl)
+    lead = off_internal.shape[:-1]
+    zeros = jnp.zeros(lead + (1,), off_internal.dtype)
+    ns = jnp.full(lead + (1,), n, off_internal.dtype)
+    starts = jnp.concatenate([zeros, off_internal], axis=-1)
+    ends = jnp.concatenate([off_internal, ns], axis=-1)
+    return starts, ends - starts
+
+
+def gather_range_blocks(sorted_keys, sorted_vals, starts, counts, capacity: int):
+    """Pack each range slice into a fixed-capacity padded block.
+
+    sorted_keys/vals: (n,). starts/counts: (P,). Returns
+    (blocks_k, blocks_v): (P, capacity) with lex-max padding, and
+    overflow: scalar bool, True if any count exceeded capacity.
+
+    This is the paper's fixed-size block protocol: map output slices become
+    equal-sized network blocks (required for a static all_to_all on TPU; the
+    paper gets raggedness for free from Ray, we trade it for padding — see
+    DESIGN.md §2).
+    """
+    n = sorted_keys.shape[-1]
+    c = jnp.arange(capacity, dtype=jnp.int32)[None, :]  # (1, C)
+    src = starts[:, None] + c  # (P, C)
+    valid = c < counts[:, None]
+    src = jnp.clip(src, 0, n - 1)
+    bk = jnp.where(valid, sorted_keys[src], PAD_KEY)
+    bv = jnp.where(valid, sorted_vals[src], PAD_VAL)
+    overflow = jnp.any(counts > capacity)
+    return bk, bv, overflow

@@ -1,0 +1,111 @@
+"""Round-pipelined two-stage external sort — the paper's full structure.
+
+Paper §2.3: the merge controller accumulates W map blocks (~2 GB), then
+launches a merge task; when the in-flight merge count hits the parallelism
+cap it withholds acks, back-pressuring the map scheduler so map, shuffle and
+merge proceed in lockstep, and merged runs are spilled to SSD. §2.4: after
+the map stage, reduce tasks k-way merge the spilled runs.
+
+SPMD translation (DESIGN.md §2): backpressure is a *dynamic* mechanism for
+bounding the in-memory working set; in a static SPMD program we get the same
+bound by construction with fixed-size rounds:
+
+  Stage 1 (map+shuffle+merge), `lax.scan` over `num_rounds` rounds:
+      each round sorts 1/num_rounds of the local shard, all_to_alls the
+      partitioned blocks, and merges the W received blocks into ONE sorted
+      run, appended to a run buffer (the "spill": rounds live in HBM, the
+      round working set is the merge-controller's 2 GB buffer analogue).
+      XLA's async collectives overlap round r's all_to_all with round
+      r±1's sort/merge compute — the paper's "pipelining for free" (§2.5),
+      supplied here by the XLA latency-hiding scheduler instead of Ray.
+
+  Stage 2 (reduce): a bitonic merge tournament over the num_rounds spilled
+      runs yields the worker's final sorted output, sliceable into R1
+      reducer partitions (core.exoshuffle.reduce_partitions).
+
+The round count trades working-set size against collective efficiency
+(fewer, larger all_to_alls) — exactly the paper's block-threshold knob.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sortlib
+from repro.core.exoshuffle import ShuffleConfig, _shuffle_round
+
+
+def _streaming_sort_shard(keys, vals, *, cfg: ShuffleConfig, axis):
+    """Per-device two-stage sort. keys/vals: (n,), n % num_rounds == 0."""
+    n = keys.shape[-1]
+    rounds = cfg.num_rounds
+    assert n % rounds == 0
+    per_round = n // rounds
+    capacity = cfg.block_capacity(per_round)
+
+    k_rounds = keys.reshape(rounds, per_round)
+    v_rounds = vals.reshape(rounds, per_round)
+
+    # ---- Stage 1: map + shuffle + merge, one round per scan step ----
+    def round_body(carry_overflow, kv):
+        rk, rv = kv
+        mk, mv, rcounts, ovf = _shuffle_round(rk, rv, cfg=cfg, axis=axis, capacity=capacity)
+        return carry_overflow | jnp.any(ovf), (mk, mv, jnp.sum(rcounts).astype(jnp.int32))
+
+    overflow, (run_k, run_v, counts) = jax.lax.scan(
+        round_body, jnp.bool_(False), (k_rounds, v_rounds)
+    )
+    # run_k/run_v: (rounds, W*capacity) — the spilled sorted runs.
+
+    # ---- Stage 2: reduce — merge the spilled runs ----
+    if rounds == 1:
+        fk, fv = run_k[0], run_v[0]
+    else:
+        fk, fv = sortlib.merge_runs(run_k, run_v, impl=cfg.impl)
+
+    valid = jnp.sum(counts).astype(jnp.int32)
+    any_overflow = jax.lax.pmax(overflow.astype(jnp.int32), axis) > 0
+    return fk, fv, valid[None], any_overflow
+
+
+def streaming_sort(
+    keys: jax.Array,
+    vals: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_names: Sequence[str] | str,
+    num_rounds: int,
+    cfg: ShuffleConfig | None = None,
+    impl: str = "pallas",
+    capacity_factor: float = 1.5,
+):
+    """Two-stage streaming distributed sort (see module docstring).
+
+    Same contract as core.exoshuffle.distributed_sort, plus `num_rounds`.
+    num_rounds must be a power of two (stage-2 merge tournament).
+    """
+    axis = tuple([axis_names] if isinstance(axis_names, str) else axis_names)
+    w = int(math.prod(mesh.shape[a] for a in axis))
+    if cfg is None:
+        cfg = ShuffleConfig(
+            num_workers=w,
+            impl=impl,
+            capacity_factor=capacity_factor,
+            num_rounds=num_rounds,
+        )
+    assert w & (w - 1) == 0
+    assert num_rounds & (num_rounds - 1) == 0, "rounds must be a power of two"
+
+    spec = P(axis)
+    fn = jax.shard_map(
+        lambda k, v: _streaming_sort_shard(k, v, cfg=cfg, axis=axis),
+        mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=(spec, spec, spec, P()),
+        check_vma=False,  # pallas_call out_shapes carry no vma info
+    )
+    return fn(keys, vals)

@@ -1,0 +1,68 @@
+"""JAX port of gensort (paper §3.2): deterministic sort-benchmark records.
+
+The paper generates input with `gensort -c -b{offset} {size} {path}`:
+records are reproducible from their global index alone, and a checksum
+aggregated over all records validates end-to-end byte preservation.
+
+Our record (DESIGN.md §2 key-width adaptation):
+  key     : uint32 = splitmix32(global_id)   (uniform — Indy category)
+  id      : uint32 = global_id               (the "rank"/provenance)
+  payload : (PAYLOAD_WORDS,) uint32, word j = splitmix32(id * PW + j + SALT)
+
+PAYLOAD_WORDS = 23 words = 92 bytes ≈ the 90-byte gensort payload, so
+header+payload = 100 bytes/record exactly like the benchmark.
+
+The checksum is order-independent (sum mod 2^32, xor) over per-record
+hashes that cover key, id and payload — a reordering, duplication, or loss
+of any record changes it, mirroring `gensort -c` / `valsort -s`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PAYLOAD_WORDS = 23  # 92 bytes; +8 header bytes = 100-byte records
+_SALT = jnp.uint32(0x9E3779B9)
+
+
+def splitmix32(x: jax.Array) -> jax.Array:
+    """Fast avalanche hash; uint32 -> uint32 (fmix32 finalizer)."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def gen_keys(start: int, n: int) -> tuple[jax.Array, jax.Array]:
+    """Generate records [start, start+n): returns (keys, ids)."""
+    ids = jnp.arange(start, start + n, dtype=jnp.uint32)
+    return splitmix32(ids), ids
+
+
+def gen_payload(ids: jax.Array, words: int = PAYLOAD_WORDS) -> jax.Array:
+    """(n, words) uint32 payload rows, derivable from ids alone."""
+    base = ids.astype(jnp.uint32)[:, None] * jnp.uint32(words)
+    j = jnp.arange(words, dtype=jnp.uint32)[None, :]
+    return splitmix32(base + j + _SALT)
+
+
+def payload_hash(payload: jax.Array) -> jax.Array:
+    """(n,) uint32 per-record hash of the payload words."""
+    # Position-sensitive fold so word swaps are detected.
+    j = jnp.arange(payload.shape[-1], dtype=jnp.uint32)[None, :]
+    return jnp.sum(splitmix32(payload + j), axis=-1, dtype=jnp.uint32)
+
+
+def record_hashes(keys: jax.Array, ids: jax.Array, payload: jax.Array | None = None):
+    h = splitmix32(keys ^ splitmix32(ids))
+    if payload is not None:
+        h = splitmix32(h ^ payload_hash(payload))
+    return h
+
+
+def checksum(keys: jax.Array, ids: jax.Array, payload: jax.Array | None = None):
+    """Order-independent (sum, xor) checksum over record hashes."""
+    h = record_hashes(keys, ids, payload)
+    s = jnp.sum(h, dtype=jnp.uint32)
+    x = jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
+    return s, x

@@ -1,0 +1,107 @@
+"""Training data pipeline with exoshuffle epoch shuffling.
+
+The corpus is a deterministic synthetic token stream (like gensort for
+text): token t of document i is derivable from (i, t) alone, so any worker
+can materialize any slice without I/O — the CPU-container stand-in for a
+sharded tokenized corpus.
+
+Epoch shuffling is the paper's sort applied to data loading (DESIGN.md
+§4.3): assign every sample the key splitmix32(epoch_seed ^ sample_id) and
+(distributed-)sort — a uniform random key makes CloudSort's range partition
+a perfect shuffle. On-device the exoshuffle path does this at pod scale
+(`examples/cloudsort_e2e.py`); the host iterator below uses the same
+construction with numpy for the training loop.
+
+Sequence packing: `length_sorted_batches` sorts variable-length documents
+by length (same sort machinery) so batches pad minimally.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.gensort import splitmix32
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    num_samples: int = 1 << 20
+
+
+def _np_splitmix32(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x = (x ^ (x >> 16)) * np.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * np.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def shuffled_indices(epoch: int, n: int) -> np.ndarray:
+    """The exoshuffle epoch permutation (host mirror of the device sort):
+    sort sample ids by splitmix32(epoch_seed ^ id)."""
+    ids = np.arange(n, dtype=np.uint32)
+    keys = _np_splitmix32(ids ^ np.uint32(0x9E3779B9 * (epoch + 1) & 0xFFFFFFFF))
+    return np.argsort(keys, kind="stable")
+
+
+def sample_tokens(sample_ids: np.ndarray, seq_len: int, vocab: int) -> np.ndarray:
+    """(n, seq_len+1) int32 tokens, deterministic in sample id."""
+    n = sample_ids.shape[0]
+    base = sample_ids.astype(np.uint32)[:, None] * np.uint32(seq_len + 1)
+    t = np.arange(seq_len + 1, dtype=np.uint32)[None, :]
+    return (_np_splitmix32(base + t) % np.uint32(vocab)).astype(np.int32)
+
+
+class TokenPipeline:
+    """Deterministic, restartable batch source.
+
+    State is just (epoch, step) — restart after failure resumes the exact
+    stream (the checkpoint stores the step; DESIGN.md §9 straggler note).
+    """
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.steps_per_epoch = cfg.num_samples // cfg.global_batch
+        self._epoch = -1
+        self._perm = None
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        epoch = step // self.steps_per_epoch
+        if epoch != self._epoch:
+            self._perm = shuffled_indices(epoch, cfg.num_samples)
+            self._epoch = epoch
+        pos = (step % self.steps_per_epoch) * cfg.global_batch
+        ids = self._perm[pos : pos + cfg.global_batch]
+        toks = sample_tokens(ids, cfg.seq_len, cfg.vocab)
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+
+def length_sorted_batches(lengths: np.ndarray, batch: int) -> np.ndarray:
+    """Sequence packing: batch ids grouped by sorted length (the same sort,
+    keyed by document length). Returns (n//batch, batch) sample ids."""
+    order = np.argsort(lengths.astype(np.uint32), kind="stable")
+    n = (len(order) // batch) * batch
+    return order[:n].reshape(-1, batch)
+
+
+def device_epoch_shuffle(sample_ids, epoch: int, *, mesh, axis_names, impl="ref"):
+    """Pod-scale epoch shuffle via the actual exoshuffle distributed sort.
+
+    sample_ids: (N,) uint32 sharded over axis_names. Returns the permuted
+    ids (the valid prefixes of each worker segment concatenated).
+    """
+    from repro.core.exoshuffle import distributed_sort
+
+    seed = jnp.uint32(0x9E3779B9 * (epoch + 1) & 0xFFFFFFFF)
+    keys = splitmix32(sample_ids ^ seed)
+    return distributed_sort(keys, sample_ids, mesh=mesh, axis_names=axis_names,
+                            impl=impl)

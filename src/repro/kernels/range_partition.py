@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: range-partition offsets of sorted keys.
+
+TPU adaptation of the paper's range partitioner (§2.2): the key space
+[0, 2^64) is split into R equal ranges and every record is routed to the
+range owner. On TPU the records are already sorted when partitioning happens
+(the map task sorts first, §2.3), so partitioning reduces to finding, for
+each boundary b_j, the offset of the first key >= b_j — i.e. a vectorized
+searchsorted. The slice [offsets[j-1], offsets[j]) of the sorted block is
+then exactly the paper's "slice sent to worker j".
+
+Instead of a branchy binary search (log n dependent steps), the kernel
+computes offsets[j] = sum_i [key_i < b_j] by streaming the sorted block
+through VMEM in tiles and accumulating a (R,) counter vector — a pure
+vector-compare + reduce pipeline at 8x128 lane width, O(n*R/8/128) VPU
+cycles with perfect utilization and no data-dependent control flow.
+
+Grid: one program per key block; boundaries are broadcast to every program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+KEY_TILE = 2048  # keys compared per inner step; R x KEY_TILE bools in flight
+
+
+def _partition_kernel(keys_ref, bounds_ref, out_ref, *, key_tile: int):
+    b = keys_ref.shape[-1]
+    r = bounds_ref.shape[-1]
+    bounds = bounds_ref[...].reshape(r)
+
+    def body(t, acc):
+        tile = jax.lax.dynamic_slice(
+            keys_ref[...].reshape(-1), (t * key_tile,), (key_tile,)
+        )
+        # (r, key_tile) compare, reduce over keys.
+        lt = (tile[None, :] < bounds[:, None]).astype(jnp.int32)
+        return acc + jnp.sum(lt, axis=1)
+
+    steps = b // key_tile
+    acc = jnp.zeros((r,), jnp.int32)
+    acc = jax.lax.fori_loop(0, steps, body, acc)
+    out_ref[...] = acc.reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def partition_offsets_blocks(
+    sorted_keys: jax.Array, boundaries: jax.Array, *, interpret: bool = True
+):
+    """offsets[i, j] = #{k in row i : k < boundaries[j]}.
+
+    sorted_keys: (num_blocks, B) uint32, rows ascending (sortedness is not
+    required for correctness of the count, only for the offsets-as-slices
+    interpretation). boundaries: (R,) uint32 ascending.
+    Returns (num_blocks, R) int32.
+    """
+    nb, b = sorted_keys.shape
+    (r,) = boundaries.shape
+    key_tile = min(KEY_TILE, b)
+    assert b % key_tile == 0
+    kernel = functools.partial(_partition_kernel, key_tile=key_tile)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, b), lambda i: (i, 0)),
+            pl.BlockSpec((r,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, r), jnp.int32),
+        interpret=interpret,
+    )(sorted_keys, boundaries)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Every kernel in kernels/ must agree exactly (bit-for-bit for integer data)
+with the reference implementation here. The references define the semantic
+contract; the kernels are TPU-tiled implementations of the same contract.
+
+Record model (see DESIGN.md §2, key-width adaptation): a record is a
+(key: uint32, val: uint32) pair. `val` usually carries a rank/row-index into
+a payload table. All sorts are *lexicographic* on (key, val) so that outputs
+are bit-deterministic and kernel-vs-ref comparisons can be exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UINT32_MAX = jnp.uint32(0xFFFFFFFF)
+
+
+def sort_kv_ref(keys: jax.Array, vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Lexicographic sort of (key, val) pairs along the last axis.
+
+    keys, vals: uint32 arrays of identical shape (..., n).
+    Returns (sorted_keys, sorted_vals), ascending by key then val.
+    """
+    # jax.lax.sort with two operands sorts lexicographically on the operand
+    # sequence: primary = first operand, tiebreak = second.
+    sk, sv = jax.lax.sort((keys, vals), dimension=-1, num_keys=2)
+    return sk, sv
+
+
+def merge_kv_ref(
+    a_keys: jax.Array, a_vals: jax.Array, b_keys: jax.Array, b_vals: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Merge two lex-sorted (key, val) runs along the last axis.
+
+    a_*, b_*: uint32 arrays (..., n). Returns (..., 2n) merged sorted run.
+    """
+    keys = jnp.concatenate([a_keys, b_keys], axis=-1)
+    vals = jnp.concatenate([a_vals, b_vals], axis=-1)
+    return sort_kv_ref(keys, vals)
+
+
+def partition_offsets_ref(sorted_keys: jax.Array, boundaries: jax.Array) -> jax.Array:
+    """For each boundary b, the number of keys strictly below b.
+
+    sorted_keys: (..., n) uint32, ascending. boundaries: (r,) uint32.
+    Returns (..., r) int32 offsets: offsets[..., j] = #{i : keys[..., i] < b_j}.
+    Bucket j of an ascending partition with boundaries b_1..b_{r} (b_r often
+    2**32 sentinel) is keys[offsets[j-1]:offsets[j]].
+    """
+    # Compare in uint32 domain; jnp.searchsorted requires matching dtypes.
+    def one(row):
+        return jnp.searchsorted(row, boundaries, side="left").astype(jnp.int32)
+
+    flat = sorted_keys.reshape((-1, sorted_keys.shape[-1]))
+    out = jax.vmap(one)(flat)
+    return out.reshape(sorted_keys.shape[:-1] + (boundaries.shape[0],))
+
+
+def histogram_ref(keys: jax.Array, boundaries: jax.Array) -> jax.Array:
+    """Counts per bucket for *unsorted* keys.
+
+    bucket j covers [boundaries[j-1], boundaries[j]) with boundaries[-1]
+    implicit 0. Returns (..., r) int32 counts summing to n (if boundaries
+    cover the key space).
+    """
+    srt, _ = sort_kv_ref(keys, jnp.zeros_like(keys))
+    off = partition_offsets_ref(srt, boundaries)
+    prev = jnp.concatenate(
+        [jnp.zeros(off.shape[:-1] + (1,), off.dtype), off[..., :-1]], axis=-1
+    )
+    return off - prev

@@ -1,0 +1,320 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. constructs the arch's train/prefill/decode step with full sharding
+     (params, optimizer state, inputs, caches),
+  3. jit(...).lower(ShapeDtypeStructs).compile()   — no allocation,
+  4. records memory_analysis() (fits-per-device proof), cost_analysis()
+     (FLOPs/bytes for §Roofline), and the collective-bytes tally parsed
+     from the optimized HLO.
+
+Results stream to a JSONL file consumed by benchmarks/roofline.py and
+EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k [--multi-pod] [--all] [--out results/dryrun.jsonl]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get
+from repro.launch import hlo_cost
+from repro.launch import sharding as shd
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.models import api as mapi
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:[a-z0-9_]+\s*)?)"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _bytes_of_shape(s: str) -> int:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO."""
+    totals: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(
+            r"^[%\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(",
+            ls,
+        )
+        if not m:
+            continue
+        out_sig, op, phase = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":
+            continue  # counted at -start
+        if out_sig.startswith("("):
+            shapes = out_sig[1:-1].split("),(")[0].split(", ")
+            b = sum(_bytes_of_shape(s) for s in out_sig[1:-1].split(", "))
+        else:
+            b = _bytes_of_shape(out_sig)
+        totals[op] = totals.get(op, 0) + b
+    totals["total"] = sum(v for k, v in totals.items() if k != "total")
+    return totals
+
+
+def _train_cell(model, cfg, mesh, specs):
+    """Lower a full train step (fwd + bwd + AdamW)."""
+    tcfg = TrainConfig(opt=OptConfig(), microbatches=cfg.train_microbatches)
+    train_step = make_train_step(model, tcfg, mesh=mesh)
+
+    abstract_state = jax.eval_shape(
+        lambda k: {"params": model.init(k)}, jax.random.PRNGKey(0)
+    )
+    p_specs = shd.param_pspecs(cfg, abstract_state["params"], mesh)
+    state_specs = {
+        "params": p_specs,
+        "opt": {"mu": p_specs, "nu": p_specs, "step": P()},
+    }
+    batch_sp = shd.batch_pspecs(cfg, specs, mesh)
+
+    from repro.train.optimizer import init_opt_state
+
+    abstract_full = jax.eval_shape(
+        lambda k: {
+            "params": model.init(k),
+            "opt": init_opt_state(model.init(k)),
+        },
+        jax.random.PRNGKey(0),
+    )
+
+    in_sh = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), batch_sp,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    out_sh = (in_sh[0], None)
+    fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0,))
+    return fn.lower(abstract_full, specs)
+
+
+def _prefill_cell(model, cfg, mesh, specs, shape_name):
+    batch_sp = shd.batch_pspecs(cfg, specs, mesh)
+    abstract_params = model.abstract_params()
+    p_specs = shd.param_pspecs(cfg, abstract_params, mesh)
+    b = mapi.SHAPES[shape_name]["batch"]
+    s = mapi.SHAPES[shape_name]["seq"]
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return logits, cache
+
+    cache_abs = model.abstract_cache(b, s)
+    cache_sp = shd.cache_pspecs(cfg, cache_abs, mesh, batch=b)
+
+    in_sh = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        jax.tree.map(lambda s: NamedSharding(mesh, s), batch_sp,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    out_sh = (
+        None,
+        jax.tree.map(lambda s: NamedSharding(mesh, s), cache_sp,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    fn = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh)
+    return fn.lower(abstract_params, specs)
+
+
+def _decode_cell(model, cfg, mesh, specs):
+    abstract_params = model.abstract_params()
+    p_specs = shd.param_pspecs(cfg, abstract_params, mesh)
+    cache_sp = shd.cache_pspecs(cfg, specs["cache"], mesh,
+                                batch=specs["token"].shape[0])
+    tok_sp = shd.batch_pspecs(cfg, {"token": specs["token"]}, mesh)["token"]
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cache_sp,
+                            is_leaf=lambda x: isinstance(x, P))
+    in_sh = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+        cache_sh,
+        NamedSharding(mesh, tok_sp),
+        NamedSharding(mesh, P()),
+    )
+    fn = jax.jit(serve_step, in_shardings=in_sh, out_shardings=(None, cache_sh),
+                 donate_argnums=(1,))
+    return fn.lower(abstract_params, specs["cache"], specs["token"],
+                    specs["pos"])
+
+
+def block_specs_of(cfg, p_specs):
+    """Per-layer param PartitionSpecs: the stacked specs minus the L axis."""
+    def drop(s):
+        return P(*tuple(s)[1:])
+
+    def drop_tree(sub):
+        return jax.tree.map(drop, sub, is_leaf=lambda x: isinstance(x, P))
+
+    if cfg.family == "encdec":
+        return {"enc": drop_tree(p_specs["enc_blocks"]),
+                "dec": drop_tree(p_specs["dec_blocks"])}
+    if isinstance(p_specs, dict) and "blocks" in p_specs and not isinstance(
+        p_specs["blocks"], list
+    ):
+        return drop_tree(p_specs["blocks"])
+    return None  # python-list models: params are first-class jit inputs
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               overrides: dict | None = None):
+    """Returns (lowered, cfg, mesh). overrides patch ArchConfig fields."""
+    import dataclasses as dc
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get(arch_id)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    model = mapi.build(cfg, mesh=mesh, dp_axes=dp_axes_of(mesh))
+    if mapi.SHAPES[shape_name]["kind"] == "train":
+        # rebuild with per-layer param constraints (keeps the backward
+        # scan's grad accumulators sharded like the params)
+        p_specs = shd.param_pspecs(cfg, model.abstract_params(), mesh)
+        bspecs = block_specs_of(cfg, p_specs)
+        model = mapi.build(cfg, mesh=mesh, dp_axes=dp_axes_of(mesh),
+                           block_specs=bspecs)
+    specs = model.input_specs(shape_name)
+    kind = mapi.SHAPES[shape_name]["kind"]
+    with mesh:
+        if kind == "train":
+            lowered = _train_cell(model, cfg, mesh, specs)
+        elif kind == "prefill":
+            lowered = _prefill_cell(model, cfg, mesh, specs, shape_name)
+        else:
+            lowered = _decode_cell(model, cfg, mesh, specs)
+    return lowered, cfg, mesh
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             out_path: str | None = None, overrides: dict | None = None,
+             tag: str = "baseline"):
+    t0 = time.time()
+    record = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "tag": tag, "ok": False,
+    }
+    try:
+        lowered, cfg, mesh = lower_cell(arch_id, shape_name,
+                                        multi_pod=multi_pod,
+                                        overrides=overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        txt = compiled.as_text()
+        coll = collective_bytes(txt)
+        # XLA's cost_analysis counts while bodies ONCE; every model here
+        # scans over layers/microbatches, so re-derive trip-count-weighted
+        # totals from the optimized HLO (launch/hlo_cost.py).
+        w = hlo_cost.analyze(txt)
+        n_dev = len(mesh.devices.reshape(-1))
+        record.update(
+            ok=True,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            devices=n_dev,
+            flops=w["flops"],
+            bytes_accessed=w["bytes"],
+            flops_xla_unweighted=ca.get("flops", 0.0),
+            bytes_xla_unweighted=ca.get("bytes accessed", 0.0),
+            while_trips=sorted(w["while_trips"].values(), reverse=True)[:8],
+            unknown_trip_loops=len(w["unknown_trip_loops"]),
+            arg_bytes_per_dev=ma.argument_size_in_bytes,
+            out_bytes_per_dev=ma.output_size_in_bytes,
+            temp_bytes_per_dev=ma.temp_size_in_bytes,
+            peak_bytes_per_dev=(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes
+            ),
+            collective_bytes=w["collective_bytes"],
+            collective_bytes_unweighted=coll,
+        )
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    record["wall_s"] = round(time.time() - t0, 1)
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(record) + "\n")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable (arch x shape) cell")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+
+    cells = []
+    if args.all:
+        for aid in ARCH_IDS:
+            cfg = get(aid)
+            for shp in mapi.applicable_shapes(cfg):
+                cells.append((aid, shp))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for aid, shp in cells:
+        rec = run_cell(aid, shp, multi_pod=args.multi_pod, out_path=args.out,
+                       tag=args.tag)
+        status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')[:80]})"
+        print(f"[{rec['mesh']}] {aid} x {shp}: {status}  "
+              f"wall={rec['wall_s']}s peak/dev="
+              f"{rec.get('peak_bytes_per_dev', 0)/2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

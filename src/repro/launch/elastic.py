@@ -1,0 +1,67 @@
+"""Elastic restart: resume a checkpoint onto a different mesh.
+
+The checkpoint stores full (unsharded) arrays + a manifest; restoring onto
+a new mesh is a `device_put` with the new mesh's NamedShardings, derived
+from the same sharding rules that built the original run
+(launch/sharding.py). Shrinking DP, growing DP across pods, or moving from
+the 16x16 to the 2x16x16 mesh are all the same operation.
+
+  PYTHONPATH=src python -m repro.launch.elastic --arch tinyllama-1.1b \
+      --ckpt-dir /tmp/ck --verify
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get
+from repro.launch import sharding as shd
+from repro.models import api as mapi
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import init_opt_state
+
+
+def reshard_state(arch: str, ckpt_dir: str, mesh, *, reduced: bool = False):
+    cfg = get(arch)
+    if reduced:
+        cfg = cfg.reduced(dtype="float32", remat=False)
+    model = mapi.build(cfg)
+    abstract = jax.eval_shape(
+        lambda k: {"params": model.init(k),
+                   "opt": init_opt_state(model.init(k))},
+        jax.random.PRNGKey(0),
+    )
+    p_specs = shd.param_pspecs(cfg, abstract["params"], mesh)
+    state_specs = {"params": p_specs,
+                   "opt": {"mu": p_specs, "nu": p_specs, "step": P()}}
+    shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    state, step = ckpt.load(abstract, ckpt_dir, shardings=shardings)
+    return state, step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="auto",
+                    help="'auto': all local devices as one data axis")
+    args = ap.parse_args(argv)
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    state, step = reshard_state(args.arch, args.ckpt_dir, mesh,
+                                reduced=args.reduced)
+    n_leaves = len(jax.tree.leaves(state))
+    print(f"resharded step-{step} checkpoint onto {n} devices "
+          f"({n_leaves} arrays)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,511 @@
+"""Trip-count-weighted cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits every while-loop body ONCE —
+a ``lax.scan`` over L layers reports the flops/bytes of a single layer.
+All our models scan over layers (and the train step scans over
+microbatches), so raw cost_analysis undercounts by the product of trip
+counts, which breaks the roofline analysis (useful-flop ratios > 1).
+
+This module re-derives the three roofline inputs from the optimized HLO
+*text* with while bodies multiplied by their trip counts:
+
+  flops             — dot/convolution flops (2 flops per MAC), weighted
+  bytes             — per-instruction operands+output bytes at fusion
+                      boundaries (XLA's bytes-accessed convention), weighted
+  collective_bytes  — per-op operand-size tally for all-gather/all-reduce/
+                      reduce-scatter/all-to-all/collective-permute, weighted
+
+Trip counts are parsed from the loop condition: scan-lowered loops
+compare an s32 induction variable (starting at 0, step 1) against a
+constant bound, which survives into the optimized HLO either in the
+condition computation or as a constant operand passed to it. Loops whose
+bound cannot be found conservatively count as one iteration and are
+reported in ``unknown_trip_loops``.
+
+Validated against ``cost_analysis()`` on loop-free programs in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# one array shape, e.g. f32[128,512]{1,0} or pred[] or s32[3]{0:T(256)}
+_SHAPE = re.compile(r"([a-z0-9]+)\[([\d,]*)\](?:\{[^}]*\})?")
+# instruction prefix: [ROOT] %name =
+_INSTR_LHS = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
+# /*index=5*/ style comments inside long tuple types/operand lists
+_COMMENT = re.compile(r"/\*.*?\*/")
+# header param lists contain nested parens (tuple-typed params); only
+# anchor on the name and the opening paren — the gate in parse_module
+# (ends with '{', contains '->') rules out instruction lines.
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def _shape_elems_bytes(sig: str) -> tuple[int, int]:
+    """Total (elements, bytes) over every array in a (possibly tuple) sig."""
+    elems = byts = 0
+    for m in _SHAPE.finditer(sig):
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _dims_of(sig: str) -> list[int]:
+    m = _SHAPE.search(sig)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    out_sig: str
+    opcode: str
+    operands: list[str]
+    attrs: str  # raw text after the closing paren of operands
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_elems_bytes(self.out_sig)[1]
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collective: dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.transcendentals += o.transcendentals
+        for k, v in o.collective.items():
+            self.collective[k] = self.collective.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k, self.transcendentals * k,
+                    {op: v * k for op, v in self.collective.items()})
+
+
+def _split_operands(argstr: str) -> list[str]:
+    """Split the operand list at depth 0 (shapes may contain commas)."""
+    out, depth, cur = [], 0, []
+    for ch in argstr:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
+def _match_paren(s: str, start: int) -> int:
+    """Index just past the matching ')' for the '(' at s[start]."""
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str | None]:
+    """Parse optimized HLO text into computations; returns (comps, entry)."""
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = _COMMENT.sub("", raw).strip()
+        if not line or line.startswith("//"):
+            continue
+        if line.endswith("{") and ("->" in line) and ("=" not in
+                                                      line.split("(")[0]):
+            m = _COMP_HEADER.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_LHS.match(line)
+        if not m:
+            continue
+        name = m.group(1)
+        rest = line[m.end():]
+        # output type: parenthesized tuple (match parens) or single token
+        if rest.startswith("("):
+            sig_end = _match_paren(rest, 0)
+            out_sig = rest[:sig_end]
+        else:
+            sig_end = rest.find(" ")
+            if sig_end < 0:
+                continue
+            out_sig = rest[:sig_end]
+        mop = _OPCODE.match(rest[sig_end:])
+        if not mop:
+            continue
+        opcode = mop.group(1)
+        op_open = sig_end + mop.end() - 1
+        op_close = _match_paren(rest, op_open)
+        operands = _split_operands(rest[op_open + 1:op_close - 1])
+        attrs = rest[op_close:]
+        ins = Instr(name, out_sig.strip(), opcode, operands, attrs)
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps, entry
+
+
+def _operand_sig(comp: Computation, operand: str) -> str:
+    """Shape signature of an operand reference.
+
+    Operands appear either as '%name' / 'name' (same-computation ref,
+    shape from the def site) or as 'f32[2,2] %name' (inline shape).
+    """
+    operand = operand.strip()
+    if _SHAPE.match(operand):
+        return operand
+    ref = operand.lstrip("%").split(" ")[0]
+    ins = comp.by_name.get(ref)
+    return ins.out_sig if ins is not None else ""
+
+
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self.unknown_trip_loops: list[str] = []
+        self.while_trips: dict[str, int] = {}
+        self._memo: dict[str, Cost] = {}
+
+    # ---- per-instruction costs -------------------------------------
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.out_sig)
+        mcd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+        lhs_sig = _operand_sig(comp, ins.operands[0]) if ins.operands else ""
+        lhs_dims = _dims_of(lhs_sig)
+        k = 1
+        if mcd and lhs_dims:
+            for d in mcd.group(1).split(","):
+                if d and int(d) < len(lhs_dims):
+                    k *= lhs_dims[int(d)]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, comp: Computation, ins: Instr) -> float:
+        out_elems, _ = _shape_elems_bytes(ins.out_sig)
+        # kernel operand: spatial dims x input features per output element
+        rhs_sig = _operand_sig(comp, ins.operands[1]) if len(
+            ins.operands) > 1 else ""
+        rhs_dims = _dims_of(rhs_sig)
+        if not rhs_dims:
+            return 0.0
+        # output feature dim contributes out_elems already; MACs per output
+        # = prod(kernel dims) / output_features
+        dnums = re.search(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)", ins.attrs)
+        k = 1
+        for d in rhs_dims:
+            k *= d
+        if dnums:
+            rhs_lab = dnums.group(2)  # e.g. io01
+            if "o" in rhs_lab:
+                k //= max(rhs_dims[rhs_lab.index("o")], 1)
+        return 2.0 * out_elems * k
+
+    def _instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        op = ins.opcode
+        c = Cost()
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "partition-id", "replica-id"):
+            return c
+        if op == "while":
+            body = _BODY.search(ins.attrs)
+            cond = _COND.search(ins.attrs)
+            trip = self._trip_count(comp, ins)
+            self.while_trips[ins.name] = trip
+            sub = Cost()
+            if body:
+                sub += self.comp_cost(body.group(1))
+            if cond:
+                sub += self.comp_cost(cond.group(1))
+            return sub.scaled(trip)
+        if op == "conditional":
+            m = _BRANCHES.search(ins.attrs)
+            if m:
+                branches = [b.strip().lstrip("%") for b in
+                            m.group(1).split(",")]
+                costs = [self.comp_cost(b) for b in branches if b]
+                if costs:
+                    # worst-case branch
+                    best = max(costs, key=lambda x: (x.flops, x.bytes))
+                    c += best
+            c.bytes += self._io_bytes(comp, ins)
+            return c
+        if op == "call":
+            m = _TO_APPLY.search(ins.attrs)
+            if m:
+                c += self.comp_cost(m.group(1))
+            return c
+        if op == "fusion":
+            m = _CALLS.search(ins.attrs)
+            if m:
+                inner = self.comp_cost(m.group(1))
+                # inner traffic stays in registers: keep flops, drop bytes
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                for k, v in inner.collective.items():
+                    c.collective[k] = c.collective.get(k, 0.0) + v
+                c.bytes += self._fusion_bytes(comp, ins, m.group(1))
+            else:
+                c.bytes += self._io_bytes(comp, ins)
+            return c
+        base = op.replace("-start", "").replace("-done", "").replace(
+            "-update", "")
+        if base in COLLECTIVES:
+            if op.endswith("-done"):
+                return c  # counted at -start
+            opnd = sum(
+                _shape_elems_bytes(_operand_sig(comp, o))[1]
+                for o in ins.operands
+            )
+            c.collective[base] = c.collective.get(base, 0.0) + opnd
+            c.bytes += self._io_bytes(comp, ins)
+            return c
+        # sliced reads/writes touch only the slice, not the whole operand
+        # (XLA HloCostAnalysis convention; critical for scan bodies that
+        # dynamic-slice per-layer params out of (L, ...) stacks).
+        if op in ("dynamic-slice", "slice", "gather"):
+            c.bytes += 2.0 * ins.out_bytes  # read slice + write out
+            return c
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = (_shape_elems_bytes(_operand_sig(comp, ins.operands[1]))[1]
+                   if len(ins.operands) > 1 else ins.out_bytes)
+            c.bytes += 2.0 * upd  # read update + write region (in place)
+            return c
+        if op in ("reshape", "iota", "broadcast", "rng",
+                  "rng-bit-generator"):
+            c.bytes += ins.out_bytes
+            return c
+        if op == "dot":
+            c.flops += self._dot_flops(comp, ins)
+        elif op == "convolution":
+            c.flops += self._conv_flops(comp, ins)
+        elif op in ("exponential", "log", "tanh", "logistic", "rsqrt",
+                    "sqrt", "power", "sine", "cosine", "erf",
+                    "exponential-minus-one", "log-plus-one", "cbrt"):
+            c.transcendentals += _shape_elems_bytes(ins.out_sig)[0]
+        elif op in ("add", "subtract", "multiply", "divide", "maximum",
+                    "minimum", "compare", "select", "negate", "abs",
+                    "floor", "ceil", "round-nearest-afz", "clamp", "and",
+                    "or", "xor", "not", "shift-left", "shift-right-logical",
+                    "shift-right-arithmetic", "remainder", "atan2"):
+            c.flops += _shape_elems_bytes(ins.out_sig)[0]
+        elif op == "reduce":
+            # ~1 flop per reduced input element
+            c.flops += sum(
+                _shape_elems_bytes(_operand_sig(comp, o))[0]
+                for o in ins.operands[: len(ins.operands) // 2]
+            )
+        c.bytes += self._io_bytes(comp, ins)
+        return c
+
+    def _io_bytes(self, comp: Computation, ins: Instr) -> float:
+        b = float(ins.out_bytes)
+        for o in ins.operands:
+            b += _shape_elems_bytes(_operand_sig(comp, o))[1]
+        return b
+
+    def _fusion_bytes(self, comp: Computation, ins: Instr,
+                      called: str) -> float:
+        """Fusion boundary bytes with operand *utilization*.
+
+        A fusion that dynamic-slices a big operand (the scan-body pattern:
+        per-layer params sliced out of an (L, ...) stack) reads only the
+        slice. For each fusion operand, if the corresponding parameter
+        inside the fused computation feeds ONLY slicing ops
+        (dynamic-slice / slice / gather), charge the slices' output bytes;
+        otherwise charge the full operand.
+        """
+        fcomp = self.comps.get(called)
+        b = float(ins.out_bytes)
+        if fcomp is None:
+            return b + sum(
+                _shape_elems_bytes(_operand_sig(comp, o))[1]
+                for o in ins.operands
+            )
+        # map param index -> set of consumer opcodes + sliced bytes
+        params: dict[int, Instr] = {}
+        for fi in fcomp.instrs:
+            if fi.opcode == "parameter":
+                m = re.match(r"(\d+)", fi.operands[0] if fi.operands else "")
+                if m:
+                    params[int(m.group(1))] = fi
+        for idx, o in enumerate(ins.operands):
+            full = _shape_elems_bytes(_operand_sig(comp, o))[1]
+            pins = params.get(idx)
+            if pins is None:
+                b += full
+                continue
+            pname = pins.name
+            sliced = 0.0
+            only_slicing = True
+            used = False
+            for fi in fcomp.instrs:
+                if fi.opcode == "parameter":
+                    continue
+                refs_first = any(
+                    r.lstrip("%").split(" ")[-1].lstrip("%") == pname
+                    or r.lstrip("%").split(" ")[0] == pname
+                    for r in (fi.operands[:1] if fi.opcode in
+                              ("dynamic-slice", "slice", "gather")
+                              else [])
+                )
+                refs_any = any(
+                    pname in {r.lstrip("%").split(" ")[-1].lstrip("%"),
+                              r.lstrip("%").split(" ")[0]}
+                    for r in fi.operands
+                )
+                if not refs_any:
+                    continue
+                used = True
+                if fi.opcode in ("dynamic-slice", "slice",
+                                 "gather") and refs_first:
+                    sliced += fi.out_bytes
+                else:
+                    only_slicing = False
+            if used and only_slicing and sliced > 0:
+                b += min(sliced, full)
+            else:
+                b += full
+        return b
+
+    # ---- loop trip counts ------------------------------------------
+    def _trip_count(self, comp: Computation, ins: Instr) -> int:
+        # XLA annotates loops it has analyzed:
+        #   backend_config={"known_trip_count":{"n":"22"},...}
+        m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.attrs)
+        if m:
+            return int(m.group(1))
+        cond = _COND.search(ins.attrs)
+        if not cond:
+            self.unknown_trip_loops.append(ins.name)
+            return 1
+        ccomp = self.comps.get(cond.group(1))
+        if ccomp is None:
+            self.unknown_trip_loops.append(ins.name)
+            return 1
+        # scan-lowered loops: iv starts at 0, steps 1, compare LT bound.
+        # The bound is an integer constant in the condition computation
+        # (possibly behind a wrapped_compare fusion).
+        consts = []
+        for ci in ccomp.instrs:
+            if ci.opcode != "constant":
+                continue
+            if not re.match(r"^[su](?:8|16|32|64)\[\]", ci.out_sig):
+                continue
+            # value lives in the operand slot: constant(22)
+            for o in ci.operands:
+                if re.fullmatch(r"\d+", o):
+                    consts.append(int(o))
+        if consts:
+            return max(consts)
+        # bound may be threaded through the carried tuple as a constant
+        # in the caller: look at the while's init tuple for int consts
+        init = ins.operands[0].lstrip("%") if ins.operands else ""
+        tins = comp.by_name.get(init)
+        if tins is not None:
+            for o in tins.operands:
+                ref = comp.by_name.get(o.lstrip("%").split(" ")[0])
+                if ref is not None and ref.opcode == "constant":
+                    for v in ref.operands:
+                        if re.fullmatch(r"\d+", v):
+                            consts.append(int(v))
+            if consts:
+                return max(consts)
+        self.unknown_trip_loops.append(ins.name)
+        return 1
+
+    # ---- computation / module cost ----------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[name] = total  # break cycles defensively
+        for ins in comp.instrs:
+            total += self._instr_cost(comp, ins)
+        self._memo[name] = total
+        return total
+
+    def module_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.comp_cost(self.entry)
+
+
+def analyze(text: str) -> dict:
+    """Weighted roofline inputs for one optimized HLO module."""
+    an = HloCostAnalyzer(text)
+    cost = an.module_cost()
+    coll = {k: v for k, v in cost.collective.items()}
+    coll["total"] = sum(coll.values())
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "transcendentals": cost.transcendentals,
+        "collective_bytes": coll,
+        "while_trips": dict(an.while_trips),
+        "unknown_trip_loops": list(an.unknown_trip_loops),
+    }

@@ -1,0 +1,191 @@
+"""Per-architecture PartitionSpec rules (DP / TP / FSDP / EP / SP).
+
+Parameters are matched by tree path (joined with '/'):
+  - attention projections, FFN and expert weights: TP over 'model';
+    under `param_sharding == "fsdp"` the non-TP matmul dim is additionally
+    sharded over the data axes (FSDP — XLA all-gathers per scanned layer).
+  - expert stacks: expert axis over 'model' (EP).
+  - embeddings: vocab over 'model'.
+  - norms/gates/biases: replicated.
+  - unknown leaves: generic fallback — last dim over 'model' when divisible,
+    else replicated.
+
+Activations: batch over the data axes; logits vocab over 'model'; decode
+caches shard KV heads over 'model' and batch over data; batch-1 long-context
+caches shard the *sequence* dim over data (SP).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _divisible(dim: int, mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % n == 0
+
+
+def _maybe(dim, mesh, axes):
+    """axes if the dim divides evenly, else None. GSPMD can pad uneven
+    shards, but even sharding avoids silent waste where possible."""
+    return axes if _divisible(dim, mesh, axes) else None
+
+
+def param_pspecs(cfg: ArchConfig, abstract_params, mesh) -> Any:
+    """PartitionSpec pytree matching abstract_params."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    tp = "model"
+    fsdp = cfg.param_sharding == "fsdp"
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+
+        def spec(*entries):
+            # pad to rank with None
+            entries = list(entries) + [None] * (nd - len(entries))
+            return P(*entries)
+
+        dpa = dp if fsdp else None
+
+        if "embed/table" in name:
+            # vocab over model even when uneven — GSPMD pads the last shard;
+            # replicating a 100k x d table costs far more than the pad.
+            return spec(tp, None)
+        if name.endswith("meta"):
+            return spec(None, None)
+        # scanned blocks carry a leading L dim; python-list blocks do not.
+        off = 1 if (name.startswith("blocks") and shape and
+                    shape[0] == cfg.n_layers and nd >= 2) else 0
+        if name.startswith(("enc_blocks", "dec_blocks")):
+            off = 1
+
+        def d(i):  # dim index after optional layer axis
+            return shape[off + i]
+
+        rank = nd - off
+        if any(s in name for s in ("/wq", "/wk", "/wv", "/w_gate", "/w_up",
+                                   "/w_z", "/w_in", "/w_bc", "/w_dq", "/w_uq",
+                                   "/w_uk", "/w_uv", "/w1", "/w_gates")):
+            if rank == 2:
+                pre = [None] * off
+                return P(*pre, _maybe(d(0), mesh, dp) if fsdp else None,
+                         _maybe(d(1), mesh, tp))
+            if rank == 3 and ("experts" in name or "/w_gate" in name or "/w_up" in name):
+                # (E, d, fe): EP over model, fsdp over d
+                pre = [None] * off
+                return P(*pre, _maybe(d(0), mesh, tp),
+                         _maybe(d(1), mesh, dp) if fsdp else None, None)
+        if any(s in name for s in ("/wo", "/w_down", "/w_out", "/w2")):
+            if rank == 2:
+                pre = [None] * off
+                return P(*pre, _maybe(d(0), mesh, tp),
+                         _maybe(d(1), mesh, dp) if fsdp else None)
+            if rank == 3:  # (E, fe, d) expert down-proj
+                pre = [None] * off
+                return P(*pre, _maybe(d(0), mesh, tp), None,
+                         _maybe(d(1) if rank == 2 else shape[off + 2], mesh, dp)
+                         if fsdp else None)
+        if "/w_dkv" in name and rank == 2:
+            pre = [None] * off
+            return P(*pre, _maybe(d(0), mesh, dp) if fsdp else None, None)
+        if "router" in name:
+            return P(*([None] * nd))
+        # fallback: replicate small leaves; shard last dim over model if big
+        if nd >= 1 and shape[-1] >= 4096 and _divisible(shape[-1], mesh, tp):
+            return P(*([None] * (nd - 1) + [tp]))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def batch_pspecs(cfg: ArchConfig, batch_specs, mesh) -> Any:
+    """Input sharding: batch dim over all data axes."""
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        if leaf.shape and _divisible(leaf.shape[0], mesh, dp):
+            return P(dp, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_specs)
+
+
+def cache_pspecs(cfg: ArchConfig, abstract_cache, mesh, *, batch: int) -> Any:
+    """Decode-cache sharding.
+
+    batch >= dp: batch over data axes, KV heads over model.
+    batch == 1 (long_500k): sequence dim over data (SP), heads over model.
+    """
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    ndp = int(np.prod([mesh.shape[a] for a in dp]))
+    seq_parallel = batch < ndp
+
+    def rule(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        # transformer scanned cache: (L, B, S, KV, dh) / mla (L, B, S, r)
+        # hymba/xlstm per-layer: (B, S, KV, dh) / states (B, H, ...)
+        has_layer = shape and shape[0] == cfg.n_layers and nd >= 3
+        off = 1 if has_layer else 0
+        pre = [None] * off
+        body = list(shape[off:])
+        entries = [None] * len(body)
+        if len(body) >= 2 and name.split("/")[-1] in ("k", "v", "xk", "xv", "c", "kr"):
+            # (B, S, [KV, dh] | [r])
+            seq_axes: list = []
+            if not seq_parallel and _divisible(body[0], mesh, dp):
+                entries[0] = dp
+            elif seq_parallel and _divisible(body[1], mesh, dp):
+                seq_axes.extend(dp)
+            if len(body) >= 3 and _divisible(body[2], mesh, "model"):
+                entries[2] = "model"
+            elif _divisible(body[1], mesh, tuple(seq_axes) + ("model",)):
+                # KV heads don't divide the TP degree (e.g. 8 kv over 16):
+                # shard the cache *sequence* over 'model' instead — decode
+                # attention becomes flash-decoding (partial softmax + small
+                # cross-shard reduce).
+                seq_axes.append("model")
+            if seq_axes:
+                entries[1] = tuple(seq_axes)
+        else:
+            # recurrent states (B, H, ...) — shard H over model if divisible
+            if not seq_parallel and body and _divisible(body[0], mesh, dp):
+                entries[0] = dp
+            if len(body) >= 2 and _divisible(body[1], mesh, "model"):
+                entries[1] = "model"
+        return P(*pre, *entries)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_cache)
+
+
+def logits_pspec(cfg: ArchConfig, mesh):
+    dp = tuple(a for a in mesh.axis_names if a != "model")
+    return P(dp, None, "model")
+
+
+def to_shardings(mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,81 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --steps 200 --batch 8 --seq 128 --reduced --ckpt-dir /tmp/ck
+
+Runs the full stack: config -> model -> sharded train step (on whatever
+devices exist) -> exoshuffle-shuffled data pipeline -> checkpoints every
+--ckpt-every steps -> automatic restart from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import api as mapi
+from repro.train import checkpoint as ckpt
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import (TrainConfig, init_train_state,
+                                    make_train_step)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-sized)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(dtype="float32", remat=False)
+    model = mapi.build(cfg)
+    tcfg = TrainConfig(opt=OptConfig(peak_lr=args.lr, warmup_steps=10,
+                                     total_steps=args.steps))
+
+    data = TokenPipeline(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                                    global_batch=args.batch,
+                                    num_samples=args.batch * 1024))
+
+    start = 0
+    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+        abstract = jax.eval_shape(
+            lambda k: init_train_state(model, k, tcfg), jax.random.PRNGKey(0)
+        )
+        state, start = ckpt.load(abstract, args.ckpt_dir)
+        print(f"restored checkpoint at step {start}")
+    else:
+        state = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = data.batch_at(step)
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            tps = args.batch * args.seq * (step - start + 1) / (time.time() - t0)
+            print(f"step {step:5d}  loss {loss:8.4f}  lr {float(metrics['lr']):.2e}"
+                  f"  tok/s {tps:,.0f}")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(state, args.ckpt_dir, step + 1)
+    if args.ckpt_dir:
+        ckpt.save(state, args.ckpt_dir, args.steps)
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

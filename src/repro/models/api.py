@@ -1,0 +1,233 @@
+"""Unified model API: build(cfg) -> ModelApi with train/serve entry points
+and ShapeDtypeStruct input specs for every assigned benchmark shape.
+
+Shape cells (assignment):
+  train_4k    : seq 4096,   global_batch 256  -> train_step lowering
+  prefill_32k : seq 32768,  global_batch 32   -> prefill lowering
+  decode_32k  : seq 32768,  global_batch 128  -> decode_step w/ 32k cache
+  long_500k   : seq 524288, global_batch 1    -> decode_step (ssm/hybrid only)
+
+Family conventions:
+  vlm    : seq = vlm_prefix patch embeddings + text tokens (frontend stub
+           supplies the patch embeddings).
+  encdec : enc_len = seq//4 frame embeddings (conv frontend stub) +
+           seq text tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import hymba, transformer, whisper, xlstm
+from repro.models.config import ArchConfig
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Any]  # (params, batch) -> logits
+    loss: Callable[..., Any]  # (params, batch) -> scalar
+    prefill: Callable[..., Any]  # (params, batch) -> (logits, cache)
+    decode_step: Callable[..., Any]  # (params, cache, token, pos) -> (logits, cache)
+    init_cache: Callable[..., Any]  # (batch, max_len) -> cache pytree
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return jax.eval_shape(
+            lambda: self.init_cache(batch, max_len)
+        )
+
+    def input_specs(self, shape_name: str):
+        """ShapeDtypeStruct stand-ins for one benchmark cell (no allocation)."""
+        cfg = self.cfg
+        spec = SHAPES[shape_name]
+        b, s = spec["batch"], spec["seq"]
+        f32 = jnp.float32
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        if spec["kind"] == "train":
+            if cfg.family == "vlm":
+                text = s - cfg.vlm_prefix
+                return {
+                    "patch_embeds": sd((b, cfg.vlm_prefix, cfg.d_model), f32),
+                    "tokens": sd((b, text), i32),
+                    "labels": sd((b, s), i32),
+                }
+            if cfg.family == "encdec":
+                return {
+                    "frames": sd((b, whisper.enc_len_for(cfg, s), cfg.d_model), f32),
+                    "tokens": sd((b, s), i32),
+                    "labels": sd((b, s), i32),
+                }
+            return {"tokens": sd((b, s), i32), "labels": sd((b, s), i32)}
+        if spec["kind"] == "prefill":
+            if cfg.family == "vlm":
+                text = s - cfg.vlm_prefix
+                return {
+                    "patch_embeds": sd((b, cfg.vlm_prefix, cfg.d_model), f32),
+                    "tokens": sd((b, text), i32),
+                }
+            if cfg.family == "encdec":
+                return {
+                    "frames": sd((b, whisper.enc_len_for(cfg, s), cfg.d_model), f32),
+                    "tokens": sd((b, s), i32),
+                }
+            return {"tokens": sd((b, s), i32)}
+        # decode: one new token against a cache of length s
+        cache = jax.eval_shape(lambda: self.init_cache(b, s))
+        return {
+            "cache": cache,
+            "token": sd((b, 1), i32),
+            "pos": sd((), i32),
+        }
+
+
+def _ce_loss(logits, labels, n_valid=None):
+    """Mean next-token cross-entropy, vocab-shard friendly.
+
+    All vocab-axis work is reductions (max / sum-exp / masked-select-sum),
+    so a model-sharded vocab axis needs only tiny (B,S) cross-shard
+    all-reduces — never a full-logits gather.
+    """
+    lg = logits[:, :-1].astype(jnp.float32)
+    tgt = labels[:, 1:]
+    m = jnp.max(lg, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(lg - m), axis=-1))
+    v = lg.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lg.shape, 2)
+    tgt_logit = jnp.sum(jnp.where(iota == tgt[..., None], lg, 0.0), axis=-1)
+    return jnp.mean(lse - tgt_logit)
+
+
+def build(cfg: ArchConfig, *, mesh=None, dp_axes=("data",),
+          causal_skip: bool = False, block_specs=None) -> ModelApi:
+    fam = cfg.family
+    causal_skip = causal_skip or cfg.causal_skip
+
+    if fam in ("dense", "mla", "moe", "vlm"):
+        def init(key):
+            return transformer.init_params(key, cfg)
+
+        def forward(params, batch):
+            return transformer.forward(
+                params, cfg, batch["tokens"],
+                prefix_embeds=batch.get("patch_embeds"),
+                mesh=mesh, dp_axes=dp_axes, causal_skip=causal_skip,
+                block_specs=block_specs,
+            )
+
+        def loss(params, batch):
+            return _ce_loss(forward(params, batch), batch["labels"])
+
+        def prefill(params, batch, max_len=None):
+            # max_len counts *text* positions; the VLM patch prefix lives
+            # in the same cache, so reserve room for it too — otherwise
+            # the first decode write lands at index == cache length and
+            # XLA clamps it onto the last prefill entry.
+            if cfg.family == "vlm" and max_len is not None:
+                max_len = max_len + cfg.vlm_prefix
+            return transformer.prefill(
+                params, cfg, batch["tokens"], max_len=max_len,
+                prefix_embeds=batch.get("patch_embeds"), mesh=mesh,
+                dp_axes=dp_axes,
+            )
+
+        def decode_step(params, cache, token, pos):
+            return transformer.decode_step(params, cfg, cache, token, pos,
+                                           mesh=mesh, dp_axes=dp_axes)
+
+        def init_cache(batch, max_len):
+            return transformer.init_cache(cfg, batch, max_len)
+
+    elif fam == "ssm":
+        def init(key):
+            return xlstm.init_params(key, cfg)
+
+        def forward(params, batch):
+            return xlstm.forward(params, cfg, batch["tokens"])
+
+        def loss(params, batch):
+            return _ce_loss(forward(params, batch), batch["labels"])
+
+        def prefill(params, batch, max_len=None):
+            return xlstm.prefill(params, cfg, batch["tokens"], max_len=max_len)
+
+        def decode_step(params, cache, token, pos):
+            return xlstm.decode_step(params, cfg, cache, token, pos)
+
+        def init_cache(batch, max_len):
+            return xlstm.init_cache(cfg, batch, max_len)
+
+    elif fam == "hybrid":
+        def init(key):
+            return hymba.init_params(key, cfg)
+
+        def forward(params, batch):
+            return hymba.forward(params, cfg, batch["tokens"], mesh=mesh,
+                                 dp_axes=dp_axes, block_specs=block_specs)
+
+        def loss(params, batch):
+            return _ce_loss(forward(params, batch), batch["labels"])
+
+        def prefill(params, batch, max_len=None):
+            return hymba.prefill(params, cfg, batch["tokens"], max_len=max_len,
+                                 mesh=mesh, dp_axes=dp_axes)
+
+        def decode_step(params, cache, token, pos):
+            return hymba.decode_step(params, cfg, cache, token, pos)
+
+        def init_cache(batch, max_len):
+            return hymba.init_cache(cfg, batch, max_len)
+
+    elif fam == "encdec":
+        def init(key):
+            return whisper.init_params(key, cfg)
+
+        def forward(params, batch):
+            return whisper.forward(params, cfg, batch["tokens"],
+                                   frames=batch["frames"], mesh=mesh,
+                                   dp_axes=dp_axes, block_specs=block_specs)
+
+        def loss(params, batch):
+            return _ce_loss(forward(params, batch), batch["labels"])
+
+        def prefill(params, batch, max_len=None):
+            return whisper.prefill(params, cfg, batch["tokens"],
+                                   frames=batch["frames"], max_len=max_len)
+
+        def decode_step(params, cache, token, pos):
+            return whisper.decode_step(params, cfg, cache, token, pos)
+
+        def init_cache(batch, max_len):
+            # decode cells: enc context = seq//4 per the shape convention
+            return whisper.init_cache(cfg, batch, max_len,
+                                      whisper.enc_len_for(cfg, max_len))
+
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    return ModelApi(
+        cfg=cfg, init=init, forward=forward, loss=loss, prefill=prefill,
+        decode_step=decode_step, init_cache=init_cache,
+    )
+
+
+def applicable_shapes(cfg: ArchConfig):
+    """The shape cells this arch runs (DESIGN.md §5: long_500k skips)."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.supports_long_context:
+        names.append("long_500k")
+    return names

@@ -1,0 +1,230 @@
+"""Attention: flash-style chunked softmax attention + KV-cache decode.
+
+Training/prefill uses an online-softmax two-level chunking (scan over query
+chunks, scan over key chunks) so the (Sq, Sk) score matrix never
+materializes — per-step footprint is O(cq * ck) per head. This is the
+standard TPU-friendly flash formulation: every inner step is two MXU
+matmuls over VMEM-resident chunks.
+
+The baseline computes the full rectangular chunk grid with causal masking
+(the masked upper triangle is ~2x FLOP waste, visible in the roofline's
+MODEL_FLOPS/HLO ratio); `causal_skip=True` enumerates only the
+lower-triangular chunk pairs — the beyond-paper optimization measured in
+EXPERIMENTS.md §Perf.
+
+GQA is handled by grouping query heads per KV head — KV chunks are never
+materialized at full query-head width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _attn_chunk_step(acc, m, l, q, k, v, q_pos, k_pos, *, causal, window, scale,
+                     k_limit=None, n_sink=0):
+    """One (q-chunk, k-chunk) online-softmax update.
+
+    q (B, cq, KV, G, dh); k/v (B, ck, KV, dh); q_pos (cq,); k_pos (ck,).
+    acc (B, KV, G, cq, dh); m, l (B, KV, G, cq).
+
+    Masking is a single additive (cq, ck) bias folded into the scaled
+    scores — one broadcast-add over the (B, KV, G, cq, ck) tile instead of
+    two boolean selects (§Perf iteration: the selects were two extra full
+    passes over the largest tensor in the training step). Masked lanes get
+    NEG_INF, so exp(s - m_new) underflows to 0 exactly and no post-exp
+    select is needed; the fully-masked-row guard on alpha covers the rest.
+    """
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    bias = jnp.zeros((q_pos.shape[0], k_pos.shape[0]), jnp.float32)
+    if causal:
+        bias = jnp.where(k_pos[None, :] <= q_pos[:, None], bias, NEG_INF)
+    # `window` may be a static int (0 = full attention) or a traced scalar
+    # (scan-over-heterogeneous-layers; <= 0 or huge means full attention).
+    if not (isinstance(window, int) and window == 0):
+        win = jnp.asarray(window, jnp.int32)
+        win = jnp.where(win > 0, win, jnp.int32(2**30))
+        in_win = k_pos[None, :] > q_pos[:, None] - win
+        if n_sink:  # always-attendable leading positions (hymba meta tokens)
+            in_win |= (k_pos < n_sink)[None, :]
+        bias = jnp.where(in_win, bias, NEG_INF)
+    if k_limit is not None:  # ragged-tail key padding
+        bias = jnp.where((k_pos < k_limit)[None, :], bias, NEG_INF)
+    s = s + bias[None, None, None]
+
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # Guard fully-masked rows (m_new == NEG_INF): exp(NEG_INF - NEG_INF) = 1
+    # would pollute l; rescale with 0 there.
+    alpha = jnp.where(m > NEG_INF / 2, jnp.exp(m - m_new), 0.0)
+    # masked lanes: s = NEG_INF and m_new >= 0ish only if some lane is live;
+    # exp(NEG_INF - m_new) == 0, so p needs no select. Fully-masked rows
+    # (m_new == NEG_INF) would give exp(0) = 1 — zero those explicitly via
+    # the same guard used for alpha.
+    row_live = (m_new > NEG_INF / 2)[..., None]
+    p = jnp.exp(s - jnp.where(row_live, m_new[..., None], 0.0))
+    p = p * row_live  # single cheap multiply, no (cq,ck) bool tile
+    l_new = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v).astype(jnp.float32)
+    acc_new = acc * alpha[..., None] + pv
+    return acc_new, m_new, l_new
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 512,
+    q_chunk: int | None = None,
+    q_offset=0,
+    k_offset=0,
+    causal_skip: bool = False,
+    n_sink: int = 0,
+    _k_limit=None,
+):
+    """q (B, Sq, H, dh); k, v (B, Sk, KV, dh); H % KV == 0.
+
+    `q_chunk=None` uses `chunk` for both grids; `q_chunk=0` disables the
+    global q-chunk loop (cq = Sq — the online softmax still streams over
+    kv chunks). Under GSPMD, q-chunking reshapes the sequence dim into
+    (nq, cq), which destroys a sequence sharding whenever nq doesn't
+    divide the mesh axis — disabling it keeps q shardable on seq
+    (the `attn_sharding="qfull"` mode; see EXPERIMENTS.md §Perf).
+
+    Returns (B, Sq, H, dh) in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    _, sk, kv, _ = k.shape
+    dv = v.shape[-1]  # may differ from dh (MLA: qk 96, v 64)
+    g = h // kv
+    scale = dh**-0.5
+    cq = sq if q_chunk == 0 else min(q_chunk or chunk, sq)
+    ck = min(chunk, sk)
+    # Pad ragged tails to a whole chunk; key pads get an out-of-range
+    # position (masked by the causal test), query pad rows are sliced off.
+    sq_pad = -sq % cq
+    sk_pad = -sk % ck
+    if sq_pad or sk_pad:
+        qp = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        out = flash_attention(
+            qp, kp, vp, causal=causal, window=window, chunk=chunk,
+            q_chunk=q_chunk, q_offset=q_offset, k_offset=k_offset,
+            causal_skip=causal_skip, n_sink=n_sink, _k_limit=k_offset + sk,
+        )
+        return out[:, :sq]
+    nq, nk = sq // cq, sk // ck
+
+    qg = q.reshape(b, nq, cq, kv, g, dh).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(b, nk, ck, kv, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, ck, kv, dv).transpose(1, 0, 2, 3, 4)
+    q_positions = q_offset + jnp.arange(sq, dtype=jnp.int32)
+    k_positions = k_offset + jnp.arange(sk, dtype=jnp.int32)
+
+    if (causal_skip and causal and nq == nk
+            and isinstance(window, int) and window == 0):
+        return _flash_lower_triangular(
+            qg, ks, vs, q_positions, k_positions, b, cq, ck, kv, g, dv, scale
+        ).reshape(b, sq, h, dv).astype(q.dtype)
+
+    def per_q_chunk(args):
+        qc, qp = args  # (B, cq, KV, G, dh), (cq,)
+
+        # Rematerialize each (q-chunk, kv-chunk) tile in the backward pass —
+        # the flash-attention property. Without this the scan saves every
+        # (cq, ck) probability tile, i.e. the full S^2 score matrix.
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, kc_vc_kp):
+            acc, m, l = carry
+            kc, vc, kp = kc_vc_kp
+            acc, m, l = _attn_chunk_step(
+                acc, m, l, qc, kc, vc, qp, kp,
+                causal=causal, window=window, scale=scale, k_limit=_k_limit,
+                n_sink=n_sink,
+            )
+            return (acc, m, l), None
+
+        acc0 = jnp.zeros((b, kv, g, cq, dv), jnp.float32)
+        m0 = jnp.full((b, kv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, cq), jnp.float32)
+        kps = k_positions.reshape(nk, ck)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), (ks, vs, kps))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, cq, dv)
+        return out.transpose(0, 3, 1, 2, 4)  # (B, cq, KV, G, dv)
+
+    qps = q_positions.reshape(nq, cq)
+    if nq == 1:
+        # no q-chunk loop: keeps the q sequence dim intact (shardable)
+        out = per_q_chunk((qg[0], qps[0])).reshape(b, sq, h, dv)
+        return out.astype(q.dtype)
+    outs = jax.lax.map(per_q_chunk, (qg, qps))  # (nq, B, cq, KV, G, dv)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def _flash_lower_triangular(qg, ks, vs, q_positions, k_positions,
+                            b, cq, ck, kv, g, dv, scale):
+    """Causal-skip: visit only chunk pairs (qi, ki <= qi).
+
+    Enumerates the nq(nq+1)/2 lower-triangular pairs in ki-major order per
+    qi, scanning with per-q-chunk accumulators gathered/scattered by qi.
+    Exactly halves attention FLOPs vs the rectangular grid (minus diagonal
+    masking), with identical results.
+    """
+    nq = qg.shape[0]
+    pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+    pair_q = jnp.array([p[0] for p in pairs], jnp.int32)
+    pair_k = jnp.array([p[1] for p in pairs], jnp.int32)
+
+    acc0 = jnp.zeros((nq, b, kv, g, cq, dv), jnp.float32)
+    m0 = jnp.full((nq, b, kv, g, cq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((nq, b, kv, g, cq), jnp.float32)
+    qps = q_positions.reshape(nq, cq)
+    kps = k_positions.reshape(-1, ck)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(carry, pair):
+        acc, m, l = carry
+        qi, ki = pair
+        a, mm, ll = _attn_chunk_step(
+            acc[qi], m[qi], l[qi],
+            qg[qi], ks[ki], vs[ki], qps[qi], kps[ki],
+            causal=True, window=0, scale=scale,
+        )
+        return (acc.at[qi].set(a), m.at[qi].set(mm), l.at[qi].set(ll)), None
+
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (pair_q, pair_k))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (nq, B, KV, G, cq, dv)
+    return out.transpose(1, 0, 4, 2, 3, 5)  # (B, nq, cq, KV, G, dv)
+
+
+def decode_attention(q, cache_k, cache_v, *, cache_len, window: int = 0):
+    """Single-step attention against a KV cache.
+
+    q (B, 1, H, dh); cache_k/v (B, L, KV, dh); cache_len scalar int32 =
+    number of valid entries. For ring-buffer (windowed) caches, all L slots
+    are valid once cache_len >= L; masking handles warm-up.
+    Returns (B, 1, H, dh).
+    """
+    b, _, h, dh = q.shape
+    _, lcache, kv, _ = cache_k.shape
+    dv = cache_v.shape[-1]
+    g = h // kv
+    scale = dh**-0.5
+    qg = q.reshape(b, kv, g, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, cache_k).astype(jnp.float32) * scale
+    idx = jnp.arange(lcache, dtype=jnp.int32)
+    valid = idx < cache_len
+    if window:
+        valid = idx < jnp.minimum(cache_len, window)  # ring: all slots once full
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cache_v.dtype), cache_v)
+    return out.reshape(b, 1, h, dv).astype(q.dtype)

@@ -1,0 +1,380 @@
+"""Hymba (arXiv:2411.13676): hybrid-head blocks — parallel attention + SSM.
+
+Each block runs GQA attention heads and Mamba2-style SSD heads *in
+parallel* on the same input, fuses the branch outputs (per-branch RMSNorm +
+learnable scalar betas, averaged), then a SwiGLU FFN. Sliding-window
+attention everywhere except `global_layers` (full attention), plus
+`meta_tokens` learnable prefix tokens that are always attendable.
+
+Decode caches are heterogeneous per layer (ring buffer for SWA, full cache
+for the few global layers, O(1) SSD + conv state), so the layer stack is a
+Python loop rather than a scan. SWA + SSD state is why hymba runs the
+long_500k decode cell: cache is O(window) + O(d_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ArchConfig
+from repro.models.ssm import causal_conv1d, gla_chunked, gla_step
+
+
+def _ssm_heads(cfg: ArchConfig):
+    d_inner = cfg.d_model  # SSM branch width = d_model
+    dh = cfg.head_dim
+    return d_inner // dh, dh, d_inner
+
+
+def init_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    n_ssm, dh, d_inner = _ssm_heads(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln_attn": layers.rmsnorm_init(d),
+        "ln_ffn": layers.rmsnorm_init(d),
+        "attn": layers.gqa_proj_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, dh),
+        "ssm": {
+            "w_in": layers.uniform_init(ks[1], (d, 2 * d_inner)),  # x + gate
+            "conv": layers.uniform_init(ks[2], (cfg.ssm_conv, d_inner), scale=0.3),
+            "w_bc": layers.uniform_init(ks[3], (d_inner, 2 * cfg.ssm_state)),
+            "w_dt": layers.uniform_init(ks[4], (d_inner, n_ssm), scale=d**-0.5),
+            "a_log": jnp.zeros((n_ssm,), jnp.float32),
+            "d_skip": jnp.ones((n_ssm,), jnp.float32),
+            "w_out": layers.uniform_init(ks[5], (d_inner, d)),
+        },
+        "norm_attn_out": layers.rmsnorm_init(d),
+        "norm_ssm_out": layers.rmsnorm_init(d),
+        "betas": jnp.ones((2,), jnp.float32),
+        "ffn": layers.swiglu_init(ks[6], d, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb, km = jax.random.split(key, 3)
+    bkeys = jax.random.split(kb, cfg.n_layers)
+    return {
+        "embed": layers.embedding_init(ke, cfg.padded_vocab, cfg.d_model),
+        "meta": jax.random.normal(km, (cfg.meta_tokens, cfg.d_model), jnp.float32)
+        * 0.02,
+        # stacked (L, ...) — layers share structure; the SWA/global split is
+        # data (a per-layer window value), so training scans one block body.
+        "blocks": jax.vmap(lambda k: init_block(k, cfg))(bkeys),
+        "ln_f": layers.rmsnorm_init(cfg.d_model),
+    }
+
+
+def layer_params(params, i: int):
+    """Slice layer i out of the stacked blocks (prefill/decode loops)."""
+    return jax.tree.map(lambda x: x[i], params["blocks"])
+
+
+def window_schedule(cfg: ArchConfig):
+    """Per-layer window values; 0 encodes full attention (global layers)."""
+    return jnp.asarray(
+        [0 if i in cfg.global_layers else cfg.window
+         for i in range(cfg.n_layers)], jnp.int32,
+    )
+
+
+def _ssm_inputs(p, cfg: ArchConfig, xn, conv_state=None):
+    """xn (B, T, d) -> gla inputs. Returns (q,k,v,a,b,gate,conv_state)."""
+    dt = xn.dtype
+    b, t, _ = xn.shape
+    n_ssm, dh, d_inner = _ssm_heads(cfg)
+    xz = jnp.einsum("btd,de->bte", xn, p["w_in"].astype(dt))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, conv_state = causal_conv1d(xs, p["conv"], state=conv_state)
+    xs = jax.nn.silu(xs)
+    bc = jnp.einsum("bte,en->btn", xs, p["w_bc"].astype(dt))
+    bmat, cmat = jnp.split(bc, 2, axis=-1)  # (B, T, N) each
+    dt_raw = jnp.einsum("bte,eh->bth", xs, p["w_dt"].astype(dt))  # (B, T, H)
+    # decay a <= 0: -softplus(dt) * exp(a_log); input gate b <= 0: logsigmoid
+    a = -jax.nn.softplus(dt_raw.astype(jnp.float32)) * jnp.exp(p["a_log"])
+    bgate = jax.nn.log_sigmoid(dt_raw.astype(jnp.float32))
+    # heads: v = head-split of xs; k = B shared across heads; q = C
+    v = xs.reshape(b, t, n_ssm, dh).transpose(0, 2, 1, 3)  # (B, H, T, dh)
+    k = jnp.broadcast_to(bmat[:, None], (b, n_ssm, t, cfg.ssm_state))
+    q = jnp.broadcast_to(cmat[:, None], (b, n_ssm, t, cfg.ssm_state))
+    return q, k, v, a.transpose(0, 2, 1), bgate.transpose(0, 2, 1), z, xs, conv_state
+
+
+def _pad_ssm_heads(cfg, q, k, v, a, bg, mesh, dp_axes):
+    """Pad the SSM head dim (axis 1) to cfg.ssm_pad_heads and shard it.
+
+    hymba's 25 SSM heads don't divide a 16-way model axis, so GSPMD
+    shards the *contracted* state dim instead — one all-reduce per chunk
+    step of the recurrence (the dominant collective of the baseline
+    prefill_32k cell). Padded heads get zero input gate (bg = -inf) and
+    zero decay, so their state and output stay exactly 0; the extra
+    compute (25 -> 32 heads) is 28% on the SSM branch, repaid 16x by an
+    even head sharding.
+    """
+    hp = cfg.ssm_pad_heads
+    h = q.shape[1]
+    if hp <= h:
+        return q, k, v, a, bg
+    ph = hp - h
+
+    def padh(x, value=0.0):
+        widths = [(0, 0)] * x.ndim
+        widths[1] = (0, ph)
+        return jnp.pad(x, widths, constant_values=value)
+
+    q, k, v = padh(q), padh(k), padh(v)
+    a = padh(a)           # log-decay 0: no-op on a zero state
+    bg = padh(bg, -1e30)  # input gate 0: state stays zero
+    if mesh is not None and "model" in mesh.axis_names \
+            and hp % mesh.shape["model"] == 0:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = tuple(dp_axes)
+
+        def cons(x):
+            spec = [None] * x.ndim
+            spec[1] = "model"
+            ndp = 1
+            for ax in dp:
+                ndp *= mesh.shape[ax]
+            if x.shape[0] % ndp == 0:
+                spec[0] = dp
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+
+        q, k, v, a, bg = cons(q), cons(k), cons(v), cons(a), cons(bg)
+    return q, k, v, a, bg
+
+
+def _ssm_branch(p, cfg: ArchConfig, xn, mesh=None, dp_axes=("data",)):
+    dt = xn.dtype
+    b, t, d = xn.shape
+    n_ssm, dh, d_inner = _ssm_heads(cfg)
+    q, k, v, a, bg, z, xs, _ = _ssm_inputs(p, cfg, xn)
+    q, k, v, a, bg = _pad_ssm_heads(cfg, q, k, v, a, bg, mesh, dp_axes)
+    y, _ = gla_chunked(q, k, v, a, bg, chunk=cfg.chunk)
+    y = y[:, :n_ssm]  # drop padded heads (exact zeros)
+    y = y.transpose(0, 2, 1, 3).reshape(b, t, d_inner)
+    y = y + xs * jnp.repeat(p["d_skip"].astype(dt), dh)[None, None, :]
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", y, p["w_out"].astype(dt))
+
+
+def _fuse(p, cfg, attn_out, ssm_out):
+    bet = p["betas"].astype(attn_out.dtype)
+    a = layers.rmsnorm(p["norm_attn_out"], attn_out, cfg.norm_eps)
+    s = layers.rmsnorm(p["norm_ssm_out"], ssm_out, cfg.norm_eps)
+    return 0.5 * (bet[0] * a + bet[1] * s)
+
+
+def _block(p, cfg: ArchConfig, x, positions, window, mesh=None,
+           dp_axes=("data",)):
+    """window: traced scalar; 0 means full attention (global layer)."""
+    xn = layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps)
+    q, k, v = layers.qkv_project(p["attn"], xn, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim)
+    cos, sin = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta, positions)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    if cfg.attn_sharding == "qfull":
+        q = layers.constrain_seq(q, mesh, dp_axes)
+        k = layers.constrain_seq(k, mesh, dp_axes)
+        v = layers.constrain_seq(v, mesh, dp_axes)
+    attn_out = flash_attention(
+        q, k, v, causal=True, window=window, chunk=cfg.attn_chunk,
+        q_chunk=0 if cfg.attn_sharding == "qfull" else None,
+        n_sink=cfg.meta_tokens)
+    if cfg.attn_sharding == "qfull":
+        attn_out = layers.constrain_seq(attn_out, mesh, dp_axes)
+    attn_out = layers.out_project(p["attn"], attn_out)
+    ssm_out = _ssm_branch(p["ssm"], cfg, xn, mesh=mesh, dp_axes=dp_axes)
+    h = x + _fuse(p, cfg, attn_out, ssm_out)
+    z = layers.rmsnorm(p["ln_ffn"], h, cfg.norm_eps)
+    return h + layers.swiglu(p["ffn"], z)
+
+
+def _with_meta(params, cfg, x):
+    b = x.shape[0]
+    meta = jnp.broadcast_to(
+        params["meta"].astype(x.dtype)[None], (b, cfg.meta_tokens, cfg.d_model)
+    )
+    return jnp.concatenate([meta, x], axis=1)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, mesh=None, dp_axes=("data",),
+            block_specs=None, **_):
+    x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
+    x = _with_meta(params, cfg, x)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    wins = window_schedule(cfg)
+
+    def body(h, scanned):
+        bp, win = scanned
+        h = layers.constrain_acts(h, mesh, dp_axes)
+        bp = layers.constrain_tree(bp, block_specs, mesh)
+        return _block(bp, cfg, h, positions, win, mesh=mesh,
+                      dp_axes=dp_axes), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["blocks"], wins))
+    x = x[:, cfg.meta_tokens :]
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Per-layer: SWA ring (window) or full cache (global) + SSD/conv state."""
+    n_ssm, dh, d_inner = _ssm_heads(cfg)
+    caches = []
+    for i in range(cfg.n_layers):
+        lcache = (
+            max_len + cfg.meta_tokens
+            if i in cfg.global_layers
+            else min(cfg.window + cfg.meta_tokens, max_len + cfg.meta_tokens)
+        )
+        caches.append({
+            "k": jnp.zeros((batch, lcache, cfg.n_kv_heads, dh), cfg.compute_dtype),
+            "v": jnp.zeros((batch, lcache, cfg.n_kv_heads, dh), cfg.compute_dtype),
+            "s": jnp.zeros((batch, n_ssm, cfg.ssm_state, dh), jnp.float32),
+            "n": jnp.zeros((batch, n_ssm, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), cfg.compute_dtype),
+        })
+    return caches
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, max_len=None, mesh=None,
+            dp_axes=("data",), **_):
+    x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
+    x = _with_meta(params, cfg, x)
+    b, s, d = x.shape
+    max_len = max_len or tokens.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    caches = []
+    for i in range(cfg.n_layers):
+        bp = layer_params(params, i)
+        window = 0 if i in cfg.global_layers else cfg.window
+        xn = layers.rmsnorm(bp["ln_attn"], x, cfg.norm_eps)
+        q, k, v = layers.qkv_project(bp["attn"], xn, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim)
+        cos, sin = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta, positions)
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+        if cfg.attn_sharding == "qfull":
+            q = layers.constrain_seq(q, mesh, dp_axes)
+            k = layers.constrain_seq(k, mesh, dp_axes)
+            v = layers.constrain_seq(v, mesh, dp_axes)
+        attn_out = flash_attention(
+            q, k, v, causal=True, window=window, chunk=cfg.attn_chunk,
+            q_chunk=0 if cfg.attn_sharding == "qfull" else None,
+            n_sink=cfg.meta_tokens)
+        if cfg.attn_sharding == "qfull":
+            attn_out = layers.constrain_seq(attn_out, mesh, dp_axes)
+        attn_out = layers.out_project(bp["attn"], attn_out)
+
+        qg, kg, vg, a, bg, z, xs, conv_tail = _ssm_inputs(bp["ssm"], cfg, xn)
+        n_ssm, dh, d_inner = _ssm_heads(cfg)
+        qg, kg, vg, a, bg = _pad_ssm_heads(cfg, qg, kg, vg, a, bg, mesh,
+                                           dp_axes)
+        y, (s_f, n_f) = gla_chunked(qg, kg, vg, a, bg, chunk=cfg.chunk)
+        y = y[:, :n_ssm]          # padded heads are exact zeros
+        s_f = s_f[:, :n_ssm]
+        n_f = n_f[:, :n_ssm]
+        y = y.transpose(0, 2, 1, 3).reshape(b, s, d_inner)
+        y = y + xs * jnp.repeat(bp["ssm"]["d_skip"].astype(x.dtype), dh)[None, None]
+        y = y * jax.nn.silu(z)
+        ssm_out = jnp.einsum("bte,ed->btd", y, bp["ssm"]["w_out"].astype(x.dtype))
+
+        h = x + _fuse(bp, cfg, attn_out, ssm_out)
+        zf = layers.rmsnorm(bp["ln_ffn"], h, cfg.norm_eps)
+        x = h + layers.swiglu(bp["ffn"], zf)
+
+        # build the cache entry
+        lcache = (
+            max_len + cfg.meta_tokens
+            if i in cfg.global_layers
+            else min(cfg.window + cfg.meta_tokens, max_len + cfg.meta_tokens)
+        )
+        if is_global_layer := (i in cfg.global_layers):
+            if s >= lcache:
+                ck, cv = k[:, :lcache], v[:, :lcache]
+            else:
+                pad = [(0, 0), (0, lcache - s), (0, 0), (0, 0)]
+                ck, cv = jnp.pad(k, pad), jnp.pad(v, pad)
+        else:
+            # Ring layout: text position p lives at meta + (p - meta) % win,
+            # meta tokens pinned at the front. Only the last `win` text
+            # positions survive; their ring slots are unique.
+            win = lcache - cfg.meta_tokens
+            text_len = s - cfg.meta_tokens
+            keep = min(win, text_len)
+            ck = jnp.zeros((b, lcache) + k.shape[2:], k.dtype)
+            cv = jnp.zeros_like(ck)
+            ck = ck.at[:, : cfg.meta_tokens].set(k[:, : cfg.meta_tokens])
+            cv = cv.at[:, : cfg.meta_tokens].set(v[:, : cfg.meta_tokens])
+            p_kept = jnp.arange(s - keep, s)
+            slots = cfg.meta_tokens + (p_kept - cfg.meta_tokens) % win
+            ck = ck.at[:, slots].set(k[:, s - keep :])
+            cv = cv.at[:, slots].set(v[:, s - keep :])
+        # conv tail state
+        tail = jnp.einsum(
+            "btd,de->bte", xn, bp["ssm"]["w_in"].astype(x.dtype)
+        )[..., :d_inner][:, -(cfg.ssm_conv - 1):]
+        padn = cfg.ssm_conv - 1 - tail.shape[1]
+        if padn:
+            tail = jnp.pad(tail, ((0, 0), (padn, 0), (0, 0)))
+        caches.append({"k": ck, "v": cv, "s": s_f, "n": n_f, "conv": tail})
+    x = x[:, -1:]
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x), caches
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos):
+    """pos: number of already-processed *text* tokens (cache validity)."""
+    x = layers.embed(params["embed"], token, cfg.compute_dtype)
+    posv = jnp.asarray(pos, jnp.int32) + cfg.meta_tokens
+    new_caches = []
+    for i in range(cfg.n_layers):
+        bp = layer_params(params, i)
+        is_global = i in cfg.global_layers
+        lc = cache[i]
+        lcache = lc["k"].shape[1]
+        xn = layers.rmsnorm(bp["ln_attn"], x, cfg.norm_eps)
+        q, k, v = layers.qkv_project(bp["attn"], xn, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim)
+        cos, sin = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta, posv[None])
+        q = layers.apply_rope(q, cos, sin)
+        k = layers.apply_rope(k, cos, sin)
+        # ring for SWA (meta tokens pinned at the front), append for global
+        if is_global:
+            slot = posv
+        else:
+            win = lcache - cfg.meta_tokens
+            slot = cfg.meta_tokens + (posv - cfg.meta_tokens) % win
+        ck = jax.lax.dynamic_update_slice(lc["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(lc["v"], v, (0, slot, 0, 0))
+        nvalid = jnp.minimum(posv + 1, lcache)
+        attn_out = decode_attention(q, ck, cv, cache_len=nvalid)
+        attn_out = layers.out_project(bp["attn"], attn_out)
+
+        qg, kg, vg, a, bg, z, xs, conv_state = _ssm_inputs(
+            bp["ssm"], cfg, xn, conv_state=lc["conv"]
+        )
+        y, (s_new, n_new) = gla_step(
+            qg[:, :, 0], kg[:, :, 0], vg[:, :, 0], a[:, :, 0], bg[:, :, 0],
+            (lc["s"], lc["n"]),
+        )
+        n_ssm, dh, d_inner = _ssm_heads(cfg)
+        b = x.shape[0]
+        y = y.reshape(b, 1, d_inner)
+        y = y + xs * jnp.repeat(bp["ssm"]["d_skip"].astype(x.dtype), dh)[None, None]
+        y = y * jax.nn.silu(z)
+        ssm_out = jnp.einsum("bte,ed->btd", y, bp["ssm"]["w_out"].astype(x.dtype))
+
+        h = x + _fuse(bp, cfg, attn_out, ssm_out)
+        zf = layers.rmsnorm(bp["ln_ffn"], h, cfg.norm_eps)
+        x = h + layers.swiglu(bp["ffn"], zf)
+        new_caches.append({"k": ck, "v": cv, "s": s_new, "n": n_new,
+                           "conv": conv_state})
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x), new_caches

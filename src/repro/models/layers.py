@@ -1,0 +1,203 @@
+"""Common neural layers: pure functions over explicit param pytrees.
+
+Parameters are plain nested dicts of jnp arrays; init functions take a PRNG
+key and return the pytree. Every layer is written to be scanned over a
+stacked (L, ...) parameter axis and to lower compactly for the 512-device
+dry-run.
+
+Numerics: parameters are stored in float32 ("master" dtype); forward casts
+to the config compute dtype (bf16) at use. RMSNorm and softmax accumulate
+in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def constrain_acts(x, mesh, dp_axes, *, seq_axis: int = 1):
+    """Sequence-parallel activation constraint at block boundaries.
+
+    x (B, S, d): batch over the data axes, sequence over 'model'. The saved
+    scan carry per layer then occupies 1/(dp*tp) of the global activation —
+    GSPMD all-gathers the sequence dim where a block genuinely needs full
+    context (attention) and reduce-scatters after (Megatron-SP, derived
+    automatically from the constraint).
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    entries = [None] * x.ndim
+    dp = tuple(dp_axes)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    if x.shape[0] % ndp == 0:
+        entries[0] = dp
+    if "model" in mesh.axis_names and x.shape[seq_axis] % mesh.shape["model"] == 0:
+        entries[seq_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_heads(x, mesh, dp_axes):
+    """Head-parallel attention constraint on (B, S, H, dh).
+
+    Batch over the data axes; heads over 'model' when divisible (q heads),
+    otherwise left to GSPMD (GQA kv heads with KV < tp propagate a partial
+    sharding from q's KV x G factorization). Sequence replicated — GSPMD
+    inserts the all-gather from the sequence-parallel block boundary and a
+    reduce-scatter after the output projection (Megatron-SP attention).
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    entries: list = [None] * x.ndim
+    dp = tuple(dp_axes)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    if x.shape[0] % ndp == 0:
+        entries[0] = dp
+    if "model" in mesh.axis_names and x.shape[2] % mesh.shape["model"] == 0:
+        entries[2] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_seq(x, mesh, dp_axes, *, seq_axis: int = 1):
+    """Sequence-parallel constraint on (B, S, H, dh) attention inputs.
+
+    Batch over the data axes, sequence over 'model', heads/dh replicated —
+    the `attn_sharding="qfull"` layout for archs whose head count doesn't
+    divide the TP degree (hymba: 25 heads over 16). Without this, the TP
+    sharding of wq propagates *head_dim* sharding into the score einsum's
+    contracted dim: one all-reduce per attention tile (7 TiB/step on the
+    hymba prefill_32k baseline).
+    """
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    entries: list = [None] * x.ndim
+    dp = tuple(dp_axes)
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    if x.shape[0] % ndp == 0:
+        entries[0] = dp
+    if "model" in mesh.axis_names and \
+            x.shape[seq_axis] % mesh.shape["model"] == 0:
+        entries[seq_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*entries)))
+
+
+def constrain_tree(tree, specs, mesh):
+    """Constrain a pytree to PartitionSpecs. Used on the per-layer param
+    slice inside scan bodies so the backward scan's gradient accumulators
+    inherit the param sharding instead of materializing replicated."""
+    if mesh is None or specs is None:
+        return tree
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return jax.tree.map(
+        lambda t, s: jax.lax.with_sharding_constraint(t, NamedSharding(mesh, s)),
+        tree, specs, is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else fan_in**-0.5
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def rmsnorm_init(dim):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float, positions: jax.Array):
+    """positions (...,) int32 -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array):
+    """x (..., seq, heads, head_dim); cos/sin (..., seq, head_dim//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, dim: int):
+    return {"table": jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x):
+    """Tied-transpose readout -> (..., vocab) in float32."""
+    return jnp.einsum(
+        "...d,vd->...v", x.astype(jnp.float32), params["table"].astype(jnp.float32)
+    )
+
+
+def swiglu_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": uniform_init(k1, (d_model, d_ff)),
+        "w_up": uniform_init(k2, (d_model, d_ff)),
+        "w_down": uniform_init(k3, (d_ff, d_model)),
+    }
+
+
+def swiglu(params, x):
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))
+
+
+def gqa_proj_init(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": uniform_init(kq, (d_model, n_heads * head_dim)),
+        "wk": uniform_init(kk, (d_model, n_kv_heads * head_dim)),
+        "wv": uniform_init(kv, (d_model, n_kv_heads * head_dim)),
+        "wo": uniform_init(ko, (n_heads * head_dim, d_model)),
+    }
+
+
+def qkv_project(params, x, n_heads, n_kv_heads, head_dim):
+    dt = x.dtype
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(dt))
+    return (
+        q.reshape(b, s, n_heads, head_dim),
+        k.reshape(b, s, n_kv_heads, head_dim),
+        v.reshape(b, s, n_kv_heads, head_dim),
+    )
+
+
+def out_project(params, attn_out):
+    dt = attn_out.dtype
+    b, s, h, dh = attn_out.shape
+    return jnp.einsum(
+        "bsh,hd->bsd", attn_out.reshape(b, s, h * dh), params["wo"].astype(dt)
+    )

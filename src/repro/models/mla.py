@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries and KV are low-rank compressed; the KV cache stores only the
+compressed latent c_kv (kv_lora_rank) plus a shared RoPE key (qk_rope_dim)
+per position — ~8x smaller than a GQA cache at equal quality.
+
+Train/prefill uses the *expanded* form (decompress K/V per head and run
+flash attention, MHA). Decode uses the *absorbed* form: W_uk is folded into
+the query and W_uv into the output so attention runs directly against the
+compressed cache — the latent never expands at decode time.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.attention import NEG_INF, flash_attention
+from repro.models.config import ArchConfig
+
+
+def init_mla(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": layers.uniform_init(ks[0], (d, cfg.q_lora_rank)),
+        "q_norm": layers.rmsnorm_init(cfg.q_lora_rank),
+        "w_uq": layers.uniform_init(ks[1], (cfg.q_lora_rank, h * (dn + dr))),
+        "w_dkv": layers.uniform_init(ks[2], (d, cfg.kv_lora_rank + dr)),
+        "kv_norm": layers.rmsnorm_init(cfg.kv_lora_rank),
+        "w_uk": layers.uniform_init(ks[3], (cfg.kv_lora_rank, h * dn)),
+        "w_uv": layers.uniform_init(ks[4], (cfg.kv_lora_rank, h * dv)),
+        "wo": layers.uniform_init(ks[5], (h * dv, d)),
+    }
+
+
+def _latents(p, cfg: ArchConfig, x, positions):
+    """Shared q/kv compression. x (B,S,d) -> (q (B,S,H,dn+dr), c_kv, k_rope)."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+
+    cq = layers.rmsnorm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(dt)))
+    q = jnp.einsum("bsr,rh->bsh", cq, p["w_uq"].astype(dt)).reshape(b, s, h, dn + dr)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
+    c_kv = layers.rmsnorm(p["kv_norm"], ckv_full[..., : cfg.kv_lora_rank])
+    k_rope = ckv_full[..., cfg.kv_lora_rank :]  # (B, S, dr), shared over heads
+
+    cos, sin = layers.rope_frequencies(dr, cfg.rope_theta, positions)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, cos, sin)
+    k_rope = layers.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    return q, c_kv, k_rope
+
+
+def mla_attention(p, cfg: ArchConfig, x, positions, *, causal_skip=False,
+                  mesh=None, dp_axes=("data",)):
+    """Expanded-form MLA for train/prefill. Returns (out, (c_kv, k_rope))."""
+    dt = x.dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    q, c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rh->bsh", c_kv, p["w_uk"].astype(dt)).reshape(b, s, h, dn)
+    v = jnp.einsum("bsr,rh->bsh", c_kv, p["w_uv"].astype(dt)).reshape(b, s, h, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1
+    )
+    # minicpm3's 40 heads don't divide a 16-way model axis; without an
+    # explicit layout the w_uq TP sharding propagates head_dim sharding
+    # into the score contraction (per-tile psums — see EXPERIMENTS.md
+    # §Perf, hymba cell for the identical pathology).
+    if cfg.attn_sharding == "qfull":
+        q = layers.constrain_seq(q, mesh, dp_axes)
+        k = layers.constrain_seq(k, mesh, dp_axes)
+        v = layers.constrain_seq(v, mesh, dp_axes)
+    elif cfg.attn_sharding == "heads":
+        q = layers.constrain_heads(q, mesh, dp_axes)
+        k = layers.constrain_heads(k, mesh, dp_axes)
+        v = layers.constrain_heads(v, mesh, dp_axes)
+    out = flash_attention(
+        q, k, v, causal=True, chunk=cfg.attn_chunk,
+        q_chunk=0 if cfg.attn_sharding == "qfull" else None,
+        causal_skip=causal_skip,
+    )  # (B,S,H,dv)
+    if cfg.attn_sharding == "qfull":
+        out = layers.constrain_seq(out, mesh, dp_axes)
+    elif cfg.attn_sharding == "heads":
+        out = layers.constrain_heads(out, mesh, dp_axes)
+    out = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, h * dv), p["wo"].astype(dt))
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache_c, cache_kr, pos):
+    """Absorbed-form single-step decode against the compressed cache.
+
+    x (B,1,d); cache_c (B,L,kv_lora); cache_kr (B,L,dr); pos scalar — the
+    index of the new token (cache holds `pos` valid entries; the new
+    latent is written at `pos`).
+    Returns (out (B,1,d), cache_c, cache_kr).
+    """
+    dt = x.dtype
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    q, c_kv, k_rope = _latents(p, cfg, x, pos[None] if pos.ndim == 0 else pos)
+    cache_c = jax.lax.dynamic_update_slice(cache_c, c_kv, (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, k_rope, (0, pos, 0))
+
+    q_nope = q[..., :dn].reshape(b, h, dn)
+    q_rope = q[..., dn:].reshape(b, h, dr)
+    # absorb W_uk: q_eff (B,H,r) scores directly against the latent cache.
+    w_uk = p["w_uk"].astype(dt).reshape(r, h, dn)
+    q_eff = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+    s = jnp.einsum("bhr,blr->bhl", q_eff, cache_c)
+    s = s + jnp.einsum("bhr,blr->bhl", q_rope, cache_kr)
+    s = s.astype(jnp.float32) * (dn + dr) ** -0.5
+    idx = jnp.arange(cache_c.shape[1], dtype=jnp.int32)
+    s = jnp.where(idx[None, None] <= pos, s, NEG_INF)
+    pweights = jax.nn.softmax(s, axis=-1).astype(dt)
+    ctx = jnp.einsum("bhl,blr->bhr", pweights, cache_c)  # attended latent
+    # absorb W_uv on the way out.
+    w_uv = p["w_uv"].astype(dt).reshape(r, h, dv)
+    attn = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(b, 1, h * dv)
+    out = jnp.einsum("bsh,hd->bsd", attn, p["wo"].astype(dt))
+    return out, cache_c, cache_kr

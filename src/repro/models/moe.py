@@ -1,0 +1,129 @@
+"""Mixture-of-experts FFN block (qwen2-moe, moonshot) with exoshuffle dispatch.
+
+The routed-expert path is where the paper's technique lands in the LM stack
+(DESIGN.md §4.2): token->expert routing is a shuffle with expert-id keys.
+`dispatch_impl` selects:
+
+  sort   — exoshuffle dispatch under shard_map (EP all_to_all over the
+           `model` axis); the framework's first-class path.
+  onehot — GShard dense-einsum baseline (pure GSPMD), for §Perf comparison.
+  dense  — single-device fallback (sort pipeline minus the all_to_all);
+           used by CPU smoke tests.
+
+Shared experts (qwen2-moe has 4, fused here into one wide SwiGLU) run
+dense alongside the routed path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import moe_dispatch as md
+from repro.models import layers
+from repro.models.config import ArchConfig
+
+
+def init_moe_ffn(key, cfg: ArchConfig):
+    d, e, fe = cfg.d_model, cfg.n_experts_padded, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.uniform_init(ks[0], (d, e)),
+        "w_gate": layers.uniform_init(ks[1], (e, d, fe), scale=d**-0.5),
+        "w_up": layers.uniform_init(ks[2], (e, d, fe), scale=d**-0.5),
+        "w_down": layers.uniform_init(ks[3], (e, fe, d), scale=fe**-0.5),
+    }
+    if cfg.shared_d_ff:
+        p["shared"] = layers.swiglu_init(ks[4], d, cfg.shared_d_ff)
+    return p
+
+
+def _expert_fn(params, xin):
+    """Batched SwiGLU experts. params: dict with (E, ...) leaves; xin (E, C, d)."""
+    dt = xin.dtype
+    g = jnp.einsum("ecd,edf->ecf", xin, params["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xin, params["w_up"].astype(dt))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, params["w_down"].astype(dt))
+
+
+def moe_ffn(p, cfg: ArchConfig, x, *, mesh=None, dp_axes=("data",), ep_axis="model"):
+    """x (B, S, d) -> (B, S, d)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    tokens = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", tokens, p["router"].astype(dt))
+    weights, ids = md.route_topk(logits, cfg.top_k)
+    # router emits real-expert logits only; pad experts (n_experts_padded >
+    # n_experts) are never routed to.
+
+    expert_params = {k: p[k] for k in ("w_gate", "w_up", "w_down")}
+    impl = cfg.dispatch_impl
+    dcfg = md.MoeDispatchConfig(
+        num_experts=cfg.n_experts_padded,
+        top_k=cfg.top_k,
+        capacity_factor=cfg.moe_capacity_factor,
+        ep_axis=ep_axis,
+    )
+
+    if impl == "sort" and mesh is not None and s == 1:
+        # decode: tokens (B) << mesh size — replicate tokens over the EP
+        # axis, mask per-shard expert routing, psum the partial outputs.
+        # (The all_to_all pipeline needs T divisible by dp*ep; see
+        # moe_dispatch.ep_replicated_shard.)
+        token_spec = P(tuple(dp_axes), None)
+        w_spec = P(token_spec[0], None)
+        ep_size = mesh.shape[ep_axis]
+
+        def decode_fn(tok, w, i, ep):
+            return md.ep_replicated_shard(
+                tok, w, i, ep, cfg=dcfg, ep_size=ep_size,
+                expert_fn=lambda prm, xin: _expert_fn(prm, xin),
+            )
+
+        routed = jax.shard_map(
+            decode_fn,
+            mesh=mesh,
+            in_specs=(token_spec, w_spec, w_spec,
+                      {k: P(ep_axis, None, None) for k in expert_params}),
+            out_specs=token_spec,
+            check_vma=False,
+        )(tokens, weights, ids, expert_params)
+    elif impl == "sort" and mesh is not None:
+        token_spec = P(tuple(dp_axes) + (ep_axis,), None)
+        w_spec = P(token_spec[0], None)
+        ep_size = mesh.shape[ep_axis]
+
+        def shard_fn(tok, w, i, ep):
+            return md.sort_dispatch_shard(
+                tok, w, i, ep, cfg=dcfg, ep_size=ep_size,
+                expert_fn=lambda prm, xin: _expert_fn(prm, xin),
+            )
+
+        routed = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(token_spec, w_spec, w_spec,
+                      {k: P(ep_axis, None, None) for k in expert_params}),
+            out_specs=token_spec,
+            check_vma=False,
+        )(tokens, weights, ids, expert_params)
+    elif impl == "onehot":
+        cap = md._round_up(
+            tokens.shape[0] * cfg.top_k / cfg.n_experts * cfg.moe_capacity_factor, 8
+        )
+        routed = md.onehot_dispatch_combine(
+            tokens, weights, ids,
+            num_experts=cfg.n_experts_padded, capacity=int(cap),
+            expert_fn=lambda xin: _expert_fn(expert_params, xin),
+        )
+    else:  # dense: single-shard sort pipeline (no collective)
+        routed = md.sort_dispatch_shard(
+            tokens, weights, ids, expert_params,
+            cfg=dcfg, ep_size=1,
+            expert_fn=lambda prm, xin: _expert_fn(prm, xin),
+        )
+
+    out = routed.reshape(b, s, d).astype(dt)
+    if cfg.shared_d_ff:
+        out = out + layers.swiglu(p["shared"], x)
+    return out

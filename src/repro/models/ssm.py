@@ -1,0 +1,129 @@
+"""Chunked gated linear attention — the shared recurrence engine.
+
+Both xLSTM's mLSTM (matrix memory + normalizer) and Mamba2-style SSD
+(hymba's SSM heads) are instances of one recurrence over per-head state
+S (dk, dv):
+
+    S_t = exp(a_t) * S_{t-1} + exp(b_t) * k_t v_t^T      (a_t, b_t <= 0)
+    y_t = q_t @ S_t            [ / max(|q_t . n_t|, 1) with normalizer n ]
+
+Training/prefill uses the chunkwise-parallel form (scan over chunks of
+length `chunk`, intra-chunk work is two MXU matmuls — the TPU-native
+formulation); decode is the O(1)-state single step. All decay/input gates
+live in log space and are bounded <= 0 (log-sigmoid), so every exponent in
+the chunked form is <= 0 — no overflow without a running-max stabilizer.
+
+Shapes: q, k (B, H, T, dk); v (B, H, T, dv); a, b (B, H, T).
+State: S (B, H, dk, dv); n (B, H, dk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_chunked(q, k, v, a, b, *, chunk: int = 256, normalize: bool = False,
+                initial_state=None):
+    """Returns (y (B, H, T, dv), (S, n) final state)."""
+    bb, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, t)
+    pad = -t % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))  # pad decay 0 = keep state
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+    nc = (t + pad) // c
+
+    def to_chunks(x, feat):
+        if feat:
+            return x.reshape(bb, h, nc, c, x.shape[-1]).transpose(2, 0, 1, 3, 4)
+        return x.reshape(bb, h, nc, c).transpose(2, 0, 1, 3)
+
+    qs, ks, vs = to_chunks(q, True), to_chunks(k, True), to_chunks(v, True)
+    as_, bs = to_chunks(a, False), to_chunks(b, False)
+
+    s0 = (
+        initial_state[0]
+        if initial_state is not None
+        else jnp.zeros((bb, h, dk, dv), jnp.float32)
+    )
+    n0 = (
+        initial_state[1]
+        if initial_state is not None
+        else jnp.zeros((bb, h, dk), jnp.float32)
+    )
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    # Rematerialize intra-chunk decay/score tiles in the backward pass
+    # (flash-style); otherwise the scan saves every (c, c) D-matrix.
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def chunk_step(carry, xs):
+        s, n = carry
+        qc, kc, vc, ac, bc = xs
+        qf = qc.astype(jnp.float32)
+        kf = kc.astype(jnp.float32)
+        vf = vc.astype(jnp.float32)
+        f = jnp.cumsum(ac, axis=-1)  # (B,H,c) inclusive log-decay
+        # intra-chunk: D[t,s] = exp(F_t - F_s + b_s), s <= t (exponent <= 0)
+        logd = f[..., :, None] - f[..., None, :] + bc[..., None, :]
+        d = jnp.where(tril, jnp.exp(logd), 0.0)
+        qk = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+        y = jnp.einsum("bhts,bhsv->bhtv", qk * d, vf)
+        # inter-chunk: carried state
+        ef = jnp.exp(f)
+        y = y + ef[..., None] * jnp.einsum("bhtd,bhdv->bhtv", qf, s)
+        if normalize:
+            den = ef * jnp.einsum("bhtd,bhd->bht", qf, n) + jnp.sum(qk * d, -1)
+            y = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update: w_s = exp(F_end - F_s + b_s)
+        w = jnp.exp(f[..., -1:] - f + bc)
+        s_new = jnp.exp(f[..., -1])[..., None, None] * s + jnp.einsum(
+            "bhs,bhsd,bhsv->bhdv", w, kf, vf
+        )
+        n_new = jnp.exp(f[..., -1])[..., None] * n + jnp.einsum("bhs,bhsd->bhd", w, kf)
+        return (s_new, n_new), y
+
+    (s_f, n_f), ys = jax.lax.scan(chunk_step, (s0, n0), (qs, ks, vs, as_, bs))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(bb, h, nc * c, dv)[:, :, :t]
+    return y.astype(v.dtype), (s_f, n_f)
+
+
+def gla_step(q, k, v, a, b, state, *, normalize: bool = False):
+    """Single decode step. q/k (B,H,dk); v (B,H,dv); a/b (B,H) log gates.
+
+    Returns (y (B,H,dv), (S, n) updated state).
+    """
+    s, n = state
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    ea = jnp.exp(a)[..., None, None]
+    eb = jnp.exp(b)[..., None, None]
+    s_new = ea * s + eb * kf[..., :, None] * vf[..., None, :]
+    n_new = ea[..., 0] * n + eb[..., 0] * kf
+    y = jnp.einsum("bhd,bhdv->bhv", qf, s_new)
+    if normalize:
+        den = jnp.einsum("bhd,bhd->bh", qf, n_new)
+        y = y / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    return y.astype(v.dtype), (s_new, n_new)
+
+
+def causal_conv1d(x, kernel, *, state=None):
+    """Depthwise causal conv. x (B, T, D); kernel (K, D).
+
+    state (B, K-1, D) holds the trailing inputs from the previous segment.
+    Returns (y (B, T, D), new_state (B, K-1, D)).
+    """
+    kk = kernel.shape[0]
+    bsz = x.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, kk - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, T+K-1, D)
+    y = sum(
+        xx[:, i : i + x.shape[1]] * kernel[i].astype(x.dtype) for i in range(kk)
+    )
+    new_state = xx[:, -(kk - 1) :] if kk > 1 else state
+    return y, new_state

@@ -1,0 +1,297 @@
+"""Decoder-only transformer: dense (GQA), MLA, MoE, and VLM-backbone paths.
+
+One scanned block implementation covers granite-3-8b, mistral-nemo-12b,
+tinyllama-1.1b, minicpm3-4b (MLA), qwen2-moe-a2.7b, moonshot-v1-16b-a3b
+(MoE) and llava-next-34b (dense backbone behind a patch-embedding stub).
+
+Layer stack is `lax.scan` over stacked (L, ...) params — one traced block
+regardless of depth, which keeps the 512-device dry-run HLO compact — with
+`jax.checkpoint` (remat) around the block body for training.
+
+Entry points:
+  init_params / abstract_params
+  forward(params, tokens[, prefix_embeds])          -> logits (train)
+  prefill(params, tokens)                           -> (last-pos logits, cache)
+  decode_step(params, cache, token, pos)            -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mla, moe
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ArchConfig):
+    ka, kf, kn = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "ln_attn": layers.rmsnorm_init(cfg.d_model),
+        "ln_ffn": layers.rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "mla":
+        p["attn"] = mla.init_mla(ka, cfg)
+    else:
+        p["attn"] = layers.gqa_proj_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        )
+    if cfg.is_moe:
+        p["ffn"] = moe.init_moe_ffn(kf, cfg)
+    elif cfg.d_ff:
+        p["ffn"] = layers.swiglu_init(kf, cfg.d_model, cfg.d_ff)
+    del kn
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb, kn = jax.random.split(key, 3)
+    block_keys = jax.random.split(kb, cfg.n_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    return {
+        "embed": layers.embedding_init(ke, cfg.padded_vocab, cfg.d_model),
+        "blocks": blocks,  # every leaf stacked (L, ...)
+        "ln_f": layers.rmsnorm_init(cfg.d_model),
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+
+def _attn_train(p, cfg: ArchConfig, x, positions, *, causal_skip=False,
+                mesh=None, dp_axes=("data",)):
+    if cfg.family == "mla":
+        out, _ = mla.mla_attention(p, cfg, x, positions,
+                                   causal_skip=causal_skip, mesh=mesh,
+                                   dp_axes=dp_axes)
+        return out
+    q, k, v = layers.qkv_project(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    cos, sin = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta, positions)
+    q = layers.apply_rope(q, cos, sin)
+    k = layers.apply_rope(k, cos, sin)
+    if cfg.attn_sharding == "heads":
+        q = layers.constrain_heads(q, mesh, dp_axes)
+        k = layers.constrain_heads(k, mesh, dp_axes)
+        v = layers.constrain_heads(v, mesh, dp_axes)
+    elif cfg.attn_sharding == "qfull":
+        q = layers.constrain_seq(q, mesh, dp_axes)
+        k = layers.constrain_seq(k, mesh, dp_axes)
+        v = layers.constrain_seq(v, mesh, dp_axes)
+    out = flash_attention(
+        q, k, v, causal=True, window=cfg.window, chunk=cfg.attn_chunk,
+        q_chunk=0 if cfg.attn_sharding == "qfull" else None,
+        causal_skip=causal_skip,
+    )
+    if cfg.attn_sharding == "heads":
+        out = layers.constrain_heads(out, mesh, dp_axes)
+    elif cfg.attn_sharding == "qfull":
+        out = layers.constrain_seq(out, mesh, dp_axes)
+    return layers.out_project(p, out)
+
+
+def _block_train(p, cfg: ArchConfig, x, positions, mesh, dp_axes, *, causal_skip=False):
+    h = x + _attn_train(p["attn"], cfg, layers.rmsnorm(p["ln_attn"], x, cfg.norm_eps),
+                        positions, causal_skip=causal_skip, mesh=mesh,
+                        dp_axes=dp_axes)
+    z = layers.rmsnorm(p["ln_ffn"], h, cfg.norm_eps)
+    if cfg.is_moe:
+        f = moe.moe_ffn(p["ffn"], cfg, z, mesh=mesh, dp_axes=dp_axes)
+    elif cfg.d_ff:
+        f = layers.swiglu(p["ffn"], z)
+    else:
+        f = 0.0
+    return h + f
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens,
+    *,
+    prefix_embeds=None,
+    mesh=None,
+    dp_axes=("data",),
+    causal_skip=False,
+    block_specs=None,
+):
+    """tokens (B, S_text) int32; prefix_embeds (B, P, d) for VLM stubs.
+
+    Returns logits (B, S, vocab) float32, where S = P + S_text.
+    """
+    dt = cfg.compute_dtype
+    x = layers.embed(params["embed"], tokens, dt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def body(h, layer_params):
+        h = layers.constrain_acts(h, mesh, dp_axes)
+        layer_params = layers.constrain_tree(layer_params, block_specs, mesh)
+        h = _block_train(layer_params, cfg, h, positions, mesh, dp_axes,
+                         causal_skip=causal_skip)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Abstract/zero cache. MLA caches the latent; GQA caches full K/V."""
+    if cfg.family == "mla":
+        return {
+            "c": jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora_rank),
+                           cfg.compute_dtype),
+            "kr": jnp.zeros((cfg.n_layers, batch, max_len, cfg.qk_rope_dim),
+                            cfg.compute_dtype),
+        }
+    return {
+        "k": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+            cfg.compute_dtype,
+        ),
+        "v": jnp.zeros(
+            (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+            cfg.compute_dtype,
+        ),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, max_len=None, prefix_embeds=None,
+            mesh=None, dp_axes=("data",)):
+    """Run the prompt, building the cache. Returns (logits_last, cache)."""
+    dt = cfg.compute_dtype
+    x = layers.embed(params["embed"], tokens, dt)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(dt), x], axis=1)
+    b, s, _ = x.shape
+    # s includes any VLM prefix; the cache must hold at least the prompt.
+    max_len = max(max_len or s, s)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    cos, sin = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta, positions)
+
+    def body(h, layer_params):
+        hn = layers.rmsnorm(layer_params["ln_attn"], h, cfg.norm_eps)
+        if cfg.family == "mla":
+            out, (c_kv, k_rope) = mla.mla_attention(layer_params["attn"], cfg,
+                                                    hn, positions, mesh=mesh,
+                                                    dp_axes=dp_axes)
+            kv = {"c": _pad_len(c_kv, max_len), "kr": _pad_len(k_rope, max_len)}
+        else:
+            q, k, v = layers.qkv_project(
+                layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            )
+            q = layers.apply_rope(q, cos, sin)
+            k = layers.apply_rope(k, cos, sin)
+            if cfg.attn_sharding == "heads":
+                q = layers.constrain_heads(q, mesh, dp_axes)
+                k = layers.constrain_heads(k, mesh, dp_axes)
+                v = layers.constrain_heads(v, mesh, dp_axes)
+            out = flash_attention(
+                q, k, v, causal=True, window=cfg.window,
+                chunk=cfg.attn_chunk,
+                q_chunk=0 if cfg.attn_sharding == "qfull" else None)
+            if cfg.attn_sharding == "heads":
+                out = layers.constrain_heads(out, mesh, dp_axes)
+            out = layers.out_project(layer_params["attn"], out)
+            kv = {"k": _pad_len(k, max_len), "v": _pad_len(v, max_len)}
+        h = h + out
+        z = layers.rmsnorm(layer_params["ln_ffn"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            f = moe.moe_ffn(layer_params["ffn"], cfg, z, mesh=mesh, dp_axes=dp_axes)
+        elif cfg.d_ff:
+            f = layers.swiglu(layer_params["ffn"], z)
+        else:
+            f = 0.0
+        return h + f, kv
+
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = layers.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    logits = layers.unembed(params["embed"], x)
+    return logits, cache
+
+
+def _pad_len(arr, max_len):
+    s = arr.shape[1]
+    if s == max_len:
+        return arr
+    pad = [(0, 0)] * arr.ndim
+    pad[1] = (0, max_len - s)
+    return jnp.pad(arr, pad)
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos, *, mesh=None,
+                dp_axes=("data",)):
+    """One autoregressive step. token (B, 1) int32; pos scalar int32 — the
+    number of valid cache entries (the new token's position).
+    Returns (logits (B, 1, vocab), cache).
+    """
+    dt = cfg.compute_dtype
+    x = layers.embed(params["embed"], token, dt)  # (B, 1, d)
+    posv = jnp.asarray(pos, jnp.int32)
+
+    def body(h, scanned):
+        layer_params, layer_cache = scanned
+        hn = layers.rmsnorm(layer_params["ln_attn"], h, cfg.norm_eps)
+        if cfg.family == "mla":
+            out, c_new, kr_new = mla.mla_decode(
+                layer_params["attn"], cfg, hn, layer_cache["c"], layer_cache["kr"],
+                posv,
+            )
+            new_cache = {"c": c_new, "kr": kr_new}
+        else:
+            q, k, v = layers.qkv_project(
+                layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            )
+            cos, sin = layers.rope_frequencies(cfg.head_dim, cfg.rope_theta,
+                                               posv[None])
+            q = layers.apply_rope(q, cos, sin)
+            k = layers.apply_rope(k, cos, sin)
+            ck = jax.lax.dynamic_update_slice(
+                layer_cache["k"], k, (0, posv, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                layer_cache["v"], v, (0, posv, 0, 0)
+            )
+            out = decode_attention(q, ck, cv, cache_len=posv + 1, window=cfg.window)
+            out = layers.out_project(layer_params["attn"], out)
+            new_cache = {"k": ck, "v": cv}
+        h = h + out
+        z = layers.rmsnorm(layer_params["ln_ffn"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            # without the mesh the dispatch falls back to the dense
+            # single-shard path, which all-gathers the full expert bank
+            # per layer (15 GiB of temps on moonshot decode_32k).
+            f = moe.moe_ffn(layer_params["ffn"], cfg, z, mesh=mesh,
+                            dp_axes=dp_axes)
+        elif cfg.d_ff:
+            f = layers.swiglu(layer_params["ffn"], z)
+        else:
+            f = 0.0
+        return h + f, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x), new_cache

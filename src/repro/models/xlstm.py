@@ -1,0 +1,268 @@
+"""xLSTM (arXiv:2405.04517): mLSTM + sLSTM blocks, no FFN (xlstm-125m).
+
+mLSTM blocks use the chunkwise-parallel matrix-memory recurrence
+(models/ssm.py engine with the normalizer) — O(1) state per head, which is
+why xlstm-125m runs the `long_500k` decode cell that full-attention archs
+skip. sLSTM blocks (scalar memory + block-diagonal recurrent gate mixing)
+are inherently sequential and run as a `lax.scan` over time.
+
+Block layout follows the paper's 7:1 mLSTM:sLSTM ratio via
+`slstm_layers` (default layers 5 and 11 of 12 are sLSTM).
+
+Numerics adaptation (DESIGN.md §7): input/forget gates use log-sigmoid
+(bounded <= 0) instead of the paper's exp-input-gate + running-max
+stabilizer; the chunked engine then needs no stabilizer state. Parity
+between the chunked and step forms is property-tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ArchConfig
+from repro.models.ssm import causal_conv1d, gla_chunked, gla_step
+
+SLSTM_DEFAULT = (5, 11)
+
+
+def slstm_layers(cfg: ArchConfig):
+    return tuple(i for i in SLSTM_DEFAULT if i < cfg.n_layers)
+
+
+def init_mlstm_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    di = 2 * d  # up-projection factor 2
+    h = cfg.n_heads
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": layers.rmsnorm_init(d),
+        "w_up": layers.uniform_init(ks[0], (d, di)),
+        "w_z": layers.uniform_init(ks[1], (d, di)),
+        "conv": layers.uniform_init(ks[2], (cfg.ssm_conv, di), scale=0.3),
+        "wq": layers.uniform_init(ks[3], (di, di)),
+        "wk": layers.uniform_init(ks[4], (di, di)),
+        "wv": layers.uniform_init(ks[5], (di, di)),
+        "w_gates": layers.uniform_init(ks[6], (di, 2 * h), scale=di**-0.5),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((h,), jnp.float32), 2.0 * jnp.ones((h,), jnp.float32)]
+        ),  # forget-gate bias ~2: long memory at init
+        "gn": layers.rmsnorm_init(di),
+        "w_down": layers.uniform_init(ks[7], (di, d)),
+    }
+
+
+def _mlstm_qkv(p, cfg: ArchConfig, x, conv_state=None):
+    """Shared train/decode projections. x (B, T, d)."""
+    dt = x.dtype
+    h = cfg.n_heads
+    xn = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    xm = jnp.einsum("btd,de->bte", xn, p["w_up"].astype(dt))
+    z = jnp.einsum("btd,de->bte", xn, p["w_z"].astype(dt))
+    xc, conv_state = causal_conv1d(xm, p["conv"], state=conv_state)
+    xc = jax.nn.silu(xc)
+    di = xm.shape[-1]
+    dh = di // h
+
+    def heads(t):
+        return t.reshape(t.shape[0], t.shape[1], h, dh).transpose(0, 2, 1, 3)
+
+    q = heads(jnp.einsum("bte,ef->btf", xc, p["wq"].astype(dt)))
+    k = heads(jnp.einsum("bte,ef->btf", xc, p["wk"].astype(dt))) * dh**-0.5
+    v = heads(jnp.einsum("bte,ef->btf", xm, p["wv"].astype(dt)))
+    gates = jnp.einsum("bte,eg->btg", xc, p["w_gates"].astype(dt)) + p[
+        "b_gates"
+    ].astype(dt)
+    i_log = jax.nn.log_sigmoid(gates[..., :h].astype(jnp.float32))
+    f_log = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))
+    # (B, H, T) gate layout
+    return q, k, v, i_log.transpose(0, 2, 1), f_log.transpose(0, 2, 1), z, conv_state
+
+
+def mlstm_block(p, cfg: ArchConfig, x):
+    """Train/prefill. x (B, S, d) -> (x + out, (S, n) final state)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q, k, v, i_log, f_log, z, _ = _mlstm_qkv(p, cfg, x)
+    y, state = gla_chunked(q, k, v, f_log, i_log, chunk=cfg.chunk, normalize=True)
+    di = 2 * d
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, di)
+    y = layers.rmsnorm(p["gn"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["w_down"].astype(dt))
+    return x + out, state
+
+
+def mlstm_decode(p, cfg: ArchConfig, x, cache):
+    """One step. x (B, 1, d); cache {"s","n","conv"}."""
+    dt = x.dtype
+    b, _, d = x.shape
+    h = cfg.n_heads
+    q, k, v, i_log, f_log, z, conv_state = _mlstm_qkv(
+        p, cfg, x, conv_state=cache["conv"]
+    )
+    y, (s_new, n_new) = gla_step(
+        q[:, :, 0], k[:, :, 0], v[:, :, 0],
+        f_log[:, :, 0], i_log[:, :, 0],
+        (cache["s"], cache["n"]), normalize=True,
+    )
+    di = 2 * d
+    y = y.reshape(b, 1, di)
+    y = layers.rmsnorm(p["gn"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["w_down"].astype(dt))
+    return x + out, {"s": s_new, "n": n_new, "conv": conv_state}
+
+
+# --- sLSTM ------------------------------------------------------------------
+
+
+def init_slstm_block(key, cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": layers.rmsnorm_init(d),
+        "w_gates": layers.uniform_init(ks[0], (d, 4 * d)),  # i, f, z, o
+        "r_gates": layers.uniform_init(ks[1], (4, h, dh, dh), scale=dh**-0.5),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "gn": layers.rmsnorm_init(d),
+        "w_out": layers.uniform_init(ks[2], (d, d)),
+    }
+
+
+def slstm_block(p, cfg: ArchConfig, x, state=None):
+    """Sequential sLSTM. x (B, S, d). state: dict(c, n, h) each (B, d)."""
+    dt = x.dtype
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xn = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    wx = jnp.einsum("btd,dg->btg", xn, p["w_gates"].astype(dt)) + p["b_gates"].astype(dt)
+    if state is None:
+        state = {
+            "c": jnp.zeros((b, d), jnp.float32),
+            "n": jnp.ones((b, d), jnp.float32),
+            "h": jnp.zeros((b, d), jnp.float32),
+        }
+    r = p["r_gates"].astype(jnp.float32)
+
+    def step(st, wx_t):
+        hprev = st["h"].reshape(b, h, dh)
+        rec = jnp.stack(
+            [jnp.einsum("bhx,hxy->bhy", hprev, r[g]) for g in range(4)], axis=-2
+        )  # (B, H, 4, dh)
+        g = wx_t.astype(jnp.float32).reshape(b, h, 4, dh) + rec
+        i = jnp.exp(jax.nn.log_sigmoid(g[..., 0, :]))
+        f = jax.nn.sigmoid(g[..., 1, :])
+        zz = jnp.tanh(g[..., 2, :])
+        o = jax.nn.sigmoid(g[..., 3, :])
+        c = f * st["c"].reshape(b, h, dh) + i * zz
+        n = f * st["n"].reshape(b, h, dh) + i
+        hh = o * c / jnp.maximum(n, 1.0)
+        new = {"c": c.reshape(b, d), "n": n.reshape(b, d), "h": hh.reshape(b, d)}
+        return new, hh.reshape(b, d)
+
+    # time-major scan
+    state, ys = jax.lax.scan(step, state, wx.transpose(1, 0, 2))
+    y = ys.transpose(1, 0, 2).astype(dt)  # (B, S, d)
+    y = layers.rmsnorm(p["gn"], y, cfg.norm_eps)
+    out = jnp.einsum("btd,de->bte", y, p["w_out"].astype(dt))
+    return x + out, state
+
+
+# --- model ------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig):
+    ke, kb = jax.random.split(key)
+    bkeys = jax.random.split(kb, cfg.n_layers)
+    sset = set(slstm_layers(cfg))
+    blocks = [
+        init_slstm_block(bkeys[i], cfg) if i in sset else init_mlstm_block(bkeys[i], cfg)
+        for i in range(cfg.n_layers)
+    ]
+    return {
+        "embed": layers.embedding_init(ke, cfg.padded_vocab, cfg.d_model),
+        "blocks": blocks,  # heterogeneous: python list, not scanned
+        "ln_f": layers.rmsnorm_init(cfg.d_model),
+    }
+
+
+def forward(params, cfg: ArchConfig, tokens, **_):
+    x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
+    sset = set(slstm_layers(cfg))
+    for i, bp in enumerate(params["blocks"]):
+        if i in sset:
+            x, _ = slstm_block(bp, cfg, x)
+        else:
+            x, _ = mlstm_block(bp, cfg, x)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Recurrent state — O(1) in max_len (the long_500k story)."""
+    del max_len
+    d = cfg.d_model
+    h = cfg.n_heads
+    di = 2 * d
+    dh = di // h
+    sset = set(slstm_layers(cfg))
+    caches = []
+    for i in range(cfg.n_layers):
+        if i in sset:
+            caches.append({
+                "c": jnp.zeros((batch, d), jnp.float32),
+                "n": jnp.ones((batch, d), jnp.float32),
+                "h": jnp.zeros((batch, d), jnp.float32),
+            })
+        else:
+            caches.append({
+                "s": jnp.zeros((batch, h, dh, dh), jnp.float32),
+                "n": jnp.zeros((batch, h, dh), jnp.float32),
+                "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), cfg.compute_dtype),
+            })
+    return caches
+
+
+def prefill(params, cfg: ArchConfig, tokens, *, max_len=None, **_):
+    """Run the prompt; returns (last-position logits, cache)."""
+    x = layers.embed(params["embed"], tokens, cfg.compute_dtype)
+    sset = set(slstm_layers(cfg))
+    caches = []
+    b = tokens.shape[0]
+    for i, bp in enumerate(params["blocks"]):
+        if i in sset:
+            x, st = slstm_block(bp, cfg, x)
+            caches.append(st)
+        else:
+            # carry conv tail + final (S, n)
+            q = x
+            x, (s_f, n_f) = mlstm_block(bp, cfg, x)
+            dt = cfg.compute_dtype
+            xn = layers.rmsnorm(bp["ln"], q, cfg.norm_eps)
+            xm = jnp.einsum("btd,de->bte", xn, bp["w_up"].astype(dt))
+            tail = xm[:, -(cfg.ssm_conv - 1):]
+            pad = cfg.ssm_conv - 1 - tail.shape[1]
+            if pad:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            caches.append({"s": s_f, "n": n_f, "conv": tail})
+    x = layers.rmsnorm(params["ln_f"], x[:, -1:], cfg.norm_eps)
+    return layers.unembed(params["embed"], x), caches
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos):
+    del pos  # recurrent: position-free
+    x = layers.embed(params["embed"], token, cfg.compute_dtype)
+    sset = set(slstm_layers(cfg))
+    new_caches = []
+    for i, bp in enumerate(params["blocks"]):
+        if i in sset:
+            x, st = slstm_block(bp, cfg, x, state=cache[i])
+            new_caches.append(st)
+        else:
+            x, st = mlstm_decode(bp, cfg, x, cache[i])
+            new_caches.append(st)
+    x = layers.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return layers.unembed(params["embed"], x), new_caches

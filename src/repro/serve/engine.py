@@ -1,0 +1,60 @@
+"""Batched serving engine: prefill once, decode greedily with a KV cache.
+
+Minimal but real: static-shape batched decode (jit'd step), greedy or
+temperature sampling, per-sequence stop handling via an alive mask. Used
+by examples/serve_decode.py and the decode benchmark cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelApi
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    eos_id: int = -1  # -1: never stop early
+
+
+def generate(model: ModelApi, params, batch, cfg: ServeConfig,
+             *, rng=None):
+    """batch: the prefill inputs (tokens [+frames/patch_embeds]).
+
+    Returns (generated (B, max_new_tokens) int32, steps executed).
+    """
+    prompt = batch["tokens"]
+    b, s = prompt.shape
+    prefix = getattr(model.cfg, "vlm_prefix", 0) if model.cfg.family == "vlm" else 0
+    max_len = s + prefix + cfg.max_new_tokens + 1
+    logits, cache = model.prefill(params, batch, max_len=max_len)
+
+    step_fn = jax.jit(model.decode_step)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def sample(lg, key):
+        lg = lg[:, -1]
+        if cfg.temperature > 0:
+            return jax.random.categorical(key, lg / cfg.temperature)
+        return jnp.argmax(lg, axis=-1)
+
+    toks = []
+    key = rng
+    key, sub = jax.random.split(key)
+    nxt = sample(logits, sub).astype(jnp.int32)
+    alive = jnp.ones((b,), bool)
+    pos = s + prefix
+    for _ in range(cfg.max_new_tokens):
+        nxt = jnp.where(alive, nxt, 0)
+        toks.append(nxt)
+        if cfg.eos_id >= 0:
+            alive = alive & (nxt != cfg.eos_id)
+        logits, cache = step_fn(params, cache, nxt[:, None], jnp.int32(pos))
+        key, sub = jax.random.split(key)
+        nxt = sample(logits, sub).astype(jnp.int32)
+        pos += 1
+    return jnp.stack(toks, axis=1), cfg.max_new_tokens

@@ -1,0 +1,84 @@
+"""int8 gradient compression with error feedback for the cross-pod link.
+
+In the 2x16x16 multi-pod mesh the gradient all-reduce crosses the DCN 'pod'
+axis — the slowest link by an order of magnitude. This module compresses
+that hop: per-tensor int8 quantization, all_gather of the int8 payloads
+over 'pod' (1 byte/element on the wire instead of 4), local dequant-sum,
+plus an error-feedback residual carried in the training state so the
+quantization error is re-injected next step (Karimireddy et al. EF-SGD).
+
+This is a beyond-paper distributed-optimization feature (DESIGN.md §9);
+the paper's own system has no gradient stage at all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize_int8(x):
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_mean_shard(x, axis: str):
+    """Per-device body: int8 all_gather over `axis`, local dequant mean."""
+    n = jax.lax.axis_size(axis)
+    q, scale = quantize_int8(x)
+    qs = jax.lax.all_gather(q, axis)  # (n, ...) int8 on the wire
+    scales = jax.lax.all_gather(scale, axis)  # (n,) f32 (negligible bytes)
+    deq = qs.astype(jnp.float32) * scales.reshape((n,) + (1,) * x.ndim)
+    return jnp.sum(deq, axis=0) / n
+
+
+def compressed_pod_mean(grads, mesh, *, axis: str = "pod"):
+    """Mean gradients across the pod axis with int8 wire format.
+
+    grads: pytree whose leaves are already identical within a pod (the
+    intra-pod reduction having been done at full precision by GSPMD). Leaves
+    are replicated over `axis`? No — each pod holds its own partial mean;
+    this exchanges them. Runs under shard_map with everything else
+    replicated w.r.t. the pod axis.
+    """
+    if axis not in mesh.axis_names:
+        return grads
+
+    flat, treedef = jax.tree.flatten(grads)
+
+    def body(*leaves):
+        return tuple(compressed_mean_shard(l, axis) for l in leaves)
+
+    specs = tuple(P(*([None] * l.ndim)) for l in flat)
+    out = jax.shard_map(
+        body, mesh=mesh, in_specs=specs, out_specs=specs, check_vma=False
+    )(*flat)
+    return treedef.unflatten(list(out))
+
+
+def ef_compress_grads(grads, residual):
+    """Error feedback: g' = Q(g + r); r' = (g + r) - g'. Pure local transform
+    (simulates the end-to-end numerics of the compressed reduce for tests).
+    """
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(corrected)
+        deq = dequantize(q, scale)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,80 @@
+"""Training step: loss -> grad -> (optional EF-int8 pod reduce) -> AdamW.
+
+Microbatching (gradient accumulation) runs as a `lax.scan` over microbatch
+slices; remat is configured per-arch inside the model (scan-over-layers +
+jax.checkpoint). Mixed precision: params f32 master, compute bf16 (cast in
+the model), grads f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import grad_compress as gc
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1  # grad-accumulation steps per train step
+    pod_grad_compress: bool = False  # int8 EF reduce over the 'pod' axis
+
+
+def init_train_state(model, key, tcfg: TrainConfig):
+    params = model.init(key)
+    state = {"params": params, "opt": init_opt_state(params)}
+    if tcfg.pod_grad_compress:
+        state["ef_residual"] = gc.init_residual(params)
+    return state
+
+
+def abstract_train_state(model, tcfg: TrainConfig):
+    return jax.eval_shape(lambda k: init_train_state(model, k, tcfg),
+                          jax.random.PRNGKey(0))
+
+
+def make_train_step(model, tcfg: TrainConfig, *, mesh=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(model.loss)(params, batch)
+
+        def micro(carry, mb):
+            loss, acc = carry
+            l, g = jax.value_and_grad(model.loss)(params, mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return (loss + l, acc), None
+
+        def split(x):
+            b = x.shape[0]
+            m = tcfg.microbatches
+            return x.reshape((m, b // m) + x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        (loss, gsum), _ = jax.lax.scan(micro, (jnp.float32(0.0), zero), mbs)
+        inv = 1.0 / tcfg.microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def train_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_state = dict(state)
+        if tcfg.pod_grad_compress and "ef_residual" in state:
+            grads, residual = gc.ef_compress_grads(grads, state["ef_residual"])
+            if mesh is not None and "pod" in mesh.axis_names:
+                grads = gc.compressed_pod_mean(grads, mesh)
+            new_state["ef_residual"] = residual
+        params, opt, info = adamw_update(state["params"], grads, state["opt"],
+                                         tcfg.opt)
+        new_state["params"] = params
+        new_state["opt"] = opt
+        metrics = {"loss": loss, **info}
+        return new_state, metrics
+
+    return train_step

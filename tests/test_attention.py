@@ -1,0 +1,151 @@
+"""flash_attention vs naive softmax reference: causal, windowed, sinks,
+non-causal, GQA, distinct v-dim, ragged lengths, causal_skip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention
+
+RNG = np.random.default_rng(7)
+
+
+def naive(q, k, v, *, causal=True, window=0, n_sink=0):
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qf = q.astype(np.float32).reshape(b, sq, kv, g, dh)
+    s = np.einsum("bqkgd,bskd->bkgqs", qf, np.asarray(k, np.float32)) * dh**-0.5
+    qpos = np.arange(sq)[:, None]
+    kpos = np.arange(k.shape[1])[None, :]
+    mask = np.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        in_w = kpos > qpos - window
+        if n_sink:
+            in_w |= kpos < n_sink
+        mask &= in_w
+    s = np.where(mask, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / np.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = np.einsum("bkgqs,bskd->bqkgd", p, np.asarray(v, np.float32))
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def make(b=2, sq=64, sk=64, h=4, kv=2, dh=16, dv=None):
+    dv = dv or dh
+    q = jnp.asarray(RNG.normal(size=(b, sq, h, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, sk, kv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, sk, kv, dv)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_causal_matches_naive(chunk):
+    q, k, v = make()
+    out = flash_attention(q, k, v, causal=True, chunk=chunk)
+    np.testing.assert_allclose(out, naive(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_gqa_and_vdim():
+    q, k, v = make(h=8, kv=2, dh=24, dv=16)
+    out = flash_attention(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(out, naive(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_window_and_sink():
+    q, k, v = make(sq=96, sk=96)
+    out = flash_attention(q, k, v, causal=True, window=24, chunk=16, n_sink=4)
+    np.testing.assert_allclose(
+        out, naive(q, k, v, window=24, n_sink=4), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_noncausal_cross():
+    q, k, v = make(sq=48, sk=80)
+    out = flash_attention(q, k, v, causal=False, chunk=16)
+    np.testing.assert_allclose(out, naive(q, k, v, causal=False), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("sq", [3, 17, 33, 50])
+def test_ragged_lengths(sq):
+    q, k, v = make(sq=sq, sk=sq)
+    out = flash_attention(q, k, v, causal=True, chunk=16)
+    np.testing.assert_allclose(out, naive(q, k, v), rtol=2e-5, atol=2e-5)
+
+
+def test_ragged_noncausal():
+    q, k, v = make(sq=10, sk=37)
+    out = flash_attention(q, k, v, causal=False, chunk=16)
+    np.testing.assert_allclose(out, naive(q, k, v, causal=False), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_causal_skip_identical():
+    q, k, v = make(sq=64, sk=64)
+    base = flash_attention(q, k, v, causal=True, chunk=16)
+    skip = flash_attention(q, k, v, causal=True, chunk=16, causal_skip=True)
+    np.testing.assert_allclose(base, skip, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_matches_last_row():
+    q, k, v = make(sq=32, sk=32)
+    full = flash_attention(q, k, v, causal=True, chunk=16)
+    out = decode_attention(q[:, -1:], k, v, cache_len=jnp.int32(32))
+    np.testing.assert_allclose(out[:, 0], full[:, -1], rtol=2e-5, atol=2e-5)
+
+
+def test_grad_finite():
+    q, k, v = make(sq=32, sk=32)
+
+    def f(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, chunk=8) ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    for t in g:
+        assert bool(jnp.isfinite(t).all())
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_qfull_mode_matches_naive(window):
+    """q_chunk=0 (no global q-chunk loop — the attn_sharding='qfull' path)
+    must be numerically identical to the chunked grid and the reference."""
+    q, k, v = make(sq=50, sk=50)
+    out = flash_attention(q, k, v, causal=True, window=window, chunk=16,
+                          q_chunk=0)
+    ref = naive(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+    grid = flash_attention(q, k, v, causal=True, window=window, chunk=16)
+    np.testing.assert_allclose(out, grid, rtol=1e-6, atol=1e-6)
+
+
+def test_qfull_with_sink_tokens():
+    q, k, v = make(sq=64, sk=64)
+    out = flash_attention(q, k, v, causal=True, window=24, n_sink=8,
+                          chunk=16, q_chunk=0)
+    ref = naive(q, k, v, causal=True, window=24, n_sink=8)
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_additive_bias_fully_masked_chunk_is_zero():
+    """A chunk whose every key is masked (e.g. a strictly-future kv chunk
+    under causal masking) must leave acc/l at 0 and produce no NaN — the
+    alpha/row_live guards in _attn_chunk_step."""
+    from repro.models.attention import NEG_INF, _attn_chunk_step
+
+    b, cq, ck, kv, g, dh = 1, 4, 4, 1, 2, 8
+    q = jnp.asarray(RNG.normal(size=(b, cq, kv, g, dh)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, ck, kv, dh)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, ck, kv, dh)), jnp.float32)
+    acc = jnp.zeros((b, kv, g, cq, dh), jnp.float32)
+    m = jnp.full((b, kv, g, cq), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, kv, g, cq), jnp.float32)
+    q_pos = jnp.arange(4, dtype=jnp.int32)          # rows 0..3
+    k_pos = jnp.arange(100, 104, dtype=jnp.int32)   # all keys in the future
+    acc2, m2, l2 = _attn_chunk_step(acc, m, l, q, k, v, q_pos, k_pos,
+                                    causal=True, window=0, scale=1.0)
+    assert not bool(jnp.isnan(acc2).any())
+    np.testing.assert_array_equal(np.asarray(acc2), 0.0)
+    np.testing.assert_array_equal(np.asarray(l2), 0.0)

@@ -1,0 +1,50 @@
+"""The paper's TCO model (Table 2) must reproduce to the cent."""
+import pytest
+
+from repro.core.cost_model import (CostBreakdown, Ec2CostParams, JobProfile,
+                                   cloudsort_tco, tpu_cloudsort_tco,
+                                   tpu_sort_time_model)
+
+
+def test_equation_1_hourly_cost():
+    p = Ec2CostParams()
+    # paper: $55.6044/hr
+    assert p.cluster_hourly == pytest.approx(55.6044, abs=1e-3)
+
+
+def test_table2_compute():
+    b = cloudsort_tco()
+    assert b.compute == pytest.approx(83.0674, abs=1e-3)
+
+
+def test_table2_storage():
+    b = cloudsort_tco()
+    assert b.storage_input == pytest.approx(4.6045, abs=1e-3)
+    assert b.storage_output == pytest.approx(1.6009, abs=1e-3)
+
+
+def test_table2_access():
+    b = cloudsort_tco()
+    assert b.access_get == pytest.approx(2.4000, abs=1e-6)
+    assert b.access_put == pytest.approx(5.0000, abs=1e-6)
+
+
+def test_table2_total():
+    assert cloudsort_tco().total == pytest.approx(96.6728, abs=5e-3)
+
+
+def test_s3_hourly_rate():
+    # paper: $3.0822/hr per 100 TB
+    assert Ec2CostParams().s3_hourly_per_100tb() == pytest.approx(3.0822, abs=1e-3)
+
+
+def test_tpu_model_late_beats_through_on_memory():
+    t_through = tpu_sort_time_model(100e12, payload_mode="through")
+    t_late = tpu_sort_time_model(100e12, payload_mode="late")
+    assert t_late["t_memory_s"] < t_through["t_memory_s"]
+
+
+def test_tpu_tco_has_all_legs():
+    b = tpu_cloudsort_tco()
+    assert b.total > 0
+    assert b.compute > 0 and b.access_put == pytest.approx(5.0)

@@ -1,0 +1,180 @@
+"""Validate the trip-count-weighted HLO cost analyzer against XLA's own
+cost_analysis() on loop-free programs, and check the while-loop weighting
+that XLA's analysis lacks (scan bodies counted once)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze, parse_module
+
+
+def _compile(f, *specs, **jit_kw):
+    return jax.jit(f, **jit_kw).lower(*specs).compile()
+
+
+def test_matmul_flops_match_xla():
+    x = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    w = jax.ShapeDtypeStruct((512, 384), jnp.float32)
+    c = _compile(lambda a, b: a @ b, x, w)
+    ours = analyze(c.as_text())
+    theirs = c.cost_analysis()
+    assert ours["flops"] == pytest.approx(2 * 256 * 512 * 384, rel=0.01)
+    assert ours["flops"] == pytest.approx(theirs["flops"], rel=0.05)
+
+
+def test_loop_free_bytes_close_to_xla():
+    x = jax.ShapeDtypeStruct((1024, 1024), jnp.bfloat16)
+
+    def f(a):
+        return (jnp.tanh(a @ a) * 2.0).sum()
+
+    c = _compile(f, x)
+    ours = analyze(c.as_text())
+    theirs = c.cost_analysis()
+    # conventions differ on fusion internals; agree within 2x and never
+    # undercount by more than 50%
+    assert ours["bytes"] >= 0.5 * theirs["bytes accessed"]
+    assert ours["bytes"] <= 3.0 * theirs["bytes accessed"]
+
+
+@pytest.mark.parametrize("length", [4, 22])
+def test_scan_flops_scale_with_trip_count(length):
+    n = 128
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    ws = jax.ShapeDtypeStruct((length, n, n), jnp.float32)
+    c = _compile(f, x, ws)
+    ours = analyze(c.as_text())
+    theirs = c.cost_analysis()
+    per_iter = 2 * n * n * n
+    # XLA counts the body once; we count it trip times.
+    assert theirs["flops"] == pytest.approx(per_iter, rel=0.15)
+    assert ours["flops"] == pytest.approx(length * per_iter, rel=0.15)
+    assert ours["while_trips"] and max(
+        ours["while_trips"].values()) == length
+    assert not ours["unknown_trip_loops"]
+
+
+def test_scan_matches_unrolled_reference():
+    """Weighted scan cost == XLA's cost of the fully unrolled program."""
+    n, length = 64, 8
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def scanned(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    def unrolled(x, ws):
+        for i in range(length):
+            x, _ = body(x, ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    ws = jax.ShapeDtypeStruct((length, n, n), jnp.float32)
+    ours = analyze(_compile(scanned, x, ws).as_text())["flops"]
+    ref = _compile(unrolled, x, ws).cost_analysis()["flops"]
+    assert ours == pytest.approx(ref, rel=0.1)
+
+
+def test_nested_scan_trip_product():
+    n, inner, outer = 32, 5, 7
+
+    def f(x):
+        def obody(c, _):
+            def ibody(d, _):
+                return jnp.tanh(d @ d), None
+            d, _ = jax.lax.scan(ibody, c, None, length=inner)
+            return d, None
+        y, _ = jax.lax.scan(obody, x, None, length=outer)
+        return y
+
+    c = _compile(f, jax.ShapeDtypeStruct((n, n), jnp.float32))
+    ours = analyze(c.as_text())
+    per = 2 * n ** 3
+    assert ours["flops"] == pytest.approx(inner * outer * per, rel=0.2)
+
+
+def test_collectives_weighted_by_trip(run_in_subprocess=None):
+    # needs >1 device; exercised via tests/test_exoshuffle-style subprocess
+    from helpers import run_with_devices
+
+    run_with_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding, AxisType
+from repro.launch.hlo_cost import analyze
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+L, n = 6, 128
+
+def f(x, ws):
+    def body(c, w):
+        y = c @ w      # sharded contraction -> all-reduce per iter
+        return jnp.tanh(y), None
+    y, _ = jax.lax.scan(body, x, ws)
+    return y.sum()
+
+x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+ws = jax.ShapeDtypeStruct((L, n, n), jnp.float32)
+with mesh:
+    c = jax.jit(f, in_shardings=(
+        NamedSharding(mesh, P("data", "model")),
+        NamedSharding(mesh, P(None, "model", None)),
+    )).lower(x, ws).compile()
+res = analyze(c.as_text())
+ar = res["collective_bytes"].get("all-reduce", 0)
+# one all-reduce of a (n/2, n) f32 slab per scan iteration, plus the
+# final scalar loss reduction; weighting must multiply by L
+per_iter = (n // 2) * n * 4
+assert ar >= L * per_iter, (ar, L * per_iter, res["collective_bytes"])
+assert max(res["while_trips"].values()) == L
+print("OK")
+""")
+
+
+def test_scan_param_slice_bytes_not_quadratic():
+    """Scan bodies dynamic-slice per-layer params out of the (L, ...) stack;
+    bytes must charge the slice (slab), not the whole stack, per iteration —
+    total ~= one pass over the stack, not L passes."""
+    n, length = 256, 16
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    ws = jax.ShapeDtypeStruct((length, n, n), jnp.float32)
+    res = analyze(_compile(f, x, ws).as_text())
+    stack_bytes = length * n * n * 4
+    # one pass over the stack + per-iter activations (handful of n*n slabs)
+    assert res["bytes"] < 3 * stack_bytes + length * 8 * n * n * 4
+    assert res["bytes"] > stack_bytes  # at least reads every param once
+
+
+def test_parse_module_structure():
+    txt = """
+HloModule m
+%comp.1 (p: f32[2]) -> f32[2] {
+  %p = f32[2]{0} parameter(0)
+  ROOT %t = f32[2]{0} tanh(%p)
+}
+ENTRY %main (a: f32[2]) -> f32[2] {
+  %a = f32[2]{0} parameter(0)
+  ROOT %c = f32[2]{0} call(%a), to_apply=%comp.1
+}
+"""
+    comps, entry = parse_module(txt)
+    assert entry == "main"
+    assert set(comps) == {"comp.1", "main"}
+    assert comps["main"].instrs[-1].opcode == "call"

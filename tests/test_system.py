@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the paper's system: the CloudSort smoke
+benchmark (generate -> two-stage streaming sort -> valsort gate) and the
+dry-run machinery on a small mesh covering every architecture family.
+"""
+import pytest
+
+from helpers import run_with_devices
+
+
+def test_cloudsort_smoke_end_to_end():
+    """The paper's full pipeline at SMOKE scale (§2): gensort input, R1
+    reducer ranges, streaming two-stage sort, valsort total-order +
+    checksum validation."""
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.configs.cloudsort import SMOKE
+from repro.core.exoshuffle import ShuffleConfig
+from repro.core.streaming import streaming_sort
+from repro.data import gensort, valsort
+
+mesh = jax.make_mesh((8,), ("w",), axis_types=(AxisType.Auto,))
+cfg = ShuffleConfig(num_workers=SMOKE.num_workers,
+                    reducers_per_worker=SMOKE.reducers_per_worker,
+                    num_rounds=SMOKE.num_rounds, impl=SMOKE.impl)
+keys, ids = gensort.gen_keys(0, SMOKE.total_records)
+in_ck = tuple(int(c) for c in gensort.checksum(keys, ids))
+sk, si, counts, ovf = jax.jit(lambda k, i: streaming_sort(
+    k, i, mesh=mesh, axis_names="w", num_rounds=cfg.num_rounds, cfg=cfg))(keys, ids)
+assert not bool(ovf), "block overflow at smoke scale"
+ks, iss, _ = valsort.slice_segments(sk, si, counts)
+rep = valsort.validate(ks, iss, in_ck)
+assert rep.ok, rep
+assert rep.total_records == SMOKE.total_records
+print("CloudSort smoke OK:", rep.total_records, "records")
+""", timeout=900)
+
+
+@pytest.mark.parametrize("arch_id", [
+    "tinyllama-1.1b",      # dense / tp
+    "granite-3-8b",        # dense / fsdp
+    "minicpm3-4b",         # mla
+    "qwen2-moe-a2.7b",     # moe / sort dispatch
+    "xlstm-125m",          # ssm
+    "whisper-base",        # encdec
+    "hymba-1.5b",          # hybrid
+])
+def test_dryrun_machinery_small_mesh(arch_id):
+    """lower+compile a reduced config through the real dryrun cell builders
+    on a 2x4 mesh — exercises sharding rules for every family."""
+    run_with_devices(f"""
+import dataclasses, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from repro.configs import get
+from repro.launch import sharding as shd
+from repro.launch.dryrun import block_specs_of
+from repro.models import api as mapi
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, make_train_step
+from repro.models.whisper import enc_len_for
+
+mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+cfg = get("{arch_id}").reduced(d_model=128, n_heads=8, n_kv_heads=4, d_head=16,
+                               vocab=512)
+if cfg.is_moe:
+    cfg = dataclasses.replace(cfg, dispatch_impl="sort", n_experts=16, top_k=2)
+model0 = mapi.build(cfg, mesh=mesh, dp_axes=("data",))
+ap = model0.abstract_params()
+p_specs = shd.param_pspecs(cfg, ap, mesh)
+bspecs = block_specs_of(cfg, p_specs)
+model = mapi.build(cfg, mesh=mesh, dp_axes=("data",), block_specs=bspecs)
+B, S = 4, 64
+sd = jax.ShapeDtypeStruct
+specs = {{"tokens": sd((B, S), jnp.int32), "labels": sd((B, S), jnp.int32)}}
+if cfg.family == "vlm":
+    specs["patch_embeds"] = sd((B, cfg.vlm_prefix, cfg.d_model), jnp.float32)
+    specs["labels"] = sd((B, S + cfg.vlm_prefix), jnp.int32)
+if cfg.family == "encdec":
+    specs["frames"] = sd((B, enc_len_for(cfg, S), cfg.d_model), jnp.float32)
+b_specs = shd.batch_pspecs(cfg, specs, mesh)
+tcfg = TrainConfig(opt=OptConfig())
+step = make_train_step(model, tcfg, mesh=mesh)
+from repro.train.optimizer import init_opt_state
+abstract = jax.eval_shape(lambda k: (lambda p: {{"params": p, "opt": init_opt_state(p)}})(model.init(k)), jax.random.PRNGKey(0))
+state_specs = {{"params": p_specs, "opt": {{"mu": p_specs, "nu": p_specs, "step": P()}}}}
+in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs, is_leaf=lambda x: isinstance(x, P)),
+         jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs, is_leaf=lambda x: isinstance(x, P)))
+c = jax.jit(step, in_shardings=in_sh, out_shardings=(in_sh[0], None),
+            donate_argnums=(0,)).lower(abstract, specs).compile()
+ca = c.cost_analysis()
+assert ca.get("flops", 0) > 0
+print("OK", "{arch_id}", int(ca.get("flops", 0)))
+""", timeout=900)

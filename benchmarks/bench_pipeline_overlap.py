@@ -38,9 +38,9 @@ def run(n_records: int = 1 << 17, rounds: int = 8):
             ("overlap_factor", 0.0, 1.0),
         ]
 
-    from jax.sharding import AxisType
+    from repro.core.compat import make_mesh
 
-    mesh = jax.make_mesh((8,), ("w",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("w",))
     keys, ids = gensort.gen_keys(0, n_records)
     cfg = ShuffleConfig(num_workers=8, impl="ref", num_rounds=rounds)
 

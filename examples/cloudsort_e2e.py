@@ -36,7 +36,8 @@ def main():
     args = ap.parse_args()
 
     w = len(jax.devices())
-    mesh = jax.make_mesh((w,), ("w",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((w,), ("w",))
     cfg = ShuffleConfig(num_workers=w, reducers_per_worker=SMOKE.reducers_per_worker,
                         impl="ref")
 

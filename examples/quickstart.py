@@ -20,8 +20,8 @@ from repro.data import gensort, valsort
 
 
 def main():
-    mesh = jax.make_mesh((len(jax.devices()),), ("w",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((len(jax.devices()),), ("w",))
     n = 8 * 4096
     keys, ids = gensort.gen_keys(0, n)
     input_checksum = tuple(int(c) for c in gensort.checksum(keys, ids))

@@ -40,8 +40,8 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/exoshuffle_moe_ckpt")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     # ~100M-class MoE of the qwen2-moe family, exoshuffle sort dispatch
     cfg = dataclasses.replace(
         get("qwen2-moe-a2.7b"),

@@ -56,3 +56,25 @@ POD512 = CloudSortConfig(
     num_rounds=8,
     impl="ref",
 )
+
+
+def ooc_smoke_plan():
+    """Out-of-core smoke schedule (examples/cloudsort_oocore.py, tests).
+
+    A 2^14-record wave working set against a >=4x larger store-resident
+    dataset: 8 map waves at the default 2^17 records, each wave split into
+    2 streaming rounds, 2 input partitions per wave, 64 KiB download
+    chunks. Lazily imported so configs stay importable without jax.
+    """
+    from repro.core.external_sort import ExternalSortPlan
+
+    return ExternalSortPlan(
+        records_per_wave=1 << 14,
+        num_rounds=2,
+        reducers_per_worker=4,
+        payload_words=4,
+        impl="ref",
+        input_records_per_partition=1 << 13,
+        output_part_records=1 << 13,
+        store_chunk_bytes=64 << 10,
+    )

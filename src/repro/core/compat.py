@@ -1,0 +1,50 @@
+"""jax API compatibility shims.
+
+The repo is written against the current jax API — ``jax.shard_map`` with
+``check_vma``, ``jax.make_mesh`` with ``axis_types`` — but the baked
+toolchain on some containers ships jax 0.4.x, where the same functionality
+lives under ``jax.experimental.shard_map`` (``check_rep``) and ``make_mesh``
+has no axis typing. Every mesh/shard_map construction in this repo goes
+through these two wrappers so the whole system (distributed sort, MoE
+dispatch, out-of-core driver, examples, tests) runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where it exists; the 0.4.x experimental fallback
+    otherwise (``check_vma`` maps onto the old ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=bool(check_vma),
+    )
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version
+    (0.4.x wraps the per-program properties in a single-element list)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    return jax.make_mesh(
+        axis_shapes, axis_names, axis_types=(axis_type.Auto,) * len(axis_names)
+    )

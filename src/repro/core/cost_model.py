@@ -89,10 +89,18 @@ class CostBreakdown:
 
 
 def cloudsort_tco(
-    params: Ec2CostParams = Ec2CostParams(), profile: JobProfile = JobProfile()
+    params: Ec2CostParams = Ec2CostParams(),
+    profile: JobProfile = JobProfile(),
+    *,
+    data_tb: float = 100.0,
 ) -> CostBreakdown:
-    """Table 2. With default arguments returns the paper's $96.6728."""
-    s3_hr = params.s3_hourly_per_100tb()
+    """Table 2. With default arguments returns the paper's $96.6728.
+
+    `data_tb` scales the storage-hour legs for datasets other than the
+    100 TB record run; the request legs are already absolute through the
+    profile's counts.
+    """
+    s3_hr = params.s3_hourly_per_100tb() * (data_tb / 100.0)
     return CostBreakdown(
         compute=params.cluster_hourly * profile.job_hours,
         storage_input=s3_hr * profile.job_hours,
@@ -100,6 +108,37 @@ def cloudsort_tco(
         access_get=params.get_per_1000 * profile.get_requests / 1000,
         access_put=params.put_per_1000 * profile.put_requests / 1000,
     )
+
+
+def measured_job_profile(stats, *, job_hours: float, reduce_hours: float) -> JobProfile:
+    """JobProfile from *measured* store counters, not Table-1 constants.
+
+    `stats` is duck-typed: anything with .get_requests / .put_requests —
+    in practice io.object_store.StoreStats deltas captured by
+    core.external_sort (the store counts every chunked map GET, ranged
+    reduce GET, spill PUT and multipart-upload part PUT it actually served).
+    """
+    return JobProfile(
+        job_hours=job_hours,
+        reduce_hours=reduce_hours,
+        get_requests=int(stats.get_requests),
+        put_requests=int(stats.put_requests),
+    )
+
+
+def measured_cloudsort_tco(
+    stats,
+    *,
+    job_hours: float,
+    reduce_hours: float,
+    data_bytes: float,
+    params: Ec2CostParams = Ec2CostParams(),
+) -> CostBreakdown:
+    """Table 2 priced from an actual run: measured request counts and
+    timings (core.external_sort.ExternalSortReport), storage legs scaled
+    to the dataset actually sorted."""
+    profile = measured_job_profile(stats, job_hours=job_hours, reduce_hours=reduce_hours)
+    return cloudsort_tco(params, profile, data_tb=data_bytes / 1e12)
 
 
 # ---------------------------------------------------------------------------

@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import sortlib
+from repro.core import compat, sortlib
 from repro.core.keyspace import KeySpace
 
 
@@ -129,7 +129,7 @@ def distributed_sort(
     assert w & (w - 1) == 0, "worker count must be a power of two (merge tournament)"
 
     spec = P(axis)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda k, v: _sort_shard(k, v, cfg=cfg, axis=axis),
         mesh=mesh,
         in_specs=(spec, spec),
@@ -220,11 +220,12 @@ def distributed_sort_payload(
     w = int(math.prod(mesh.shape[a] for a in axis))
     if cfg is None:
         cfg = ShuffleConfig(num_workers=w, impl=impl, capacity_factor=capacity_factor)
+    assert cfg.num_workers == w, (cfg.num_workers, w)
     assert w & (w - 1) == 0
 
     spec = P(axis)
     pspec = P(axis, None)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda k, i, p: _sort_shard_payload(k, i, p, cfg=cfg, axis=axis, mode=mode),
         mesh=mesh,
         in_specs=(spec, spec, pspec),

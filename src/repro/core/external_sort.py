@@ -1,0 +1,331 @@
+"""Out-of-core external sort: the dataset lives in the object store, not HBM.
+
+This is the driver that lets the reproduction actually *pose* the CloudSort
+problem (paper §2.3–§2.5): total dataset size is bounded by object-store
+capacity, while device memory holds only one map wave's working set.
+
+Paper mapping:
+
+  map waves (§2.3, §2.5): input partitions stream from the store in ranged
+      chunks (io/object_store.get_chunks — one GET per chunk, the paper's
+      "120 chunks" map download), double-buffered against device compute
+      (io/staging.prefetch). Each wave runs the in-memory two-stage
+      streaming exoshuffle (core/streaming.py), after which every worker
+      holds one globally range-partitioned sorted run.
+
+  spill (§2.3): each worker's merged run is written back to the store as
+      one sorted run object — the paper spills to local SSD; we spill to
+      the store so the spill survives worker death and is addressable by
+      the reduce pass. Per-reducer offsets into the run are recorded in
+      the object's manifest metadata, write-behind via io/staging.AsyncWriter
+      so upload overlaps the next wave's sort.
+
+  reduce (§2.4): output partition r k-way merges its slice of every
+      spilled run. Each slice is fetched with ONE ranged GET (the
+      interleaved record layout of io/records makes a record range a byte
+      range), merged with kernels/merge_sorted via ops.kway_merge, and
+      uploaded as a multipart object (one PUT per part — the paper's "40
+      chunks" reduce upload). Fetch of partition r+1 overlaps the merge of
+      partition r.
+
+Every store interaction is request-accounted, so the Table-2 TCO can be
+computed from *measured* GET/PUT counts (core/cost_model.measured_cloudsort_tco)
+instead of the paper's hardcoded 6M/1M constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import payload as pay
+from repro.core.exoshuffle import ShuffleConfig
+from repro.core.streaming import streaming_sort
+from repro.io import records as rec
+from repro.io import staging
+from repro.io.object_store import ObjectStore, StoreStats
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class ExternalSortPlan:
+    """Out-of-core schedule: what fits in HBM and how the store is laid out.
+
+    records_per_wave is the device-resident working set — the analogue of
+    the paper's (map tasks in flight) x (2 GB block) bound. Total dataset
+    size / records_per_wave = the out-of-core oversubscription factor.
+    """
+
+    records_per_wave: int  # device working set (records, across the mesh)
+    num_rounds: int = 2  # streaming_sort rounds within a wave
+    reducers_per_worker: int = 1  # R1; R = W * R1 output partitions
+    payload_words: int = 4  # u32 payload words per record
+    impl: str = "ref"  # kernel implementation ("ref" | "pallas")
+    capacity_factor: float = 1.5
+    input_prefix: str = "input/"
+    spill_prefix: str = "spill/"
+    output_prefix: str = "output/"
+    input_records_per_partition: int = 1 << 13  # gensort object size
+    output_part_records: int = 1 << 13  # multipart-upload part size
+    store_chunk_bytes: int = 256 << 10  # map download GET granularity
+    prefetch_depth: int = 2  # double buffering
+    max_inflight_writes: int = 2  # spill/upload backpressure
+
+    @property
+    def record_bytes(self) -> int:
+        return rec.record_bytes(self.payload_words)
+
+
+@dataclasses.dataclass
+class ExternalSortReport:
+    """What happened: sizes, timings, and *measured* store traffic."""
+
+    total_records: int
+    num_waves: int
+    num_workers: int
+    num_reducers: int
+    spill_objects: int
+    output_objects: int
+    map_seconds: float
+    reduce_seconds: float
+    working_set_records: int
+    stats: StoreStats  # delta over the sort (map + reduce)
+
+    @property
+    def oversubscription(self) -> float:
+        """Dataset size / per-wave device working set (>1 = out-of-core)."""
+        return self.total_records / self.working_set_records
+
+    @property
+    def job_hours(self) -> float:
+        return (self.map_seconds + self.reduce_seconds) / 3600.0
+
+    @property
+    def reduce_hours(self) -> float:
+        return self.reduce_seconds / 3600.0
+
+
+def _spill_key(plan: ExternalSortPlan, wave: int, worker: int) -> str:
+    return f"{plan.spill_prefix}wave-{wave:04d}/w-{worker:03d}"
+
+
+def _output_key(plan: ExternalSortPlan, reducer: int) -> str:
+    return f"{plan.output_prefix}part-{reducer:05d}"
+
+
+def _group_waves(inputs, counts, records_per_wave: int):
+    """Tile the key-ordered input objects into equal-record waves."""
+    waves, cur, acc = [], [], 0
+    for meta, c in zip(inputs, counts):
+        cur.append(meta)
+        acc += c
+        assert acc <= records_per_wave, (
+            "input partitions must tile records_per_wave exactly "
+            f"(partition {meta.key} overflows the wave)"
+        )
+        if acc == records_per_wave:
+            waves.append(cur)
+            cur, acc = [], 0
+    assert not cur, "total records must be a multiple of records_per_wave"
+    return waves
+
+
+def _merge_spilled_runs(runs, payload_words: int, impl: str):
+    """k-way merge sorted runs [(keys, ids, payload), ...] -> valid arrays.
+
+    Runs are padded to a (K, L) power-of-two grid of lex-max records and
+    merged with the same kernels/merge_sorted tournament the in-memory
+    reduce uses; payload rows are re-aligned by id join afterwards
+    (core/payload.align_payload_to_merge) instead of riding through every
+    compare-exchange.
+    """
+    pw = int(payload_words)
+    if not runs:
+        empty = np.empty((0,), np.uint32)
+        return empty, empty, (np.empty((0, pw), np.uint32) if pw else None)
+    k_grid = ops.next_pow2(len(runs))
+    run_len = max(ops.next_pow2(max(len(r[0]) for r in runs)), 1)
+    kk = np.full((k_grid, run_len), 0xFFFFFFFF, np.uint32)
+    ii = np.full((k_grid, run_len), 0xFFFFFFFF, np.uint32)
+    pp = np.zeros((k_grid, run_len, pw), np.uint32) if pw else None
+    valid = 0
+    for t, (k, i, p) in enumerate(runs):
+        kk[t, : len(k)] = k
+        ii[t, : len(k)] = i
+        if pw:
+            pp[t, : len(k)] = p
+        valid += len(k)
+    mk, mv = ops.kway_merge(jnp.asarray(kk), jnp.asarray(ii), impl=impl)
+    out_p = None
+    if pw:
+        aligned = pay.align_payload_to_merge(
+            jnp.asarray(ii.reshape(-1)), jnp.asarray(pp.reshape(-1, pw)), mv
+        )
+        out_p = np.asarray(aligned[:valid])
+    return np.asarray(mk[:valid]), np.asarray(mv[:valid]), out_p
+
+
+def external_sort(
+    store: ObjectStore,
+    bucket: str,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_names: Sequence[str] | str,
+    plan: ExternalSortPlan,
+) -> ExternalSortReport:
+    """Sort every record under plan.input_prefix into plan.output_prefix.
+
+    Input objects must be io/records-encoded with plan.payload_words words
+    of payload and globally unique ids (data/gensort.write_to_store's
+    layout). Returns the run report; validate the output with
+    data/valsort.validate_from_store.
+    """
+    axis = tuple([axis_names] if isinstance(axis_names, str) else axis_names)
+    w = int(math.prod(mesh.shape[a] for a in axis))
+    pw = plan.payload_words
+    r1 = plan.reducers_per_worker
+    cfg = ShuffleConfig(
+        num_workers=w,
+        reducers_per_worker=r1,
+        capacity_factor=plan.capacity_factor,
+        num_rounds=plan.num_rounds,
+        impl=plan.impl,
+    )
+    assert plan.records_per_wave % (w * plan.num_rounds) == 0, (
+        "records_per_wave must divide evenly into per-worker rounds"
+    )
+
+    inputs = store.list_objects(bucket, plan.input_prefix)
+    assert inputs, f"no input objects under {plan.input_prefix!r}"
+    counts = [(m.size - rec.HEADER_BYTES) // plan.record_bytes for m in inputs]
+    total = sum(counts)
+    waves = _group_waves(inputs, counts, plan.records_per_wave)
+    # Overwrite semantics: clear stale spill/output objects from any prior
+    # run so the reduce pass and downstream validation see only this run.
+    for prefix in (plan.spill_prefix, plan.output_prefix):
+        for meta in store.list_objects(bucket, prefix):
+            store.delete(bucket, meta.key)
+    base_stats = store.stats_snapshot()
+
+    sort_wave = jax.jit(
+        lambda k, i: streaming_sort(
+            k, i, mesh=mesh, axis_names=axis_names,
+            num_rounds=plan.num_rounds, cfg=cfg,
+        )
+    )
+
+    # ---- map waves: stream in -> sort -> spill runs -------------------
+    def load_wave(objs):
+        ks, ids, ps = [], [], []
+        for m in objs:
+            data = b"".join(store.get_chunks(bucket, m.key, plan.store_chunk_bytes))
+            k, i, p = rec.decode_records(data)
+            ks.append(k)
+            ids.append(i)
+            if pw:
+                ps.append(p)
+        return (
+            np.concatenate(ks),
+            np.concatenate(ids),
+            np.concatenate(ps) if pw else None,
+        )
+
+    local_bounds = (
+        np.asarray(cfg.keyspace.local_reducer_boundaries()) if r1 > 1 else None
+    )  # (W, R1-1)
+    spill_offsets: dict[tuple[int, int], np.ndarray] = {}
+    t0 = time.perf_counter()
+    with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
+        wave_loads = (lambda objs=objs: load_wave(objs) for objs in waves)
+        for g, (keys, ids, payload) in enumerate(
+            staging.prefetch(wave_loads, depth=plan.prefetch_depth)
+        ):
+            sk, si, vcounts, ovf = sort_wave(jnp.asarray(keys), jnp.asarray(ids))
+            sk, si, vcounts = np.asarray(sk), np.asarray(si), np.asarray(vcounts)
+            if bool(np.asarray(ovf)):
+                raise RuntimeError(
+                    "shuffle block overflow — raise capacity_factor"
+                )
+            # id -> wave row, for gathering payload of shuffled records.
+            order = np.argsort(ids)
+            sorted_ids = ids[order]
+            seg = sk.shape[0] // w
+            for wid in range(w):
+                n = int(vcounts[wid])
+                run_k = sk[wid * seg : wid * seg + n]
+                run_i = si[wid * seg : wid * seg + n]
+                run_p = None
+                if pw:
+                    rows = order[np.searchsorted(sorted_ids, run_i)]
+                    run_p = payload[rows]
+                if local_bounds is not None:
+                    internal = np.searchsorted(run_k, local_bounds[wid], side="left")
+                else:
+                    internal = np.empty((0,), np.int64)
+                offsets = np.concatenate(([0], internal, [n])).astype(np.int64)
+                spill_offsets[(g, wid)] = offsets
+                spiller.submit(
+                    store.put,
+                    bucket,
+                    _spill_key(plan, g, wid),
+                    rec.encode_records(run_k, run_i, run_p),
+                    metadata={
+                        "records": n,
+                        "wave": g,
+                        "worker": wid,
+                        "reducer_offsets": [int(o) for o in offsets],
+                    },
+                )
+    map_seconds = time.perf_counter() - t0
+
+    # ---- reduce: ranged-GET run slices -> k-way merge -> multipart up --
+    num_waves = len(waves)
+    num_reducers = w * r1
+
+    def fetch_reducer(r: int):
+        wid, j = divmod(r, r1)
+        runs = []
+        for g in range(num_waves):
+            offs = spill_offsets[(g, wid)]
+            lo, hi = int(offs[j]), int(offs[j + 1])
+            if hi > lo:
+                start, length = rec.body_range(lo, hi - lo, pw)
+                body = store.get_range(bucket, _spill_key(plan, g, wid), start, length)
+                runs.append(rec.decode_body(body, pw))
+        return runs
+
+    part_bytes = plan.output_part_records * plan.record_bytes
+    t0 = time.perf_counter()
+    with staging.AsyncWriter(plan.max_inflight_writes) as uploader:
+        fetches = (lambda r=r: fetch_reducer(r) for r in range(num_reducers))
+        for r, runs in enumerate(staging.prefetch(fetches, depth=plan.prefetch_depth)):
+            mk, mi, mp = _merge_spilled_runs(runs, pw, plan.impl)
+            data = rec.encode_records(mk, mi, mp)
+            # >= 1 part always: even an empty partition has the 16-B header.
+            parts = [data[o : o + part_bytes] for o in range(0, len(data), part_bytes)]
+            uploader.submit(
+                store.put_multipart,
+                bucket,
+                _output_key(plan, r),
+                parts,
+                metadata={"records": len(mk), "reducer": r},
+            )
+    reduce_seconds = time.perf_counter() - t0
+
+    return ExternalSortReport(
+        total_records=total,
+        num_waves=num_waves,
+        num_workers=w,
+        num_reducers=num_reducers,
+        spill_objects=num_waves * w,
+        output_objects=num_reducers,
+        map_seconds=map_seconds,
+        reduce_seconds=reduce_seconds,
+        working_set_records=plan.records_per_wave,
+        stats=store.stats_snapshot() - base_stats,
+    )

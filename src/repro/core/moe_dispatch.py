@@ -25,6 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class MoeDispatchConfig:
@@ -218,7 +220,7 @@ def make_sort_dispatch(mesh, cfg: MoeDispatchConfig, expert_fn, *, token_spec,
             expert_fn=expert_fn,
         )
 
-    return jax.shard_map(
+    return compat.shard_map(
         fn,
         mesh=mesh,
         in_specs=(token_spec, w_spec, w_spec, param_spec),

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import sortlib
+from repro.core import compat, sortlib
 from repro.core.exoshuffle import ShuffleConfig, _shuffle_round
 
 
@@ -101,7 +101,7 @@ def streaming_sort(
     assert num_rounds & (num_rounds - 1) == 0, "rounds must be a power of two"
 
     spec = P(axis)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         lambda k, v: _streaming_sort_shard(k, v, cfg=cfg, axis=axis),
         mesh=mesh,
         in_specs=(spec, spec),

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PAYLOAD_WORDS = 23  # 92 bytes; +8 header bytes = 100-byte records
 _SALT = jnp.uint32(0x9E3779B9)
@@ -66,3 +67,53 @@ def checksum(keys: jax.Array, ids: jax.Array, payload: jax.Array | None = None):
     s = jnp.sum(h, dtype=jnp.uint32)
     x = jax.lax.reduce(h, jnp.uint32(0), jax.lax.bitwise_xor, (0,))
     return s, x
+
+
+def combine_checksums(a: tuple[int, int], b: tuple[int, int]) -> tuple[int, int]:
+    """Fold two partial (sum, xor) checksums — both ops are associative and
+    order-independent, so streamed generation/validation can checksum the
+    dataset one batch at a time (the `valsort -s` summary concatenation)."""
+    return (int(a[0]) + int(b[0])) & 0xFFFFFFFF, int(a[1]) ^ int(b[1])
+
+
+def write_to_store(
+    store,
+    bucket: str,
+    prefix: str,
+    total_records: int,
+    records_per_partition: int,
+    payload_words: int = PAYLOAD_WORDS,
+    *,
+    start_id: int = 0,
+) -> tuple[tuple[int, int], int]:
+    """Generate the benchmark input directly into an object store.
+
+    The paper's `gensort -b{offset}` step (§3.2): partition p holds records
+    [p * rpp, (p+1) * rpp), one io/records-encoded object per partition, so
+    the out-of-core driver (core/external_sort.py) can stream them without
+    the dataset ever existing in one memory. Returns the aggregate input
+    checksum (the `gensort -c` sum) and the number of partitions written.
+    """
+    from repro.io import records as rec
+
+    assert total_records % records_per_partition == 0
+    num_parts = total_records // records_per_partition
+    # Overwrite semantics: the prefix holds exactly this dataset afterwards
+    # (stale partitions from a previous, larger run would otherwise be swept
+    # into the sort and fail the checksum gate much later).
+    for meta in store.list_objects(bucket, prefix):
+        store.delete(bucket, meta.key)
+    ck = (0, 0)
+    for p in range(num_parts):
+        keys, ids = gen_keys(start_id + p * records_per_partition,
+                             records_per_partition)
+        payload = gen_payload(ids, payload_words) if payload_words else None
+        part_ck = checksum(keys, ids, payload)
+        ck = combine_checksums(ck, (int(part_ck[0]), int(part_ck[1])))
+        data = rec.encode_records(
+            np.asarray(keys), np.asarray(ids),
+            None if payload is None else np.asarray(payload),
+        )
+        store.put(bucket, f"{prefix}part-{p:05d}", data,
+                  metadata={"records": records_per_partition})
+    return ck, num_parts

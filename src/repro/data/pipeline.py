@@ -18,6 +18,7 @@ by length (same sort machinery) so batches pad minimally.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -93,15 +94,33 @@ def length_sorted_batches(lengths: np.ndarray, batch: int) -> np.ndarray:
     return order[:n].reshape(-1, batch)
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_epoch_sort(mesh, axis_names, impl):
+    from repro.core.exoshuffle import distributed_sort
+
+    return jax.jit(
+        lambda k, i: distributed_sort(k, i, mesh=mesh, axis_names=axis_names,
+                                      impl=impl)
+    )
+
+
 def device_epoch_shuffle(sample_ids, epoch: int, *, mesh, axis_names, impl="ref"):
     """Pod-scale epoch shuffle via the actual exoshuffle distributed sort.
 
     sample_ids: (N,) uint32 sharded over axis_names. Returns the permuted
-    ids (the valid prefixes of each worker segment concatenated).
+    ids as a (N,) host array — the valid prefix of each worker segment,
+    concatenated in worker order (padding stripped).
     """
-    from repro.core.exoshuffle import distributed_sort
+    from repro.data import valsort
 
+    axis_names = (
+        axis_names if isinstance(axis_names, str) else tuple(axis_names)
+    )
     seed = jnp.uint32(0x9E3779B9 * (epoch + 1) & 0xFFFFFFFF)
     keys = splitmix32(sample_ids ^ seed)
-    return distributed_sort(keys, sample_ids, mesh=mesh, axis_names=axis_names,
-                            impl=impl)
+    sort_fn = _jitted_epoch_sort(mesh, axis_names, impl)
+    sk, si, counts, overflow = sort_fn(keys, sample_ids)
+    if bool(np.asarray(overflow)):
+        raise RuntimeError("epoch shuffle block overflow — raise capacity_factor")
+    _, ids, _ = valsort.slice_segments(sk, si, counts)
+    return np.concatenate(ids).astype(np.uint32)

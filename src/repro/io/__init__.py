@@ -1,0 +1,21 @@
+"""Object-store I/O subsystem (paper §2.2–§2.5).
+
+  object_store — filesystem-backed S3-contract emulation with per-request
+                 GET/PUT accounting (feeds the Table-2 TCO model)
+  records      — interleaved (key, id, payload) record-block codec
+  staging      — async double-buffered host<->device staging
+
+`core/external_sort.py` composes these into the out-of-core CloudSort
+driver: dataset size is bounded by store capacity, not HBM.
+"""
+from repro.io.object_store import ObjectMeta, ObjectNotFound, ObjectStore, StoreStats
+from repro.io.records import (body_range, decode_body, decode_header,
+                              decode_records, encode_records, record_bytes)
+from repro.io.staging import AsyncWriter, prefetch
+
+__all__ = [
+    "ObjectMeta", "ObjectNotFound", "ObjectStore", "StoreStats",
+    "body_range", "decode_body", "decode_header", "decode_records",
+    "encode_records", "record_bytes",
+    "AsyncWriter", "prefetch",
+]

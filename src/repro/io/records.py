@@ -1,0 +1,80 @@
+"""Record-block codec: (key, id, payload) arrays <-> object bytes.
+
+The sort benchmark's unit of storage is the 100-byte record (§2.2): a
+10-byte key plus 90-byte payload, laid out *interleaved* so that any
+contiguous record range of an object maps to one contiguous byte range —
+which is what lets the reduce pass fetch exactly its reducer's slice of a
+spilled run with a single S3 ranged GET (core/external_sort.py).
+
+Our record (DESIGN.md §2 key-width adaptation, as in data/gensort.py):
+
+  row = [key: u32][id: u32][payload: u32 x payload_words]   little-endian
+
+An encoded object is a 16-byte header (magic, version, n_records,
+payload_words) followed by n_records interleaved rows. `body_range`
+computes the byte range of a record slice so callers never re-derive the
+layout; `decode_body` parses a headerless ranged-GET response.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+MAGIC = 0x58535254  # "XSRT"
+VERSION = 1
+HEADER_BYTES = 16
+
+
+def record_bytes(payload_words: int) -> int:
+    """Bytes per interleaved record row."""
+    return 4 * (2 + int(payload_words))
+
+
+def encode_records(keys, ids, payload=None) -> bytes:
+    """Pack records into one object. keys/ids (n,) u32; payload (n, pw) u32
+    or None (header-only records, pw=0)."""
+    keys = np.ascontiguousarray(keys, dtype=np.uint32)
+    ids = np.ascontiguousarray(ids, dtype=np.uint32)
+    n = keys.shape[0]
+    assert ids.shape == (n,)
+    pw = 0 if payload is None else int(payload.shape[-1])
+    rows = np.empty((n, 2 + pw), dtype="<u4")
+    rows[:, 0] = keys
+    rows[:, 1] = ids
+    if pw:
+        assert payload.shape == (n, pw)
+        rows[:, 2:] = np.asarray(payload, dtype=np.uint32)
+    header = np.array([MAGIC, VERSION, n, pw], dtype="<u4")
+    return header.tobytes() + rows.tobytes()
+
+
+def decode_header(data: bytes) -> tuple[int, int]:
+    """(n_records, payload_words) from the first HEADER_BYTES of an object."""
+    magic, version, n, pw = np.frombuffer(data[:HEADER_BYTES], dtype="<u4")
+    assert magic == MAGIC and version == VERSION, "not an XSRT record object"
+    return int(n), int(pw)
+
+
+def decode_records(data: bytes):
+    """Inverse of encode_records: (keys, ids, payload|None)."""
+    n, pw = decode_header(data)
+    body = data[HEADER_BYTES : HEADER_BYTES + n * record_bytes(pw)]
+    return decode_body(body, pw)
+
+
+def decode_body(body: bytes, payload_words: int):
+    """Parse headerless interleaved rows (a ranged-GET response)."""
+    pw = int(payload_words)
+    rb = record_bytes(pw)
+    assert len(body) % rb == 0, (len(body), rb)
+    rows = np.frombuffer(body, dtype="<u4").reshape(-1, 2 + pw)
+    keys = rows[:, 0].astype(np.uint32)
+    ids = rows[:, 1].astype(np.uint32)
+    payload = rows[:, 2:].astype(np.uint32) if pw else None
+    return keys, ids, payload
+
+
+def body_range(start_record: int, n_records: int, payload_words: int):
+    """(byte_offset, byte_length) of records [start, start+n) within an
+    encoded object — the ranged-GET window for a run slice."""
+    rb = record_bytes(payload_words)
+    return HEADER_BYTES + int(start_record) * rb, int(n_records) * rb

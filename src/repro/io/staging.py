@@ -1,0 +1,106 @@
+"""Async double-buffered host<->device staging (paper §2.5 pipelining).
+
+The paper gets map-download / shuffle / merge / reduce-upload overlap "for
+free" from Ray's pipelined task execution: while a map task sorts block r,
+the next input block r+1 is already downloading, and finished merge runs
+upload while compute continues. Inside a round the XLA latency-hiding
+scheduler overlaps collectives with compute (core/streaming.py); *between*
+the store and the device there is no scheduler, so this module supplies the
+overlap explicitly:
+
+  prefetch(thunks, depth)  — double-buffered reader: keeps `depth` store
+      reads in flight ahead of the consumer, so wave g+1's chunked GETs
+      (io/object_store.get_chunks) run while wave g is being sorted.
+
+  AsyncWriter(max_inflight) — bounded write-behind for spills/uploads.
+      `submit` blocks once `max_inflight` writes are pending — the static
+      analogue of the paper's merge controller withholding acks to
+      back-pressure producers (§2.3) — so host memory holds at most
+      max_inflight encoded runs.
+
+Both are plain thread pools: store I/O is file I/O + numpy codec work that
+releases the GIL, and device compute runs inside jit, so the overlap is
+real even on CPU backends.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Iterable, Iterator, TypeVar
+
+T = TypeVar("T")
+
+
+def prefetch(thunks: Iterable[Callable[[], T]], depth: int = 2) -> Iterator[T]:
+    """Yield thunk() results in order with up to `depth` reads in flight.
+
+    Double buffering is depth=2: one result being consumed, one loading.
+    Exceptions from a thunk surface at the corresponding yield; unconsumed
+    work is cancelled when the generator is closed.
+    """
+    assert depth >= 1
+    ex = ThreadPoolExecutor(max_workers=depth, thread_name_prefix="stage-read")
+    it = iter(thunks)
+    pending: collections.deque[Future] = collections.deque()
+    try:
+        exhausted = False
+        while True:
+            while not exhausted and len(pending) < depth:
+                try:
+                    pending.append(ex.submit(next(it)))
+                except StopIteration:
+                    exhausted = True
+            if not pending:
+                return
+            yield pending.popleft().result()
+    finally:
+        for f in pending:
+            f.cancel()
+        ex.shutdown(wait=True, cancel_futures=True)
+
+
+class AsyncWriter:
+    """Bounded write-behind queue for store puts (spill / output upload)."""
+
+    def __init__(self, max_inflight: int = 2):
+        assert max_inflight >= 1
+        self._ex = ThreadPoolExecutor(
+            max_workers=max_inflight, thread_name_prefix="stage-write"
+        )
+        self._slots = threading.Semaphore(max_inflight)
+        self._futures: list[Future] = []
+
+    def submit(self, fn: Callable, *args, **kwargs) -> Future:
+        """Queue fn(*args); blocks while `max_inflight` writes are pending
+        (backpressure — the merge-controller ack analogue)."""
+        self._slots.acquire()
+
+        def run():
+            try:
+                return fn(*args, **kwargs)
+            finally:
+                self._slots.release()
+
+        f = self._ex.submit(run)
+        self._futures.append(f)
+        return f
+
+    def drain(self) -> None:
+        """Wait for all pending writes; re-raises the first failure."""
+        futures, self._futures = self._futures, []
+        for f in futures:
+            f.result()
+
+    def close(self) -> None:
+        self.drain()
+        self._ex.shutdown(wait=True)
+
+    def __enter__(self) -> "AsyncWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:  # don't mask the in-flight exception; just stop the pool
+            self._ex.shutdown(wait=True, cancel_futures=True)

@@ -247,7 +247,8 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis()
+        from repro.core import compat
+        ca = compat.cost_analysis(compiled)
         txt = compiled.as_text()
         coll = collective_bytes(txt)
         # XLA's cost_analysis counts while bodies ONCE; every model here

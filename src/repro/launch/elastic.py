@@ -54,8 +54,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     n = len(jax.devices())
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((n, 1), ("data", "model"))
     state, step = reshard_state(args.arch, args.ckpt_dir, mesh,
                                 reduced=args.reduced)
     n_leaves = len(jax.tree.leaves(state))

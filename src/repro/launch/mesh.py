@@ -1,12 +1,12 @@
 """Production mesh construction (assignment: MULTI-POD DRY-RUN step 1).
 
 Defined as functions (never module-level constants) so importing this
-module never touches jax device state.
+module never touches jax device state. Mesh construction goes through
+core/compat.py so the same code runs on old (0.4.x) and current jax.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,12 +14,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     'pod' axis (DCN-connected)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small host-device mesh for CPU integration tests."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh) -> tuple[str, ...]:

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro.core import moe_dispatch as md
 from repro.models import layers
 from repro.models.config import ArchConfig
@@ -80,7 +81,7 @@ def moe_ffn(p, cfg: ArchConfig, x, *, mesh=None, dp_axes=("data",), ep_axis="mod
                 expert_fn=lambda prm, xin: _expert_fn(prm, xin),
             )
 
-        routed = jax.shard_map(
+        routed = compat.shard_map(
             decode_fn,
             mesh=mesh,
             in_specs=(token_spec, w_spec, w_spec,
@@ -99,7 +100,7 @@ def moe_ffn(p, cfg: ArchConfig, x, *, mesh=None, dp_axes=("data",), ep_axis="mod
                 expert_fn=lambda prm, xin: _expert_fn(prm, xin),
             )
 
-        routed = jax.shard_map(
+        routed = compat.shard_map(
             shard_fn,
             mesh=mesh,
             in_specs=(token_spec, w_spec, w_spec,

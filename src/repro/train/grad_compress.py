@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 
 def quantize_int8(x):
     """Per-tensor symmetric int8. Returns (q, scale)."""
@@ -31,10 +33,10 @@ def dequantize(q, scale):
 
 def compressed_mean_shard(x, axis: str):
     """Per-device body: int8 all_gather over `axis`, local dequant mean."""
-    n = jax.lax.axis_size(axis)
     q, scale = quantize_int8(x)
     qs = jax.lax.all_gather(q, axis)  # (n, ...) int8 on the wire
     scales = jax.lax.all_gather(scale, axis)  # (n,) f32 (negligible bytes)
+    n = qs.shape[0]  # static axis size (jax.lax.axis_size is newer-jax-only)
     deq = qs.astype(jnp.float32) * scales.reshape((n,) + (1,) * x.ndim)
     return jnp.sum(deq, axis=0) / n
 
@@ -57,7 +59,7 @@ def compressed_pod_mean(grads, mesh, *, axis: str = "pod"):
         return tuple(compressed_mean_shard(l, axis) for l in leaves)
 
     specs = tuple(P(*([None] * l.ndim)) for l in flat)
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh, in_specs=specs, out_specs=specs, check_vma=False
     )(*flat)
     return treedef.unflatten(list(out))

@@ -7,11 +7,11 @@ from helpers import run_with_devices
 
 COMMON = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core.exoshuffle import distributed_sort, distributed_sort_payload
 from repro.core.streaming import streaming_sort
 from repro.data import gensort, valsort
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 N = 8 * 4096
 keys, ids = gensort.gen_keys(0, N)
 """
@@ -101,19 +101,14 @@ def test_epoch_shuffle_is_permutation():
     run_with_devices(COMMON + """
 from repro.data.pipeline import device_epoch_shuffle
 ids32 = jnp.arange(N, dtype=jnp.uint32)
-sk, sv, counts, ovf = jax.jit(lambda i: device_epoch_shuffle(
-    i, epoch=3, mesh=mesh, axis_names=("data", "model")))(ids32)
-assert not bool(ovf)
-from repro.data import valsort
-ks, vs, _ = valsort.slice_segments(sk, sv, counts)
-perm = np.concatenate(vs)
+perm = device_epoch_shuffle(ids32, epoch=3, mesh=mesh,
+                            axis_names=("data", "model"))
 assert len(perm) == N
 assert (np.sort(perm) == np.arange(N)).all()  # a true permutation
 # different epochs give different orders
-sk2, sv2, c2, _ = jax.jit(lambda i: device_epoch_shuffle(
-    i, epoch=4, mesh=mesh, axis_names=("data", "model")))(ids32)
-ks2, vs2, _ = valsort.slice_segments(sk2, sv2, c2)
-assert not (np.concatenate(vs2) == perm).all()
+perm2 = device_epoch_shuffle(ids32, epoch=4, mesh=mesh,
+                             axis_names=("data", "model"))
+assert not (perm2 == perm).all()
 print("OK")
 """)
 
@@ -121,9 +116,10 @@ print("OK")
 def test_moe_sort_dispatch_matches_dense():
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 from repro.core.moe_dispatch import MoeDispatchConfig, make_sort_dispatch, route_topk
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 E, K, d, ff, T = 16, 2, 32, 64, 512
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
@@ -151,10 +147,10 @@ def test_moe_ep_decode_dispatch_matches_dense():
     combine) must equal the single-device dense dispatch."""
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import moe_dispatch as md
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 E, K, T, D, F = 8, 2, 16, 32, 64
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
@@ -176,7 +172,8 @@ ref = md.onehot_dispatch_combine(
     expert_fn=lambda xin: expert_fn(prm, xin))
 
 cfg = md.MoeDispatchConfig(num_experts=E, top_k=K, ep_axis="model")
-fn = jax.shard_map(
+from repro.core import compat
+fn = compat.shard_map(
     lambda t, ww, ii, ep: md.ep_replicated_shard(
         t, ww, ii, ep, cfg=cfg, ep_size=4, expert_fn=expert_fn),
     mesh=mesh,

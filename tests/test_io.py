@@ -1,0 +1,220 @@
+"""io/ subsystem: S3-contract emulation, request accounting, codec, staging.
+
+Host-only (no mesh needed): the store and codec are pure filesystem/numpy;
+the staging layer is exercised for ordering, backpressure and error
+propagation.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.io import records as rec
+from repro.io import staging
+from repro.io.object_store import ObjectNotFound, ObjectStore, StoreStats
+
+
+@pytest.fixture
+def store(tmp_path):
+    s = ObjectStore(str(tmp_path / "store"), chunk_size=64)
+    s.create_bucket("b")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# object store: S3 contract
+# ---------------------------------------------------------------------------
+
+
+def test_put_get_roundtrip_and_head(store):
+    data = bytes(range(256))
+    meta = store.put("b", "in/part-0", data, metadata={"records": 4})
+    assert store.get("b", "in/part-0") == data
+    h = store.head("b", "in/part-0")
+    assert h.size == 256 and h.parts == 1 and h.metadata == {"records": 4}
+    assert h.etag == meta.etag
+
+
+def test_get_range_truncates_like_s3(store):
+    store.put("b", "k", b"0123456789")
+    assert store.get_range("b", "k", 2, 4) == b"2345"
+    assert store.get_range("b", "k", 8, 100) == b"89"  # past-EOF truncation
+    assert store.get_range("b", "k", 20, 4) == b""
+
+
+def test_chunked_get_counts_one_request_per_chunk(store):
+    store.put("b", "k", b"x" * 1000)
+    before = store.stats_snapshot()
+    chunks = list(store.get_chunks("b", "k", 256))
+    d = store.stats_snapshot() - before
+    assert b"".join(chunks) == b"x" * 1000
+    assert d.get_requests == 4  # ceil(1000/256) — the paper's map download
+    assert d.bytes_read == 1000
+
+
+def test_multipart_counts_one_put_per_part(store):
+    parts = [b"a" * 10, b"b" * 10, b"c" * 5]
+    before = store.stats_snapshot()
+    meta = store.put_multipart("b", "out/p0", parts)
+    d = store.stats_snapshot() - before
+    assert d.put_requests == 3  # the paper's "40 chunks" reduce upload
+    assert meta.parts == 3 and meta.size == 25
+    assert store.get("b", "out/p0") == b"".join(parts)
+
+
+def test_manifest_lists_by_prefix_in_key_order(store):
+    for k in ["out/p-2", "in/p-1", "in/p-0", "spill/x"]:
+        store.put("b", k, b"d")
+    keys = [m.key for m in store.list_objects("b", "in/")]
+    assert keys == ["in/p-0", "in/p-1"]
+    assert len(store.list_objects("b")) == 4
+
+
+def test_manifest_persists_across_reopen(store):
+    store.put("b", "k", b"payload", metadata={"wave": 3})
+    reopened = ObjectStore(store.root)
+    m = reopened.head("b", "k")
+    assert m.size == 7 and m.metadata == {"wave": 3}
+    assert reopened.get("b", "k") == b"payload"
+
+
+def test_missing_key_and_bucket_raise(store):
+    with pytest.raises(ObjectNotFound):
+        store.get("b", "nope")
+    with pytest.raises(ObjectNotFound):
+        store.list_objects("no-bucket")
+    with pytest.raises(ObjectNotFound):
+        store.put("no-bucket", "k", b"")
+
+
+def test_bad_keys_rejected(store):
+    for bad in ["/abs", "../up", "a/../b", ".hidden", ""]:
+        with pytest.raises(AssertionError):
+            store.put("b", bad, b"")
+
+
+def test_delete_removes_object(store):
+    store.put("b", "k", b"d")
+    store.delete("b", "k")
+    with pytest.raises(ObjectNotFound):
+        store.head("b", "k")
+
+
+def test_stats_delta_arithmetic():
+    a = StoreStats(get_requests=5, put_requests=3, bytes_read=100)
+    b = StoreStats(get_requests=2, put_requests=1, bytes_read=40)
+    d = a - b
+    assert (d.get_requests, d.put_requests, d.bytes_read) == (3, 2, 60)
+
+
+# ---------------------------------------------------------------------------
+# record codec
+# ---------------------------------------------------------------------------
+
+
+def test_records_roundtrip_with_payload():
+    rng = np.random.default_rng(0)
+    k = rng.integers(0, 2**32, 100, dtype=np.uint32)
+    i = rng.integers(0, 2**32, 100, dtype=np.uint32)
+    p = rng.integers(0, 2**32, (100, 5), dtype=np.uint32)
+    k2, i2, p2 = rec.decode_records(rec.encode_records(k, i, p))
+    np.testing.assert_array_equal(k, k2)
+    np.testing.assert_array_equal(i, i2)
+    np.testing.assert_array_equal(p, p2)
+
+
+def test_records_roundtrip_header_only():
+    k = np.arange(10, dtype=np.uint32)
+    k2, i2, p2 = rec.decode_records(rec.encode_records(k, k))
+    np.testing.assert_array_equal(k, k2)
+    assert p2 is None
+
+
+def test_body_range_slices_match_full_decode(store):
+    rng = np.random.default_rng(1)
+    n, pw = 64, 3
+    k = rng.integers(0, 2**32, n, dtype=np.uint32)
+    i = rng.integers(0, 2**32, n, dtype=np.uint32)
+    p = rng.integers(0, 2**32, (n, pw), dtype=np.uint32)
+    store.put("b", "obj", rec.encode_records(k, i, p))
+    # a ranged GET of records [17, 41) decodes to exactly that slice
+    start, length = rec.body_range(17, 24, pw)
+    ks, is_, ps = rec.decode_body(store.get_range("b", "obj", start, length), pw)
+    np.testing.assert_array_equal(ks, k[17:41])
+    np.testing.assert_array_equal(is_, i[17:41])
+    np.testing.assert_array_equal(ps, p[17:41])
+
+
+def test_empty_object_roundtrip():
+    k = np.empty((0,), np.uint32)
+    data = rec.encode_records(k, k, np.empty((0, 4), np.uint32))
+    k2, i2, p2 = rec.decode_records(data)
+    assert len(k2) == 0 and len(i2) == 0 and p2.shape == (0, 4)
+
+
+# ---------------------------------------------------------------------------
+# staging
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_preserves_order_and_overlaps():
+    started = []
+
+    def make(i):
+        def thunk():
+            started.append(i)
+            time.sleep(0.01)
+            return i
+        return thunk
+
+    out = []
+    for i, v in enumerate(staging.prefetch([make(j) for j in range(6)], depth=2)):
+        if i == 0:
+            # double buffering: thunk 1 went in flight before result 0 consumed
+            assert 1 in started
+        out.append(v)
+    assert out == list(range(6))
+
+
+def test_prefetch_propagates_exceptions():
+    def boom():
+        raise ValueError("read failed")
+
+    gen = staging.prefetch([lambda: 1, boom, lambda: 3], depth=2)
+    assert next(gen) == 1
+    with pytest.raises(ValueError, match="read failed"):
+        list(gen)
+
+
+def test_async_writer_backpressure_and_drain():
+    gate = threading.Event()
+    done = []
+
+    def slow_write(i):
+        gate.wait(timeout=5)
+        done.append(i)
+
+    with staging.AsyncWriter(max_inflight=2) as w:
+        t0 = time.perf_counter()
+        w.submit(slow_write, 0)
+        w.submit(slow_write, 1)
+        assert time.perf_counter() - t0 < 1.0  # both fit in flight
+        blocker = threading.Thread(target=w.submit, args=(slow_write, 2))
+        blocker.start()
+        blocker.join(timeout=0.2)
+        assert blocker.is_alive()  # third submit blocked: backpressure
+        gate.set()
+        blocker.join(timeout=5)
+        w.drain()
+    assert sorted(done) == [0, 1, 2]
+
+
+def test_async_writer_drain_reraises():
+    def fail():
+        raise RuntimeError("spill failed")
+
+    w = staging.AsyncWriter(max_inflight=1)
+    w.submit(fail)
+    with pytest.raises(RuntimeError, match="spill failed"):
+        w.drain()

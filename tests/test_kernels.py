@@ -3,12 +3,13 @@
 Every kernel sweeps shapes and is compared bit-exactly (integer data) to
 kernels/ref.py. Hypothesis drives the property tests on arbitrary inputs.
 """
-import hypothesis as hp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.kernels import ops, ref
 

@@ -2,10 +2,12 @@
 (parallel, training) form must equal the step (recurrent, decode) form for
 arbitrary shapes, chunk sizes and gate values — the system invariant that
 makes long_500k decode trustworthy."""
-import hypothesis as hp
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hp = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 
 from repro.models.ssm import causal_conv1d, gla_chunked, gla_step
 

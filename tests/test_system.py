@@ -13,13 +13,13 @@ def test_cloudsort_smoke_end_to_end():
     checksum validation."""
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs.cloudsort import SMOKE
 from repro.core.exoshuffle import ShuffleConfig
 from repro.core.streaming import streaming_sort
 from repro.data import gensort, valsort
 
-mesh = jax.make_mesh((8,), ("w",), axis_types=(AxisType.Auto,))
+from repro.core.compat import make_mesh
+mesh = make_mesh((8,), ("w",))
 cfg = ShuffleConfig(num_workers=SMOKE.num_workers,
                     reducers_per_worker=SMOKE.reducers_per_worker,
                     num_rounds=SMOKE.num_rounds, impl=SMOKE.impl)
@@ -50,7 +50,7 @@ def test_dryrun_machinery_small_mesh(arch_id):
     on a 2x4 mesh — exercises sharding rules for every family."""
     run_with_devices(f"""
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get
 from repro.launch import sharding as shd
 from repro.launch.dryrun import block_specs_of
@@ -59,7 +59,8 @@ from repro.train.optimizer import OptConfig
 from repro.train.train_step import TrainConfig, make_train_step
 from repro.models.whisper import enc_len_for
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get("{arch_id}").reduced(d_model=128, n_heads=8, n_kv_heads=4, d_head=16,
                                vocab=512)
 if cfg.is_moe:
@@ -87,7 +88,8 @@ in_sh = (jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs, is_leaf=lam
          jax.tree.map(lambda s: NamedSharding(mesh, s), b_specs, is_leaf=lambda x: isinstance(x, P)))
 c = jax.jit(step, in_shardings=in_sh, out_shardings=(in_sh[0], None),
             donate_argnums=(0,)).lower(abstract, specs).compile()
-ca = c.cost_analysis()
+from repro.core.compat import cost_analysis
+ca = cost_analysis(c)
 assert ca.get("flops", 0) > 0
 print("OK", "{arch_id}", int(ca.get("flops", 0)))
 """, timeout=900)

@@ -87,9 +87,10 @@ def test_elastic_reshard_subprocess(tmp_path):
     ckpt.save({"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}, d, step=3)
     run_with_devices(f"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import checkpoint as ckpt
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+from repro.core.compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 target = jax.eval_shape(lambda: {{"w": jnp.zeros((8, 8), jnp.float32)}})
 sh = {{"w": NamedSharding(mesh, P("data", None))}}
 loaded, step = ckpt.load(target, {d!r}, shardings=sh)
@@ -128,10 +129,9 @@ def test_compressed_pod_mean_subprocess():
 
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.train.grad_compress import compressed_pod_mean
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,)*3)
+from repro.core.compat import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 x = jnp.linspace(-1, 1, 64).reshape(8, 8)
 out = jax.jit(lambda t: compressed_pod_mean({"g": t}, mesh))(x)["g"]
 # values replicated across pods -> mean == identity (within int8 error)

@@ -58,5 +58,8 @@ def run():
         ("extsort_reduce", rep.reduce_seconds * 1e6, rep.num_reducers),
         ("extsort_get_requests", us, rep.stats.get_requests),
         ("extsort_put_requests", us, rep.stats.put_requests),
+        # streaming-reduce working set: measured peak vs runs x chunk bound
+        ("extsort_reduce_peak_bytes", rep.reduce_seconds * 1e6,
+         rep.reduce_peak_merge_bytes),
         ("extsort_measured_tco_usd", us, tco.total),
     ]

@@ -1,18 +1,24 @@
 """CloudSort out-of-core (paper §2.3–§2.5): the dataset lives in an object
-store, device memory holds only one map wave.
+store, device memory holds only one map wave — and the store behaves like
+S3, not like a filesystem.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python examples/cloudsort_oocore.py [--records 131072]
 
-The full paper loop, with real byte movement through the store:
-gensort writes input partitions to the (filesystem-emulated S3) store;
-the external-sort driver streams them through map waves with chunked
-GETs, spills each worker's merged runs back to the store, and the reduce
-pass ranged-GETs every run slice, k-way merges, and multipart-uploads
-the final partitions; valsort streams the output back out of the store
-for the ordering + checksum gates. The Table-2 TCO is then priced from
-the store's *measured* GET/PUT counters — not the paper's hardcoded
-6M/1M request constants.
+The full paper loop, with real byte movement through a TIERED store
+(io/tiered.py): input/output live on a durable tier wrapped in the
+latency + bandwidth + 503-throttling + retry middleware stack
+(io/middleware.py), while spilled runs route to a fast local-SSD tier —
+the paper's storage split. gensort writes input partitions through the
+throttled tier; the external-sort driver streams them through map waves
+with chunked GETs, spills each worker's merged runs to the SSD tier, and
+the reduce pass STREAMING-merges bounded per-run chunks straight into
+incremental multipart uploads; valsort streams the output back out of the
+durable tier for the ordering + checksum gates. The Table-2 TCO is then
+priced from the durable tier's *measured*, retry-inflated GET/PUT
+counters — spill traffic is free, like the paper's i4i NVMe.
+
+Pass --no-faults for the PR-1 behaviour (clean store, no injection).
 """
 import argparse
 import dataclasses
@@ -27,11 +33,13 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 
 import jax
 
-from repro.configs.cloudsort import ooc_smoke_plan
-from repro.core.cost_model import cloudsort_tco, measured_cloudsort_tco
+from repro.configs.cloudsort import ooc_smoke_plan, smoke_fault_profile
+from repro.core.cost_model import (cloudsort_tco, measured_cloudsort_tco,
+                                   measured_tiered_cloudsort_tco)
 from repro.core.external_sort import external_sort
 from repro.data import gensort, valsort
-from repro.io.object_store import ObjectStore
+from repro.io.middleware import RetryPolicy
+from repro.io.tiered import tiered_cloudsort_store
 
 
 def main():
@@ -41,6 +49,12 @@ def main():
                     help="store root dir (default: fresh tempdir)")
     ap.add_argument("--waves", type=int, default=None,
                     help="map waves (default: from the smoke plan)")
+    ap.add_argument("--no-faults", action="store_true",
+                    help="clean durable tier: no latency/throttle injection")
+    ap.add_argument("--latency-ms", type=float, default=None,
+                    help="override injected per-request latency")
+    ap.add_argument("--get-rate", type=float, default=None,
+                    help="override durable-tier GET tokens/s")
     args = ap.parse_args()
 
     w = len(jax.devices())
@@ -52,10 +66,25 @@ def main():
             f"--records {args.records} must be divisible by --waves {args.waves}")
         plan = dataclasses.replace(plan, records_per_wave=args.records // args.waves)
 
+    faults = None if args.no_faults else smoke_fault_profile()
+    if faults is not None:
+        if args.latency_ms is not None:
+            faults = dataclasses.replace(faults, latency_s=args.latency_ms / 1e3)
+        if args.get_rate is not None:
+            faults = dataclasses.replace(faults, get_rate=args.get_rate)
+
     root = args.store or tempfile.mkdtemp(prefix="cloudsort-store-")
-    store = ObjectStore(root)
+    store = tiered_cloudsort_store(
+        root, spill_prefixes=(plan.spill_prefix,), faults=faults,
+        retry=RetryPolicy(max_attempts=10, base_delay_s=0.01, max_delay_s=0.5),
+    )
     store.create_bucket("cloudsort")
     data_bytes = args.records * plan.record_bytes
+    mode = "clean" if faults is None else (
+        f"faults: latency={faults.latency_s*1e3:.1f}ms "
+        f"bw={faults.bandwidth_bps/1e6:.0f}MB/s "
+        f"throttle={faults.get_rate:.0f}G/{faults.put_rate:.0f}P req/s")
+    print(f"[store] tiered (durable + ssd spill) at {root} — {mode}")
 
     # --- generate into the store (paper §3.2, gensort -> S3) ---
     t0 = time.time()
@@ -73,9 +102,20 @@ def main():
           f"({rep.total_records/sort_s:,.0f} rec/s) — {rep.num_waves} waves, "
           f"working set {rep.working_set_records} records "
           f"({rep.oversubscription:.1f}x out-of-core)")
-    print(f"[spill] {rep.spill_objects} run objects; "
-          f"[reduce] {rep.output_objects} output partitions")
+    print(f"[spill] {rep.spill_objects} run objects -> ssd tier; "
+          f"[reduce] {rep.output_objects} output partitions, "
+          f"{rep.runs_per_reducer}-way streaming merge")
     assert rep.oversubscription >= 4.0, "demo must be genuinely out-of-core"
+
+    # --- bounded-memory reduce: measured peak vs the contract -----------
+    bound = rep.reduce_memory_bound_bytes
+    partition_bytes = rep.total_records // rep.num_reducers * plan.record_bytes
+    print(f"[reduce-mem] peak merge buffer {rep.reduce_peak_merge_bytes/1e3:.1f} KB "
+          f"<= bound runs x chunk = {bound/1e3:.1f} KB "
+          f"(partition would be {partition_bytes/1e3:.1f} KB)")
+    assert rep.reduce_peak_merge_bytes <= bound, (
+        rep.reduce_peak_merge_bytes, bound)
+    assert bound < partition_bytes, "bound must beat materializing a partition"
 
     # --- validate from the store (paper §3.2, valsort over S3 output) ---
     val = valsort.validate_from_store(
@@ -84,18 +124,32 @@ def main():
           f"checksum={val.checksum_match} records={val.total_records}")
     assert val.ok and val.total_records == args.records
 
+    # --- per-tier traffic + faults absorbed -----------------------------
+    for tier, s in (rep.tier_stats or {}).items():
+        print(f"[{tier:>7s}] GET={s.get_requests} PUT={s.put_requests} "
+              f"DEL={s.delete_requests} read={s.bytes_read/1e6:.1f}MB "
+              f"written={s.bytes_written/1e6:.1f}MB throttled={s.throttled} "
+              f"retries={s.retries} stall={s.stall_seconds:.2f}s")
+    print(f"[requests] total GET={rep.stats.get_requests} "
+          f"PUT={rep.stats.put_requests} retries={rep.stats.retries} "
+          f"throttled={rep.stats.throttled}")
+
     # --- cost (paper §3.3.2): measured requests, not Table-1 constants ---
-    print(f"[requests] GET={rep.stats.get_requests} PUT={rep.stats.put_requests} "
-          f"read={rep.stats.bytes_read/1e6:.1f}MB "
-          f"written={rep.stats.bytes_written/1e6:.1f}MB")
     paper = cloudsort_tco()
-    measured = measured_cloudsort_tco(
-        rep.stats, job_hours=rep.job_hours, reduce_hours=rep.reduce_hours,
-        data_bytes=data_bytes,
-    )
+    if rep.tier_stats is not None:
+        measured = measured_tiered_cloudsort_tco(
+            rep.tier_stats, job_hours=rep.job_hours,
+            reduce_hours=rep.reduce_hours, data_bytes=data_bytes)
+        billed = rep.tier_stats["durable"]
+    else:
+        measured = measured_cloudsort_tco(
+            rep.stats, job_hours=rep.job_hours, reduce_hours=rep.reduce_hours,
+            data_bytes=data_bytes)
+        billed = rep.stats
     print(f"[cost] paper 100TB TCO = ${paper.total:.4f} (Table 2: $96.6728)")
-    print(f"[cost] this run (measured {rep.stats.get_requests} GETs / "
-          f"{rep.stats.put_requests} PUTs, {data_bytes/1e12:.6f} TB):")
+    print(f"[cost] this run (billed durable tier: {billed.get_requests} GETs / "
+          f"{billed.put_requests} PUTs incl. retries, "
+          f"{data_bytes/1e12:.6f} TB; ssd spill free):")
     for name, val_ in measured.rows():
         print(f"         {name:<24s} ${val_:.6f}")
 

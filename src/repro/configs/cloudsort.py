@@ -64,17 +64,60 @@ def ooc_smoke_plan():
     A 2^14-record wave working set against a >=4x larger store-resident
     dataset: 8 map waves at the default 2^17 records, each wave split into
     2 streaming rounds, 2 input partitions per wave, 64 KiB download
-    chunks. Lazily imported so configs stay importable without jax.
+    chunks, 16 KiB reduce merge chunks. R1=2 keeps output partitions wide
+    enough that the streaming-reduce memory bound (runs x merge chunk)
+    is strictly below a partition — the bound the example asserts — while
+    each run slice still takes several chunked fetches at smoke scale.
+    Lazily imported so configs stay importable without jax.
     """
     from repro.core.external_sort import ExternalSortPlan
 
     return ExternalSortPlan(
         records_per_wave=1 << 14,
         num_rounds=2,
-        reducers_per_worker=4,
+        reducers_per_worker=2,
         payload_words=4,
         impl="ref",
         input_records_per_partition=1 << 13,
         output_part_records=1 << 13,
         store_chunk_bytes=64 << 10,
+        merge_chunk_bytes=16 << 10,
+    )
+
+
+def smoke_fault_profile():
+    """Fault injection scaled for CPU smoke runs (io/middleware.FaultProfile).
+
+    Proportions mirror S3 — per-request latency, per-connection bandwidth,
+    and GET/PUT token buckets tight enough that a smoke-scale run provokes
+    real 503 SlowDowns and retries — but absolute values are shrunk ~100x
+    so the injected stall adds seconds, not hours, to a laptop run.
+    """
+    from repro.io.middleware import FaultProfile
+
+    return FaultProfile(
+        latency_s=0.0015,
+        jitter_s=0.0005,
+        bandwidth_bps=400e6,
+        get_rate=60.0,
+        put_rate=40.0,
+        burst=12.0,
+    )
+
+
+def s3_fault_profile():
+    """Realistic S3 parameters (the paper's us-west-2 regime): ~25 ms
+    first-byte latency, ~90 MB/s per connection, 5500 GET/s and 3500
+    PUT/s per prefix before 503 Slow Down. Use for full-scale dry runs
+    and the fault benchmark's non-smoke mode, not for CPU smoke tests.
+    """
+    from repro.io.middleware import FaultProfile
+
+    return FaultProfile(
+        latency_s=0.025,
+        jitter_s=0.010,
+        bandwidth_bps=90e6,
+        get_rate=5500.0,
+        put_rate=3500.0,
+        burst=512.0,
     )

@@ -27,6 +27,11 @@ class Ec2CostParams:
     get_per_1000: float = 0.0004
     put_per_1000: float = 0.005
 
+    # Local-SSD spill tier (§2.3): i4i instance NVMe is bundled into
+    # worker_hourly, so its marginal $/GB-month is 0 and spill requests
+    # are free. Nonzero models an EBS-gp3-style attached-volume spill.
+    ssd_gb_month: float = 0.0
+
     @property
     def ebs_hourly(self) -> float:
         # The paper rounds this intermediate to $0.0044 before Equation (1)
@@ -66,6 +71,10 @@ class CostBreakdown:
     storage_output: float
     access_get: float
     access_put: float
+    # Tiered-store leg (0 in the paper's Table 2: i4i NVMe spill is
+    # bundled into the instance price). Populated by the tiered measured
+    # path when ssd_gb_month is nonzero.
+    storage_spill: float = 0.0
 
     @property
     def total(self) -> float:
@@ -73,6 +82,7 @@ class CostBreakdown:
             self.compute
             + self.storage_input
             + self.storage_output
+            + self.storage_spill
             + self.access_get
             + self.access_put
         )
@@ -82,6 +92,7 @@ class CostBreakdown:
             ("compute_vm_cluster", self.compute),
             ("data_storage_input", self.storage_input),
             ("data_storage_output", self.storage_output),
+            ("data_storage_spill_ssd", self.storage_spill),
             ("data_access_input_get", self.access_get),
             ("data_access_output_put", self.access_put),
             ("total", self.total),
@@ -114,9 +125,13 @@ def measured_job_profile(stats, *, job_hours: float, reduce_hours: float) -> Job
     """JobProfile from *measured* store counters, not Table-1 constants.
 
     `stats` is duck-typed: anything with .get_requests / .put_requests —
-    in practice io.object_store.StoreStats deltas captured by
+    in practice io.backends.StoreStats deltas captured by
     core.external_sort (the store counts every chunked map GET, ranged
-    reduce GET, spill PUT and multipart-upload part PUT it actually served).
+    reduce GET, spill PUT and multipart-upload part PUT it actually
+    served). Under a fault-injected store the counters are retry-inflated
+    by construction (io/middleware.MetricsMiddleware counts every issued
+    attempt, throttled or not), so the access legs price the real request
+    traffic a retrying client generates, not the logical operation count.
     """
     return JobProfile(
         job_hours=job_hours,
@@ -139,6 +154,37 @@ def measured_cloudsort_tco(
     to the dataset actually sorted."""
     profile = measured_job_profile(stats, job_hours=job_hours, reduce_hours=reduce_hours)
     return cloudsort_tco(params, profile, data_tb=data_bytes / 1e12)
+
+
+def measured_tiered_cloudsort_tco(
+    tier_stats,
+    *,
+    job_hours: float,
+    reduce_hours: float,
+    data_bytes: float,
+    params: Ec2CostParams = Ec2CostParams(),
+) -> CostBreakdown:
+    """Table 2 priced from a tiered run: only the DURABLE tier's requests
+    hit the S3 access legs (the paper's 6M GET / 1M PUT arithmetic never
+    included spill traffic — spill goes to local SSD, §2.3), while the
+    SSD tier's bytes price the spill-storage leg at ssd_gb_month (0 for
+    bundled instance NVMe, like the paper's i4i workers).
+
+    `tier_stats` is core.external_sort.ExternalSortReport.tier_stats:
+    a {"durable": StoreStats, "ssd": StoreStats} delta mapping from
+    io.tiered.TieredStore.per_tier_stats().
+    """
+    durable = tier_stats["durable"]
+    ssd = tier_stats.get("ssd")
+    base = measured_cloudsort_tco(
+        durable, job_hours=job_hours, reduce_hours=reduce_hours,
+        data_bytes=data_bytes, params=params)
+    spill = 0.0
+    if ssd is not None and params.ssd_gb_month:
+        spill_gb = ssd.bytes_written / 1e9
+        spill = (params.ssd_gb_month / params.hours_per_month
+                 * spill_gb * job_hours)
+    return dataclasses.replace(base, storage_spill=spill)
 
 
 # ---------------------------------------------------------------------------

@@ -7,49 +7,60 @@ capacity, while device memory holds only one map wave's working set.
 Paper mapping:
 
   map waves (§2.3, §2.5): input partitions stream from the store in ranged
-      chunks (io/object_store.get_chunks — one GET per chunk, the paper's
+      chunks (io/backends.get_chunks — one GET per chunk, the paper's
       "120 chunks" map download), double-buffered against device compute
-      (io/staging.prefetch). Each wave runs the in-memory two-stage
-      streaming exoshuffle (core/streaming.py), after which every worker
-      holds one globally range-partitioned sorted run.
+      (io/staging.prefetch, retry-aware against transient store stalls).
+      Each wave runs the in-memory two-stage streaming exoshuffle
+      (core/streaming.py), after which every worker holds one globally
+      range-partitioned sorted run.
 
-  spill (§2.3): each worker's merged run is written back to the store as
-      one sorted run object — the paper spills to local SSD; we spill to
-      the store so the spill survives worker death and is addressable by
-      the reduce pass. Per-reducer offsets into the run are recorded in
-      the object's manifest metadata, write-behind via io/staging.AsyncWriter
-      so upload overlaps the next wave's sort.
+  spill (§2.3): each worker's merged run is written back under
+      plan.spill_prefix as one sorted run object. Against a TieredStore
+      (io/tiered.py) that prefix routes to the local-SSD tier — the
+      paper's actual spill target — while input/output keys stay on the
+      durable (S3-like, throttled, billed) tier. Per-reducer offsets into
+      the run are recorded in the object's manifest metadata; writes are
+      write-behind via io/staging.AsyncWriter so upload overlaps the next
+      wave's sort.
 
-  reduce (§2.4): output partition r k-way merges its slice of every
-      spilled run. Each slice is fetched with ONE ranged GET (the
-      interleaved record layout of io/records makes a record range a byte
-      range), merged with kernels/merge_sorted via ops.kway_merge, and
-      uploaded as a multipart object (one PUT per part — the paper's "40
-      chunks" reduce upload). Fetch of partition r+1 overlaps the merge of
-      partition r.
+  reduce (§2.4): output partition r streaming-merges its slice of every
+      spilled run with *bounded* memory: each run slice is fetched in
+      plan.merge_chunk_bytes ranged chunks (all empty cursors refill
+      concurrently, so an emit cycle pays ~one request stall, not one per
+      run), buffered records are merged up to the smallest last-loaded
+      key over still-active runs (so nothing can arrive later that sorts
+      before what is emitted), and merged bytes stream straight into an
+      incremental multipart upload (one PUT per part, the paper's "40
+      chunks" reduce upload) through a per-partition ordered write-behind
+      queue — up to max_inflight_writes partitions upload concurrently
+      while later partitions merge. Reduce host memory is therefore
+      ∝ runs × merge_chunk_bytes — NOT partition size — and the measured
+      peak is reported (reduce_peak_merge_bytes).
 
 Every store interaction is request-accounted, so the Table-2 TCO can be
-computed from *measured* GET/PUT counts (core/cost_model.measured_cloudsort_tco)
-instead of the paper's hardcoded 6M/1M constants.
+computed from *measured* GET/PUT counts (core/cost_model.measured_cloudsort_tco,
+or .measured_tiered_cloudsort_tco for per-tier legs) instead of the
+paper's hardcoded 6M/1M constants.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
+import sys
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import payload as pay
 from repro.core.exoshuffle import ShuffleConfig
 from repro.core.streaming import streaming_sort
 from repro.io import records as rec
 from repro.io import staging
-from repro.io.object_store import ObjectStore, StoreStats
-from repro.kernels import ops
+from repro.io.backends import RetryableError, StoreBackend, StoreStats
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,8 +68,10 @@ class ExternalSortPlan:
     """Out-of-core schedule: what fits in HBM and how the store is laid out.
 
     records_per_wave is the device-resident working set — the analogue of
-    the paper's (map tasks in flight) x (2 GB block) bound. Total dataset
-    size / records_per_wave = the out-of-core oversubscription factor.
+    the paper's (map tasks in flight) x (2 GB block) bound.
+    merge_chunk_bytes is the reduce-side counterpart: the per-run fetch
+    granularity of the streaming merge, so reduce host memory is bounded
+    by runs x merge_chunk_bytes instead of a whole output partition.
     """
 
     records_per_wave: int  # device working set (records, across the mesh)
@@ -73,8 +86,10 @@ class ExternalSortPlan:
     input_records_per_partition: int = 1 << 13  # gensort object size
     output_part_records: int = 1 << 13  # multipart-upload part size
     store_chunk_bytes: int = 256 << 10  # map download GET granularity
+    merge_chunk_bytes: int = 64 << 10  # reduce per-run fetch granularity
     prefetch_depth: int = 2  # double buffering
     max_inflight_writes: int = 2  # spill/upload backpressure
+    io_retries: int = 2  # staging-level re-reads of a failed wave load
 
     @property
     def record_bytes(self) -> int:
@@ -94,12 +109,22 @@ class ExternalSortReport:
     map_seconds: float
     reduce_seconds: float
     working_set_records: int
-    stats: StoreStats  # delta over the sort (map + reduce)
+    stats: StoreStats  # delta over the sort (map + reduce), all tiers
+    runs_per_reducer: int = 0  # k of the streaming k-way merge
+    merge_chunk_bytes: int = 0  # the plan's reduce fetch granularity
+    reduce_peak_merge_bytes: int = 0  # measured max of buffered run bytes
+    tier_stats: dict[str, StoreStats] | None = None  # per-tier deltas
 
     @property
     def oversubscription(self) -> float:
         """Dataset size / per-wave device working set (>1 = out-of-core)."""
         return self.total_records / self.working_set_records
+
+    @property
+    def reduce_memory_bound_bytes(self) -> int:
+        """The streaming-merge guarantee: peak merge memory never exceeds
+        runs x merge_chunk_bytes (+ one record of rounding per run)."""
+        return self.runs_per_reducer * self.merge_chunk_bytes
 
     @property
     def job_hours(self) -> float:
@@ -135,43 +160,93 @@ def _group_waves(inputs, counts, records_per_wave: int):
     return waves
 
 
-def _merge_spilled_runs(runs, payload_words: int, impl: str):
-    """k-way merge sorted runs [(keys, ids, payload), ...] -> valid arrays.
+class _RunCursor:
+    """Bounded window over one spilled run's reducer slice.
 
-    Runs are padded to a (K, L) power-of-two grid of lex-max records and
-    merged with the same kernels/merge_sorted tournament the in-memory
-    reduce uses; payload rows are re-aligned by id join afterwards
-    (core/payload.align_payload_to_merge) instead of riding through every
-    compare-exchange.
+    Holds at most `chunk_records` decoded records at a time; `refill`
+    issues one ranged GET for the next chunk, `take_upto` consumes the
+    buffered prefix that is safe to emit (every record <= bound).
     """
-    pw = int(payload_words)
-    if not runs:
+
+    __slots__ = ("_store", "_bucket", "_key", "_hi", "_next", "_chunk",
+                 "_pw", "k64", "keys", "ids", "payload")
+
+    def __init__(self, store, bucket, key, lo, hi, payload_words, chunk_records):
+        self._store = store
+        self._bucket = bucket
+        self._key = key
+        self._next = int(lo)
+        self._hi = int(hi)
+        self._chunk = int(chunk_records)
+        self._pw = int(payload_words)
+        self.keys = np.empty((0,), np.uint32)
+        self.ids = np.empty((0,), np.uint32)
+        self.payload = None
+        self.k64 = np.empty((0,), np.uint64)
+
+    @property
+    def has_more_remote(self) -> bool:
+        return self._next < self._hi
+
+    @property
+    def exhausted(self) -> bool:
+        return not self.has_more_remote and self.k64.size == 0
+
+    @property
+    def buffered_bytes(self) -> int:
+        return self.k64.size * rec.record_bytes(self._pw)
+
+    def refill(self) -> None:
+        n = min(self._chunk, self._hi - self._next)
+        start, length = rec.body_range(self._next, n, self._pw)
+        body = self._store.get_range(self._bucket, self._key, start, length)
+        self._next += n
+        k, i, p = rec.decode_body(body, self._pw)
+        self.keys, self.ids, self.payload = k, i, p
+        self.k64 = k.astype(np.uint64) << np.uint64(32) | i.astype(np.uint64)
+
+    def take_upto(self, bound):
+        """Consume and return the (keys, ids, payload, k64) prefix with
+        k64 <= bound; bound=None consumes everything buffered."""
+        cut = self.k64.size if bound is None else int(
+            np.searchsorted(self.k64, bound, side="right"))
+        out = (self.keys[:cut], self.ids[:cut],
+               None if self.payload is None else self.payload[:cut],
+               self.k64[:cut])
+        self.keys, self.ids = self.keys[cut:], self.ids[cut:]
+        self.payload = None if self.payload is None else self.payload[cut:]
+        self.k64 = self.k64[cut:]
+        return out
+
+
+def _merge_fragments(frags, payload_words: int):
+    """Merge already-sorted fragments (one per run) into one sorted batch.
+
+    Fragment keys are globally unique (key<<32|id with unique ids), so a
+    plain stable argsort over the concatenated packed keys is an exact
+    k-way merge of the emit window — small (≤ runs x chunk records) by
+    construction, which is the whole point of the streaming reduce.
+    """
+    frags = [f for f in frags if f[3].size]
+    if not frags:
         empty = np.empty((0,), np.uint32)
+        pw = int(payload_words)
         return empty, empty, (np.empty((0, pw), np.uint32) if pw else None)
-    k_grid = ops.next_pow2(len(runs))
-    run_len = max(ops.next_pow2(max(len(r[0]) for r in runs)), 1)
-    kk = np.full((k_grid, run_len), 0xFFFFFFFF, np.uint32)
-    ii = np.full((k_grid, run_len), 0xFFFFFFFF, np.uint32)
-    pp = np.zeros((k_grid, run_len, pw), np.uint32) if pw else None
-    valid = 0
-    for t, (k, i, p) in enumerate(runs):
-        kk[t, : len(k)] = k
-        ii[t, : len(k)] = i
-        if pw:
-            pp[t, : len(k)] = p
-        valid += len(k)
-    mk, mv = ops.kway_merge(jnp.asarray(kk), jnp.asarray(ii), impl=impl)
-    out_p = None
-    if pw:
-        aligned = pay.align_payload_to_merge(
-            jnp.asarray(ii.reshape(-1)), jnp.asarray(pp.reshape(-1, pw)), mv
-        )
-        out_p = np.asarray(aligned[:valid])
-    return np.asarray(mk[:valid]), np.asarray(mv[:valid]), out_p
+    if len(frags) == 1:
+        k, i, p, _ = frags[0]
+        return k, i, p
+    k64 = np.concatenate([f[3] for f in frags])
+    order = np.argsort(k64, kind="stable")
+    keys = np.concatenate([f[0] for f in frags])[order]
+    ids = np.concatenate([f[1] for f in frags])[order]
+    payload = None
+    if payload_words:
+        payload = np.concatenate([f[2] for f in frags])[order]
+    return keys, ids, payload
 
 
 def external_sort(
-    store: ObjectStore,
+    store: StoreBackend,
     bucket: str,
     *,
     mesh: jax.sharding.Mesh,
@@ -180,10 +255,12 @@ def external_sort(
 ) -> ExternalSortReport:
     """Sort every record under plan.input_prefix into plan.output_prefix.
 
-    Input objects must be io/records-encoded with plan.payload_words words
-    of payload and globally unique ids (data/gensort.write_to_store's
-    layout). Returns the run report; validate the output with
-    data/valsort.validate_from_store.
+    `store` is any io/backends.StoreBackend — the plain ObjectStore, a
+    fault-injected middleware stack, or a TieredStore (in which case the
+    report carries per-tier request deltas). Input objects must be
+    io/records-encoded with plan.payload_words words of payload and
+    globally unique ids (data/gensort.write_to_store's layout). Returns
+    the run report; validate the output with data/valsort.validate_from_store.
     """
     axis = tuple([axis_names] if isinstance(axis_names, str) else axis_names)
     w = int(math.prod(mesh.shape[a] for a in axis))
@@ -211,6 +288,8 @@ def external_sort(
         for meta in store.list_objects(bucket, prefix):
             store.delete(bucket, meta.key)
     base_stats = store.stats_snapshot()
+    tier_base = (store.per_tier_stats()
+                 if hasattr(store, "per_tier_stats") else None)
 
     sort_wave = jax.jit(
         lambda k, i: streaming_sort(
@@ -243,7 +322,9 @@ def external_sort(
     with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
         wave_loads = (lambda objs=objs: load_wave(objs) for objs in waves)
         for g, (keys, ids, payload) in enumerate(
-            staging.prefetch(wave_loads, depth=plan.prefetch_depth)
+            staging.prefetch(wave_loads, depth=plan.prefetch_depth,
+                             retries=plan.io_retries,
+                             retry_on=(RetryableError,))
         ):
             sk, si, vcounts, ovf = sort_wave(jnp.asarray(keys), jnp.asarray(ids))
             sk, si, vcounts = np.asarray(sk), np.asarray(si), np.asarray(vcounts)
@@ -283,40 +364,127 @@ def external_sort(
                 )
     map_seconds = time.perf_counter() - t0
 
-    # ---- reduce: ranged-GET run slices -> k-way merge -> multipart up --
+    # ---- reduce: streaming k-way merge, bounded chunks per run --------
+    # Memory contract: each of the (≤ num_waves) run cursors buffers at
+    # most merge_chunk_bytes of decoded records, the emit window is merged
+    # and encoded immediately, and completed output parts stream through
+    # write-behind queues. Overlap: all empty cursors of an emit cycle
+    # refill CONCURRENTLY (one stall per cycle, not one per run), and each
+    # reducer gets its own single-thread uploader (sequential put_part
+    # calls of one multipart session stay ordered) while up to
+    # max_inflight_writes reducers' uploads run concurrently — so upload
+    # stalls of partition r overlap the merge of partitions r+1....
     num_waves = len(waves)
     num_reducers = w * r1
+    if plan.merge_chunk_bytes < plan.record_bytes:
+        raise ValueError(
+            f"merge_chunk_bytes={plan.merge_chunk_bytes} must hold at least "
+            f"one {plan.record_bytes}-byte record, else the runs x "
+            "merge_chunk_bytes reduce-memory bound cannot be met"
+        )
+    chunk_records = plan.merge_chunk_bytes // plan.record_bytes
+    part_bytes = plan.output_part_records * plan.record_bytes
+    peak_merge_bytes = 0
 
-    def fetch_reducer(r: int):
+    def run_cursors(r: int) -> tuple[list[_RunCursor], int]:
         wid, j = divmod(r, r1)
-        runs = []
+        cursors, n_total = [], 0
         for g in range(num_waves):
             offs = spill_offsets[(g, wid)]
             lo, hi = int(offs[j]), int(offs[j + 1])
             if hi > lo:
-                start, length = rec.body_range(lo, hi - lo, pw)
-                body = store.get_range(bucket, _spill_key(plan, g, wid), start, length)
-                runs.append(rec.decode_body(body, pw))
-        return runs
+                cursors.append(_RunCursor(
+                    store, bucket, _spill_key(plan, g, wid),
+                    lo, hi, pw, chunk_records))
+                n_total += hi - lo
+        return cursors, n_total
 
-    part_bytes = plan.output_part_records * plan.record_bytes
+    def _finish_session(uploader: staging.AsyncWriter, mp) -> None:
+        """Queued after a session's part uploads on its single-thread
+        writer: by the time it runs, every part either succeeded or set
+        the writer's failure flag — commit only a fully-uploaded object
+        (a truncated commit would carry a self-consistent CRC etag that
+        IntegrityError can never catch)."""
+        if uploader.failed:
+            mp.abort()
+        else:
+            mp.complete()
+
     t0 = time.perf_counter()
-    with staging.AsyncWriter(plan.max_inflight_writes) as uploader:
-        fetches = (lambda r=r: fetch_reducer(r) for r in range(num_reducers))
-        for r, runs in enumerate(staging.prefetch(fetches, depth=plan.prefetch_depth)):
-            mk, mi, mp = _merge_spilled_runs(runs, pw, plan.impl)
-            data = rec.encode_records(mk, mi, mp)
-            # >= 1 part always: even an empty partition has the 16-B header.
-            parts = [data[o : o + part_bytes] for o in range(0, len(data), part_bytes)]
-            uploader.submit(
-                store.put_multipart,
-                bucket,
-                _output_key(plan, r),
-                parts,
-                metadata={"records": len(mk), "reducer": r},
-            )
+    live_uploaders: collections.deque[staging.AsyncWriter] = collections.deque()
+    refill_pool = ThreadPoolExecutor(
+        max_workers=min(16, max(2, num_waves)),
+        thread_name_prefix="reduce-refill")
+    try:
+        for r in range(num_reducers):
+            cursors, n_total = run_cursors(r)
+            mp = store.multipart(bucket, _output_key(plan, r),
+                                 metadata={"records": n_total, "reducer": r})
+            uploader = staging.AsyncWriter(plan.max_inflight_writes,
+                                           max_workers=1)
+            live_uploaders.append(uploader)
+            try:
+                # Record count is known up front (sum of run-slice
+                # lengths), so the header streams first, body chunks follow.
+                outbuf = bytearray(rec.encode_header(n_total, pw))
+                while cursors:
+                    need = [c for c in cursors
+                            if c.k64.size == 0 and c.has_more_remote]
+                    if len(need) == 1:
+                        need[0].refill()
+                    elif need:  # concurrent ranged GETs: one RTT per cycle
+                        list(refill_pool.map(_RunCursor.refill, need))
+                    buffered = sum(c.buffered_bytes for c in cursors)
+                    peak_merge_bytes = max(peak_merge_bytes, buffered)
+                    # Safe emit bound: the smallest last-buffered key among
+                    # runs that still have un-fetched records — nothing
+                    # later can sort below it. When no run has remote data
+                    # left, everything buffered is emittable.
+                    remote_tails = [c.k64[-1] for c in cursors
+                                    if c.has_more_remote]
+                    bound = min(remote_tails) if remote_tails else None
+                    frags = [c.take_upto(bound) for c in cursors]
+                    cursors = [c for c in cursors if not c.exhausted]
+                    mk, mi, mpay = _merge_fragments(frags, pw)
+                    if mk.size:
+                        outbuf += rec.encode_body(mk, mi, mpay)
+                    while len(outbuf) >= part_bytes:
+                        uploader.submit(mp.put_part, bytes(outbuf[:part_bytes]))
+                        del outbuf[:part_bytes]
+                # >= 1 part always: an empty partition still has its header.
+                if outbuf or n_total == 0:
+                    uploader.submit(mp.put_part, bytes(outbuf))
+            except BaseException:
+                # Merge died mid-session: discard the partial upload after
+                # any in-flight parts finish (never commit it).
+                uploader.submit(mp.abort)
+                raise
+            uploader.submit(_finish_session, uploader, mp)
+            # Retire the oldest uploads once enough sessions are in flight;
+            # close() re-raises that session's first failure.
+            while len(live_uploaders) > plan.max_inflight_writes:
+                live_uploaders.popleft().close()
+    finally:
+        refill_pool.shutdown(wait=True)
+        in_flight = sys.exc_info()[1]
+        first_exc = None
+        while live_uploaders:
+            try:
+                live_uploaders.popleft().close()
+            except BaseException as e:  # close every session before raising
+                if first_exc is None:
+                    first_exc = e
+        # Surface a background upload failure — unless the merge loop is
+        # already unwinding with its own exception (don't mask it).
+        if first_exc is not None and in_flight is None:
+            raise first_exc
     reduce_seconds = time.perf_counter() - t0
 
+    tier_stats = None
+    if tier_base is not None:
+        tier_now = store.per_tier_stats()
+        tier_stats = {name: tier_now[name] - tier_base[name]
+                      for name in tier_now}
     return ExternalSortReport(
         total_records=total,
         num_waves=num_waves,
@@ -328,4 +496,8 @@ def external_sort(
         reduce_seconds=reduce_seconds,
         working_set_records=plan.records_per_wave,
         stats=store.stats_snapshot() - base_stats,
+        runs_per_reducer=num_waves,
+        merge_chunk_bytes=plan.merge_chunk_bytes,
+        reduce_peak_merge_bytes=peak_merge_bytes,
+        tier_stats=tier_stats,
     )

@@ -1,21 +1,41 @@
 """Object-store I/O subsystem (paper §2.2–§2.5).
 
-  object_store — filesystem-backed S3-contract emulation with per-request
-                 GET/PUT accounting (feeds the Table-2 TCO model)
+  backends     — StoreBackend protocol; filesystem + in-memory data planes
+  middleware   — latency/bandwidth, 503 throttling, retry/backoff, metrics
+                 layers composable over any backend
+  tiered       — TieredStore: local-SSD spill tier + durable (S3-like) tier
+  object_store — ObjectStore, the metrics-wrapped filesystem composition
+                 (the PR-1 surface, unchanged for existing consumers)
   records      — interleaved (key, id, payload) record-block codec
   staging      — async double-buffered host<->device staging
 
 `core/external_sort.py` composes these into the out-of-core CloudSort
 driver: dataset size is bounded by store capacity, not HBM.
 """
-from repro.io.object_store import ObjectMeta, ObjectNotFound, ObjectStore, StoreStats
+from repro.io.backends import (FilesystemBackend, IntegrityError,
+                               MemoryBackend, MultipartUpload, ObjectMeta,
+                               ObjectNotFound, RetryableError, SlowDown,
+                               StoreBackend, StoreStats)
+from repro.io.middleware import (FaultProfile, LatencyBandwidthMiddleware,
+                                 MetricsMiddleware, RetryMiddleware,
+                                 RetryPolicy, StoreMiddleware,
+                                 ThrottlingMiddleware, fault_injected)
+from repro.io.object_store import ObjectStore
 from repro.io.records import (body_range, decode_body, decode_header,
-                              decode_records, encode_records, record_bytes)
+                              decode_records, encode_body, encode_header,
+                              encode_records, record_bytes)
 from repro.io.staging import AsyncWriter, prefetch
+from repro.io.tiered import TieredStore, tiered_cloudsort_store
 
 __all__ = [
-    "ObjectMeta", "ObjectNotFound", "ObjectStore", "StoreStats",
+    "FilesystemBackend", "IntegrityError", "MemoryBackend", "MultipartUpload",
+    "ObjectMeta", "ObjectNotFound", "ObjectStore", "RetryableError",
+    "SlowDown", "StoreBackend", "StoreStats",
+    "FaultProfile", "LatencyBandwidthMiddleware", "MetricsMiddleware",
+    "RetryMiddleware", "RetryPolicy", "StoreMiddleware",
+    "ThrottlingMiddleware", "fault_injected",
+    "TieredStore", "tiered_cloudsort_store",
     "body_range", "decode_body", "decode_header", "decode_records",
-    "encode_records", "record_bytes",
+    "encode_body", "encode_header", "encode_records", "record_bytes",
     "AsyncWriter", "prefetch",
 ]

@@ -1,0 +1,500 @@
+"""Store backends: the data plane under the S3-contract interface.
+
+The paper's shuffle treats "storage" as three different things (§2.2–§2.3):
+durable object storage for input/output (S3 — high latency, per-request
+fees, 503 throttling), local SSD for spilled runs (fast, free, dies with
+the worker), and whatever a test harness wants (memory). PR 1 hard-wired
+all of them to one filesystem class; this module splits the contract from
+the implementation so the same external-sort driver can run against any
+of them, and so the middleware stack (io/middleware.py) can inject the
+S3 behaviours — latency, bandwidth, throttling, retries, accounting —
+around *any* backend.
+
+Layering:
+
+  StoreBackend (ABC)   — the S3 surface the paper exercises. Subclasses
+      implement only the primitives (create_bucket, multipart, get,
+      get_range, head, list_objects, delete); `put`, `put_multipart`
+      and `get_chunks` are derived on the base class in terms of the
+      primitives, so a middleware that intercepts the primitives
+      automatically covers the derived calls too.
+
+  FilesystemBackend    — PR 1's filesystem emulation (persistent JSON
+      manifests, atomic object replace, CRC32 etags), minus accounting
+      (now MetricsMiddleware's job).
+
+  MemoryBackend        — dict-backed store for tests and as the "local
+      SSD" tier when tmpfs-like speed is wanted without touching disk.
+
+Writes go through multipart *sessions* (`multipart()` -> MultipartUpload):
+parts stream to the backend as they are produced, which is what lets the
+reduce pass upload a merged partition incrementally instead of
+materializing it (core/external_sort.py).
+
+Thread-safe: the staging layer issues puts/gets from background threads
+to overlap I/O with device compute (§2.5).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import json
+import os
+import threading
+import zlib
+from typing import Iterable, Iterator
+
+
+class ObjectNotFound(KeyError):
+    """Missing bucket or key (the S3 404)."""
+
+
+class IntegrityError(RuntimeError):
+    """Stored bytes do not match the manifest (size or CRC etag mismatch).
+
+    A real error type, not an `assert` — corruption checks must survive
+    `python -O`.
+    """
+
+
+class RetryableError(RuntimeError):
+    """Transient store failure a client is expected to retry."""
+
+
+class SlowDown(RetryableError):
+    """S3 '503 Slow Down': request rate exceeded (io/middleware.py)."""
+
+
+@dataclasses.dataclass
+class StoreStats:
+    """Cumulative request/byte counters — the measured Table-2 inputs.
+
+    Request counters count *attempts issued*, so a GET that is throttled
+    twice and then succeeds contributes 3 to `get_requests` — the
+    retry-inflated count the cost model bills (an S3 retry is a new
+    request). `throttled` / `retries` break the inflation out, and
+    `stall_seconds` accumulates simulated network time injected by
+    LatencyBandwidthMiddleware (summed across threads, so it can exceed
+    wall time when requests overlap — that overhang is the overlap the
+    staging layer hides).
+    """
+
+    get_requests: int = 0
+    put_requests: int = 0
+    head_requests: int = 0
+    list_requests: int = 0
+    delete_requests: int = 0  # free-tier priced, but tracked
+    bytes_read: int = 0
+    bytes_written: int = 0
+    throttled: int = 0  # attempts rejected with SlowDown
+    retries: int = 0  # re-issues performed by RetryMiddleware
+    stall_seconds: float = 0.0  # simulated latency/bandwidth/backoff time
+
+    def __post_init__(self):
+        # One instance may be shared by several middleware layers writing
+        # from staging threads; updates go through add()/snapshot() under
+        # this lock (not a field — delta arithmetic below ignores it).
+        object.__setattr__(self, "_lock", threading.Lock())
+
+    def add(self, field: str, amount) -> None:
+        """Atomic counter bump (thread-safe across sharing layers)."""
+        with self._lock:
+            setattr(self, field, getattr(self, field) + amount)
+
+    def snapshot(self) -> "StoreStats":
+        """Consistent copy of the counters (for before/after deltas)."""
+        with self._lock:
+            return StoreStats(**{
+                f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+            })
+
+    def __sub__(self, other: "StoreStats") -> "StoreStats":
+        return StoreStats(**{
+            f.name: getattr(self, f.name) - getattr(other, f.name)
+            for f in dataclasses.fields(self)
+        })
+
+    def __add__(self, other: "StoreStats") -> "StoreStats":
+        return StoreStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(self)
+        })
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectMeta:
+    """Manifest entry: what `head` returns (S3 HeadObject)."""
+
+    key: str
+    size: int
+    etag: str  # crc32 of the object bytes
+    parts: int  # 1 for plain puts, #parts for multipart uploads
+    metadata: dict
+
+
+def _check_key(key: str) -> str:
+    # Real exceptions, not asserts: the path-traversal guard must survive
+    # `python -O` (a ".."-segment key would escape the bucket directory).
+    if not key or key.startswith(("/", ".")) or ".." in key.split("/"):
+        raise ValueError(f"bad object key {key!r}")
+    return key
+
+
+def _verify_integrity(where: str, data: bytes, entry: dict) -> bytes:
+    """Whole-object read check shared by every backend: size and CRC etag
+    must match the manifest, as real exceptions (survives `python -O`)."""
+    if len(data) != entry["size"]:
+        raise IntegrityError(
+            f"{where}: size {len(data)} != manifest {entry['size']}")
+    if f"{zlib.crc32(data):08x}" != entry["etag"]:
+        raise IntegrityError(f"{where}: CRC mismatch vs etag")
+    return data
+
+
+class MultipartUpload(abc.ABC):
+    """An in-progress multipart upload (S3 CreateMultipartUpload session).
+
+    `put_part` is the billable unit (one PUT per part, §3.3.2's "40
+    chunks" reduce upload); initiate/complete are free, matching the
+    paper's request arithmetic. Parts become visible atomically at
+    `complete()`; `abort()` discards them.
+    """
+
+    @abc.abstractmethod
+    def put_part(self, data: bytes) -> None: ...
+
+    @abc.abstractmethod
+    def complete(self) -> ObjectMeta: ...
+
+    @abc.abstractmethod
+    def abort(self) -> None: ...
+
+
+class StoreBackend(abc.ABC):
+    """The S3 surface (paper §2.2): one store = one endpoint.
+
+    Subclasses provide the primitives; `put` / `put_multipart` /
+    `get_chunks` are derived here so every byte flows through the
+    primitives (and therefore through any wrapping middleware) exactly
+    once. Instances expose `chunk_size`, the default ranged-GET
+    granularity.
+    """
+
+    # Annotation only (no class attr): middleware resolves chunk_size via
+    # attribute delegation to the wrapped backend instance.
+    chunk_size: int
+
+    # -- primitives (implement in backends, intercept in middleware) -------
+
+    @abc.abstractmethod
+    def create_bucket(self, bucket: str) -> None: ...
+
+    @abc.abstractmethod
+    def multipart(self, bucket: str, key: str,
+                  metadata: dict | None = None) -> MultipartUpload: ...
+
+    @abc.abstractmethod
+    def get(self, bucket: str, key: str) -> bytes: ...
+
+    @abc.abstractmethod
+    def get_range(self, bucket: str, key: str, start: int, length: int) -> bytes: ...
+
+    @abc.abstractmethod
+    def head(self, bucket: str, key: str) -> ObjectMeta: ...
+
+    @abc.abstractmethod
+    def list_objects(self, bucket: str, prefix: str = "") -> list[ObjectMeta]: ...
+
+    @abc.abstractmethod
+    def delete(self, bucket: str, key: str) -> None: ...
+
+    # -- derived (never overridden by middleware) ---------------------------
+
+    def put(self, bucket: str, key: str, data: bytes,
+            metadata: dict | None = None) -> ObjectMeta:
+        """S3 PutObject: one PUT request (a single-part session)."""
+        mp = self.multipart(bucket, key, metadata)
+        try:
+            mp.put_part(bytes(data))
+            return mp.complete()
+        except BaseException:
+            mp.abort()
+            raise
+
+    def put_multipart(self, bucket: str, key: str, parts: Iterable[bytes],
+                      metadata: dict | None = None) -> ObjectMeta:
+        """S3 multipart upload: one PUT request counted per part.
+
+        `parts` may be a lazy iterable — each part streams to the backend
+        as it is produced, so the whole object never has to exist in
+        memory (the streaming reduce path).
+        """
+        mp = self.multipart(bucket, key, metadata)
+        try:
+            for p in parts:
+                mp.put_part(bytes(p))
+            return mp.complete()
+        except BaseException:
+            mp.abort()
+            raise
+
+    def get_chunks(self, bucket: str, key: str,
+                   chunk_size: int | None = None) -> Iterator[bytes]:
+        """Download an object as ranged chunks — the paper's map download
+        pattern (one GET per chunk, §3.3.2's "120 chunks" per map task).
+
+        A zero-length object yields nothing and issues no GET, matching
+        S3 (a ranged GET on an empty object is a 416, not a request a
+        sane client pays for).
+        """
+        size = self.head(bucket, key).size
+        step = int(chunk_size or self.chunk_size)
+        assert step > 0
+        for off in range(0, size, step):
+            yield self.get_range(bucket, key, off, step)
+
+
+# ---------------------------------------------------------------------------
+# Filesystem backend (the PR-1 emulation, accounting removed)
+# ---------------------------------------------------------------------------
+
+_MANIFEST = "manifest.json"
+_OBJECTS = "objects"
+
+
+class FilesystemBackend(StoreBackend):
+    """Buckets under `root`, objects as files, manifests as JSON.
+
+    The manifest persists so a store can be reopened (the S3 namespace
+    survives process death, unlike worker memory).
+    """
+
+    def __init__(self, root: str, *, chunk_size: int = 4 << 20):
+        self.root = root
+        self.chunk_size = int(chunk_size)
+        self._lock = threading.Lock()
+        self._manifests: dict[str, dict[str, dict]] = {}
+        self._flush_locks: dict[str, threading.Lock] = {}
+        os.makedirs(root, exist_ok=True)
+        for bucket in sorted(os.listdir(root)):
+            mpath = os.path.join(root, bucket, _MANIFEST)
+            if os.path.isfile(mpath):
+                with open(mpath) as f:
+                    self._manifests[bucket] = json.load(f)
+                self._flush_locks[bucket] = threading.Lock()
+
+    # -- namespace ---------------------------------------------------------
+
+    def create_bucket(self, bucket: str) -> None:
+        os.makedirs(os.path.join(self.root, bucket, _OBJECTS), exist_ok=True)
+        with self._lock:
+            self._manifests.setdefault(bucket, {})
+            self._flush_locks.setdefault(bucket, threading.Lock())
+        self._flush_manifest(bucket)
+
+    def _object_path(self, bucket: str, key: str) -> str:
+        return os.path.join(self.root, bucket, _OBJECTS, *_check_key(key).split("/"))
+
+    def _flush_manifest(self, bucket: str) -> None:
+        """Persist the bucket manifest. The JSON dump happens OUTSIDE the
+        store-wide lock so concurrent staging writers only contend on the
+        cheap dict update, not the file I/O; a per-bucket flush lock keeps
+        file writes ordered, and the snapshot is re-taken under the main
+        lock so the last flusher always persists the newest state."""
+        with self._flush_locks[bucket]:
+            with self._lock:
+                snapshot = dict(self._manifests[bucket])
+            mpath = os.path.join(self.root, bucket, _MANIFEST)
+            tmp = f"{mpath}.{threading.get_ident()}.tmp"
+            with open(tmp, "w") as f:
+                json.dump(snapshot, f)
+            os.replace(tmp, mpath)
+
+    def _entry(self, bucket: str, key: str) -> dict:
+        try:
+            return self._manifests[bucket][key]
+        except KeyError:
+            raise ObjectNotFound(f"{bucket}/{key}") from None
+
+    @staticmethod
+    def _meta(key: str, e: dict) -> ObjectMeta:
+        return ObjectMeta(key=key, size=e["size"], etag=e["etag"],
+                          parts=e["parts"], metadata=dict(e["metadata"]))
+
+    # -- writes ------------------------------------------------------------
+
+    def multipart(self, bucket: str, key: str,
+                  metadata: dict | None = None) -> "_FsMultipart":
+        if bucket not in self._manifests:
+            raise ObjectNotFound(bucket)
+        return _FsMultipart(self, bucket, key, metadata)
+
+    def _commit(self, bucket: str, key: str, entry: dict) -> ObjectMeta:
+        with self._lock:
+            self._manifests[bucket][key] = entry
+        self._flush_manifest(bucket)
+        return self._meta(key, entry)
+
+    # -- reads -------------------------------------------------------------
+
+    def get(self, bucket: str, key: str) -> bytes:
+        """S3 GetObject (whole object), CRC-etag verified end to end."""
+        e = self._entry(bucket, key)
+        with open(self._object_path(bucket, key), "rb") as f:
+            data = f.read()
+        return _verify_integrity(f"{bucket}/{key}", data, e)
+
+    def get_range(self, bucket: str, key: str, start: int, length: int) -> bytes:
+        """S3 ranged GET; truncates at object end like S3."""
+        e = self._entry(bucket, key)
+        start = max(int(start), 0)
+        length = min(int(length), max(e["size"] - start, 0))
+        with open(self._object_path(bucket, key), "rb") as f:
+            f.seek(start)
+            return f.read(length)
+
+    # -- metadata ----------------------------------------------------------
+
+    def head(self, bucket: str, key: str) -> ObjectMeta:
+        return self._meta(key, self._entry(bucket, key))
+
+    def list_objects(self, bucket: str, prefix: str = "") -> list[ObjectMeta]:
+        if bucket not in self._manifests:
+            raise ObjectNotFound(bucket)
+        with self._lock:
+            items = sorted(self._manifests[bucket].items())
+        return [self._meta(k, e) for k, e in items if k.startswith(prefix)]
+
+    def delete(self, bucket: str, key: str) -> None:
+        self._entry(bucket, key)
+        os.remove(self._object_path(bucket, key))
+        with self._lock:
+            del self._manifests[bucket][key]
+        self._flush_manifest(bucket)
+
+
+class _FsMultipart(MultipartUpload):
+    """Parts append to a tmp file; `complete` promotes it atomically."""
+
+    def __init__(self, backend: FilesystemBackend, bucket: str, key: str,
+                 metadata: dict | None):
+        self._b = backend
+        self._bucket = bucket
+        self._key = key
+        self._metadata = dict(metadata or {})
+        path = backend._object_path(bucket, key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        self._path = path
+        self._tmp = f"{path}.{threading.get_ident()}.mp.tmp"
+        self._f = open(self._tmp, "wb")
+        self._crc = 0
+        self._size = 0
+        self._nparts = 0
+
+    def put_part(self, data: bytes) -> None:
+        self._f.write(data)
+        self._crc = zlib.crc32(data, self._crc)
+        self._size += len(data)
+        self._nparts += 1
+
+    def complete(self) -> ObjectMeta:
+        self._f.close()
+        os.replace(self._tmp, self._path)
+        entry = {"size": self._size, "etag": f"{self._crc:08x}",
+                 "parts": max(self._nparts, 1), "metadata": self._metadata}
+        return self._b._commit(self._bucket, self._key, entry)
+
+    def abort(self) -> None:
+        try:
+            self._f.close()
+        finally:
+            if os.path.exists(self._tmp):
+                os.remove(self._tmp)
+
+
+# ---------------------------------------------------------------------------
+# Memory backend (tests; also a zero-latency "local SSD" tier)
+# ---------------------------------------------------------------------------
+
+
+class MemoryBackend(StoreBackend):
+    """Dict-backed store: same contract, no filesystem."""
+
+    def __init__(self, *, chunk_size: int = 4 << 20):
+        self.chunk_size = int(chunk_size)
+        self._lock = threading.Lock()
+        self._buckets: dict[str, dict[str, tuple[bytes, dict]]] = {}
+
+    def create_bucket(self, bucket: str) -> None:
+        with self._lock:
+            self._buckets.setdefault(bucket, {})
+
+    def _entry(self, bucket: str, key: str) -> tuple[bytes, dict]:
+        try:
+            return self._buckets[bucket][key]
+        except KeyError:
+            raise ObjectNotFound(f"{bucket}/{key}") from None
+
+    def multipart(self, bucket: str, key: str,
+                  metadata: dict | None = None) -> "_MemMultipart":
+        if bucket not in self._buckets:
+            raise ObjectNotFound(bucket)
+        return _MemMultipart(self, bucket, _check_key(key), metadata)
+
+    def get(self, bucket: str, key: str) -> bytes:
+        data, e = self._entry(bucket, key)
+        return _verify_integrity(f"{bucket}/{key}", data, e)
+
+    def get_range(self, bucket: str, key: str, start: int, length: int) -> bytes:
+        data, _ = self._entry(bucket, key)
+        start = max(int(start), 0)
+        return data[start : start + max(int(length), 0)]
+
+    def head(self, bucket: str, key: str) -> ObjectMeta:
+        _, e = self._entry(bucket, key)
+        return ObjectMeta(key=key, size=e["size"], etag=e["etag"],
+                          parts=e["parts"], metadata=dict(e["metadata"]))
+
+    def list_objects(self, bucket: str, prefix: str = "") -> list[ObjectMeta]:
+        if bucket not in self._buckets:
+            raise ObjectNotFound(bucket)
+        with self._lock:
+            items = sorted(self._buckets[bucket].items())
+        return [
+            ObjectMeta(key=k, size=e["size"], etag=e["etag"], parts=e["parts"],
+                       metadata=dict(e["metadata"]))
+            for k, (_, e) in items if k.startswith(prefix)
+        ]
+
+    def delete(self, bucket: str, key: str) -> None:
+        self._entry(bucket, key)
+        with self._lock:
+            del self._buckets[bucket][key]
+
+
+class _MemMultipart(MultipartUpload):
+    def __init__(self, backend: MemoryBackend, bucket: str, key: str,
+                 metadata: dict | None):
+        self._b = backend
+        self._bucket = bucket
+        self._key = key
+        self._metadata = dict(metadata or {})
+        self._buf = bytearray()
+        self._nparts = 0
+
+    def put_part(self, data: bytes) -> None:
+        self._buf += data
+        self._nparts += 1
+
+    def complete(self) -> ObjectMeta:
+        data = bytes(self._buf)
+        entry = {"size": len(data), "etag": f"{zlib.crc32(data):08x}",
+                 "parts": max(self._nparts, 1), "metadata": self._metadata}
+        with self._b._lock:
+            self._b._buckets[self._bucket][self._key] = (data, entry)
+        return ObjectMeta(key=self._key, size=entry["size"], etag=entry["etag"],
+                          parts=entry["parts"], metadata=dict(self._metadata))
+
+    def abort(self) -> None:
+        self._buf = bytearray()

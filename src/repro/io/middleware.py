@@ -1,0 +1,344 @@
+"""Composable store middleware: the S3 behaviours the backend doesn't have.
+
+The paper's numbers depend on S3 acting like S3: request latency and
+per-connection bandwidth absorbed by pipelined I/O (§2.5), "503 Slow Down"
+throttling absorbed by retries, and per-request fees computed from the
+requests *actually issued* (§3.3.2). The filesystem backend emulates the
+data plane only; each middleware here layers one behaviour over any
+StoreBackend, so a realistic endpoint is a composition:
+
+    RetryMiddleware(            # client-side: backoff + re-issue
+      MetricsMiddleware(        # counts every attempt (retry-inflated)
+        ThrottlingMiddleware(   # service-side: token-bucket 503s
+          LatencyBandwidthMiddleware(   # wire: RTT + bytes/bandwidth
+            FilesystemBackend(root)))))
+
+Ordering matters and the stack above is the intended one: Metrics sits
+*outside* the fault injectors so a throttled attempt is still an issued
+(and billed) request, and *inside* Retry so every re-issue is counted —
+which is exactly the retry-inflated request count the cost model's access
+legs should price (core/cost_model.py).
+
+Every middleware delegates the seven primitives through one `_call`
+hook, and wraps multipart sessions so streamed part uploads flow through
+the same hook (kind "put"). Derived StoreBackend methods (`put`,
+`put_multipart`, `get_chunks`) are inherited, never delegated — they
+decompose into primitives on the *outermost* layer, so each ranged chunk
+and each part crosses the whole stack exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Callable
+
+from repro.io.backends import (MultipartUpload, ObjectMeta, RetryableError,
+                               SlowDown, StoreBackend, StoreStats)
+
+
+class StoreMiddleware(StoreBackend):
+    """Transparent wrapper: every primitive funnels through `_call`.
+
+    `_call(kind, issue, read=..., nbytes=...)` is the single override
+    point: `kind` is the request class ("get" | "put" | "head" | "list" |
+    "delete" | "bucket"), `issue()` performs the inner call, `read=True`
+    marks calls whose result length is the downloaded byte count, and
+    `nbytes` carries the upload size for writes. Unknown attributes
+    (e.g. `.root`, `.stats`) delegate to the wrapped store.
+    """
+
+    def __init__(self, inner: StoreBackend):
+        self.inner = inner
+
+    def __getattr__(self, name: str):
+        return getattr(self.inner, name)
+
+    def _call(self, kind: str, issue: Callable, *, read: bool = False,
+              nbytes: int = 0):
+        return issue()
+
+    # -- primitives, funnelled --------------------------------------------
+
+    def create_bucket(self, bucket: str) -> None:
+        return self._call("bucket", lambda: self.inner.create_bucket(bucket))
+
+    def get(self, bucket: str, key: str) -> bytes:
+        return self._call("get", lambda: self.inner.get(bucket, key), read=True)
+
+    def get_range(self, bucket: str, key: str, start: int, length: int) -> bytes:
+        return self._call(
+            "get", lambda: self.inner.get_range(bucket, key, start, length),
+            read=True)
+
+    def head(self, bucket: str, key: str) -> ObjectMeta:
+        return self._call("head", lambda: self.inner.head(bucket, key))
+
+    def list_objects(self, bucket: str, prefix: str = "") -> list[ObjectMeta]:
+        return self._call("list", lambda: self.inner.list_objects(bucket, prefix))
+
+    def delete(self, bucket: str, key: str) -> None:
+        return self._call("delete", lambda: self.inner.delete(bucket, key))
+
+    def multipart(self, bucket: str, key: str,
+                  metadata: dict | None = None) -> MultipartUpload:
+        return _WrappedMultipart(self, self.inner.multipart(bucket, key, metadata))
+
+
+class _WrappedMultipart(MultipartUpload):
+    """Routes part uploads of an inner session through the middleware."""
+
+    def __init__(self, mw: StoreMiddleware, inner: MultipartUpload):
+        self._mw = mw
+        self._inner = inner
+
+    def put_part(self, data: bytes) -> None:
+        self._mw._call("put", lambda: self._inner.put_part(data),
+                       nbytes=len(data))
+
+    def complete(self) -> ObjectMeta:  # free, like S3 CompleteMultipartUpload
+        return self._inner.complete()
+
+    def abort(self) -> None:
+        self._inner.abort()
+
+
+# ---------------------------------------------------------------------------
+# Metrics: the PR-1 request accounting, now a layer
+# ---------------------------------------------------------------------------
+
+
+class MetricsMiddleware(StoreMiddleware):
+    """Counts every attempt that crosses it into a StoreStats.
+
+    Placed inside RetryMiddleware and outside ThrottlingMiddleware so the
+    counters are retry-inflated: each throttled attempt and each re-issue
+    is its own request, as it would be on a real S3 bill/rate budget.
+    """
+
+    def __init__(self, inner: StoreBackend, stats: StoreStats | None = None):
+        super().__init__(inner)
+        self.stats = stats if stats is not None else StoreStats()
+
+    _COUNTER = {"get": "get_requests", "put": "put_requests",
+                "head": "head_requests", "list": "list_requests",
+                "delete": "delete_requests"}
+
+    def _call(self, kind, issue, *, read=False, nbytes=0):
+        field = self._COUNTER.get(kind)
+        if field:
+            self.stats.add(field, 1)
+        try:
+            result = issue()
+        except SlowDown:
+            self.stats.add("throttled", 1)
+            raise
+        if read:
+            self.stats.add("bytes_read", len(result))
+        if kind == "put":
+            self.stats.add("bytes_written", nbytes)
+        return result
+
+    def stats_snapshot(self) -> StoreStats:
+        """Consistent copy of the counters (for before/after deltas)."""
+        return self.stats.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Latency + bandwidth: the wire
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """S3-like service parameters for the fault-injecting middlewares.
+
+    Zero disables a term. `latency_s` is per-request first-byte latency
+    (S3 TTFB is ~10–50 ms); `bandwidth_bps` is per-request streaming
+    throughput (~90 MB/s per S3 connection); `get_rate`/`put_rate` are
+    token-bucket request rates per second with `burst` capacity (S3
+    advertises 5500 GET/s and 3500 PUT/s per prefix before 503s).
+    """
+
+    latency_s: float = 0.0
+    jitter_s: float = 0.0  # uniform extra latency in [0, jitter_s)
+    bandwidth_bps: float = 0.0
+    get_rate: float = 0.0
+    put_rate: float = 0.0
+    burst: float = 32.0
+
+
+class LatencyBandwidthMiddleware(StoreMiddleware):
+    """Sleeps each request by latency + bytes/bandwidth; accounts the stall.
+
+    The sleep is taken with no lock held, so concurrent requests stall
+    concurrently — which is precisely what the staging layer's pipelining
+    is supposed to hide, and what bench_store_faults measures.
+    """
+
+    def __init__(self, inner: StoreBackend, profile: FaultProfile,
+                 *, stats: StoreStats | None = None, seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep):
+        super().__init__(inner)
+        self.profile = profile
+        self.stats = stats if stats is not None else StoreStats()
+        self._sleep = sleep
+        self._rng = random.Random(seed)
+        self._rng_lock = threading.Lock()
+
+    def _stall(self, seconds: float) -> None:
+        if seconds <= 0:
+            return
+        self.stats.add("stall_seconds", seconds)
+        self._sleep(seconds)
+
+    def _call(self, kind, issue, *, read=False, nbytes=0):
+        p = self.profile
+        if kind != "bucket":
+            if p.jitter_s:
+                with self._rng_lock:
+                    jitter = self._rng.uniform(0, p.jitter_s)
+            else:
+                jitter = 0.0
+            pre = p.latency_s + jitter
+            if nbytes and p.bandwidth_bps:
+                pre += nbytes / p.bandwidth_bps  # upload streams before ack
+            self._stall(pre)
+        result = issue()
+        if read and p.bandwidth_bps:
+            self._stall(len(result) / p.bandwidth_bps)
+        return result
+
+
+# ---------------------------------------------------------------------------
+# Throttling: the service's 503 budget
+# ---------------------------------------------------------------------------
+
+
+class _TokenBucket:
+    def __init__(self, rate: float, burst: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.rate = float(rate)
+        self.capacity = max(float(burst), 1.0)
+        self.tokens = self.capacity
+        self._clock = clock
+        self._t = clock()
+        self._lock = threading.Lock()
+
+    def try_acquire(self) -> bool:
+        if self.rate <= 0:  # unlimited
+            return True
+        with self._lock:
+            now = self._clock()
+            self.tokens = min(self.capacity,
+                              self.tokens + (now - self._t) * self.rate)
+            self._t = now
+            if self.tokens >= 1.0:
+                self.tokens -= 1.0
+                return True
+            return False
+
+
+class ThrottlingMiddleware(StoreMiddleware):
+    """Token-bucket request admission; over-budget attempts raise SlowDown.
+
+    Reads (get) and writes (put/delete) draw from separate buckets,
+    mirroring S3's separate GET and PUT rate budgets per prefix. Metadata
+    requests (head/list) are not throttled — they're free in Table 2 and
+    effectively unlimited in practice.
+    """
+
+    def __init__(self, inner: StoreBackend, profile: FaultProfile,
+                 *, clock: Callable[[], float] = time.monotonic):
+        super().__init__(inner)
+        self.profile = profile
+        self._read_bucket = _TokenBucket(profile.get_rate, profile.burst, clock)
+        self._write_bucket = _TokenBucket(profile.put_rate, profile.burst, clock)
+
+    def _call(self, kind, issue, *, read=False, nbytes=0):
+        bucket = None
+        if kind == "get":
+            bucket = self._read_bucket
+        elif kind in ("put", "delete"):
+            bucket = self._write_bucket
+        if bucket is not None and not bucket.try_acquire():
+            raise SlowDown(f"503 Slow Down ({kind})")
+        return issue()
+
+
+# ---------------------------------------------------------------------------
+# Retry: the client's backoff loop
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped exponential backoff with multiplicative jitter (the AWS SDK
+    default shape): attempt k sleeps min(base * 2^k, max_delay) scaled by
+    a uniform factor in [1 - jitter, 1]."""
+
+    max_attempts: int = 8  # total attempts, including the first
+    base_delay_s: float = 0.02
+    max_delay_s: float = 1.0
+    jitter: float = 0.5
+
+    def delay(self, attempt: int, rng: random.Random) -> float:
+        d = min(self.base_delay_s * (2.0 ** attempt), self.max_delay_s)
+        return d * (1.0 - self.jitter * rng.random())
+
+
+class RetryMiddleware(StoreMiddleware):
+    """Re-issues attempts that fail with a RetryableError (e.g. SlowDown).
+
+    Sits outermost so each re-issue re-traverses metrics/throttling/
+    latency — a retry is a brand-new request. When attempts are
+    exhausted the *original* error propagates; `stats.retries` counts
+    re-issues and `stats.stall_seconds` the backoff sleeps.
+    """
+
+    def __init__(self, inner: StoreBackend, policy: RetryPolicy = RetryPolicy(),
+                 *, stats: StoreStats | None = None, seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep):
+        super().__init__(inner)
+        self.policy = policy
+        self.stats = stats if stats is not None else StoreStats()
+        self._sleep = sleep
+        self._rng = random.Random(seed)
+        self._rng_lock = threading.Lock()
+
+    def _call(self, kind, issue, *, read=False, nbytes=0):
+        attempt = 0
+        while True:
+            try:
+                return issue()
+            except RetryableError:
+                attempt += 1
+                if attempt >= self.policy.max_attempts:
+                    raise
+                with self._rng_lock:
+                    delay = self.policy.delay(attempt - 1, self._rng)
+                self.stats.add("retries", 1)
+                self.stats.add("stall_seconds", delay)
+                self._sleep(delay)
+
+
+def fault_injected(backend: StoreBackend, *, profile: FaultProfile,
+                   retry: RetryPolicy | None = RetryPolicy(),
+                   seed: int = 0) -> StoreBackend:
+    """Compose the canonical stack around `backend` with one shared
+    StoreStats: Retry(Metrics(Throttle(Latency(backend)))).
+
+    Pass `retry=None` to expose raw SlowDowns to the caller (tests, or a
+    client that does its own backoff). The returned store duck-types the
+    PR-1 ObjectStore: `.stats` / `.stats_snapshot()` reach the shared
+    counters via attribute delegation.
+    """
+    stats = StoreStats()
+    store: StoreBackend = LatencyBandwidthMiddleware(
+        backend, profile, stats=stats, seed=seed)
+    store = ThrottlingMiddleware(store, profile)
+    store = MetricsMiddleware(store, stats=stats)
+    if retry is not None:
+        store = RetryMiddleware(store, retry, stats=stats, seed=seed + 1)
+    return store

@@ -1,242 +1,46 @@
-"""Filesystem-backed object store emulating the paper's S3 contract.
+"""ObjectStore: the PR-1 entry point, now a composition over io/backends.
 
-Exoshuffle-CloudSort keeps the *entire* dataset in S3 (§2.2): map tasks
-download input partitions in ranged chunks, merged runs spill to local
-storage, and reduce tasks upload output partitions as multipart objects.
-The TCO model (§3.3.2, Table 2) then charges *per request* — 6M GETs and
-1M PUTs at 100 TB — so faithful request accounting is part of the
-reproduction, not an afterthought.
+Exoshuffle-CloudSort keeps the *entire* dataset in S3 (§2.2) and the TCO
+model charges *per request* (§3.3.2, Table 2), so faithful request
+accounting is part of the reproduction. PR 1 implemented that as one
+concrete filesystem class; the I/O stack is now layered (the multi-layer
+refactor of ISSUE 2):
 
-This store emulates exactly the S3 surface the paper exercises, on the
-local filesystem:
+  io/backends.py   — StoreBackend protocol + FilesystemBackend (the old
+                     data plane, CRC-verified reads) + MemoryBackend
+  io/middleware.py — Latency/Bandwidth, Throttling (503 Slow Down),
+                     Retry (backoff), Metrics (the old `stats` counters)
+  io/tiered.py     — TieredStore: local-SSD spill tier + durable tier
 
-  put / put_multipart      — 1 PUT counted per object / per uploaded part
-                             (the paper's "25k reduces x 40 chunks = 1M PUTs")
-  get / get_range / get_chunks
-                           — 1 GET counted per call / per ranged chunk
-                             (the paper's "50k maps x 120 chunks = 6M GETs")
-  head / list_objects      — metadata; counted separately, free in Table 2
-  bucket manifest          — JSON per bucket, persisted so a store can be
-                             reopened (the S3 namespace survives process
-                             death, unlike worker memory)
-
-What is deliberately NOT emulated: network latency/bandwidth, eventual
-consistency, request rate limits, and retry semantics (see ROADMAP.md
-"I/O layer"). `core/external_sort.py` drives real byte movement through
-this store so dataset size is bounded by store capacity, not HBM.
-
-Thread-safe: the staging layer (io/staging.py) issues puts/gets from
-background threads to overlap I/O with device compute (§2.5).
+`ObjectStore(root)` keeps its PR-1 surface exactly — a metrics-wrapped
+filesystem backend: put / put_multipart / get / get_range / get_chunks /
+head / list_objects / delete, per-bucket persistent manifests, `.stats`
+and `.stats_snapshot()` — so every existing consumer works unchanged,
+while new code composes backends and middleware directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import json
-import os
-import threading
-import zlib
-from typing import Iterable, Iterator
+from repro.io.backends import (FilesystemBackend, IntegrityError,
+                               MemoryBackend, MultipartUpload, ObjectMeta,
+                               ObjectNotFound, RetryableError, SlowDown,
+                               StoreBackend, StoreStats)
+from repro.io.middleware import MetricsMiddleware
+
+__all__ = [
+    "FilesystemBackend", "IntegrityError", "MemoryBackend", "MultipartUpload",
+    "ObjectMeta", "ObjectNotFound", "ObjectStore", "RetryableError",
+    "SlowDown", "StoreBackend", "StoreStats",
+]
 
 
-class ObjectNotFound(KeyError):
-    """Missing bucket or key (the S3 404)."""
+class ObjectStore(MetricsMiddleware):
+    """One store = one S3 endpoint on the local filesystem, with request
+    accounting — MetricsMiddleware(FilesystemBackend(root)).
 
-
-@dataclasses.dataclass
-class StoreStats:
-    """Cumulative request/byte counters — the measured Table-2 inputs."""
-
-    get_requests: int = 0
-    put_requests: int = 0
-    head_requests: int = 0
-    list_requests: int = 0
-    bytes_read: int = 0
-    bytes_written: int = 0
-
-    def __sub__(self, other: "StoreStats") -> "StoreStats":
-        return StoreStats(**{
-            f.name: getattr(self, f.name) - getattr(other, f.name)
-            for f in dataclasses.fields(self)
-        })
-
-
-@dataclasses.dataclass(frozen=True)
-class ObjectMeta:
-    """Manifest entry: what `head` returns (S3 HeadObject)."""
-
-    key: str
-    size: int
-    etag: str  # crc32 of the object bytes
-    parts: int  # 1 for plain puts, #parts for multipart uploads
-    metadata: dict
-
-
-_MANIFEST = "manifest.json"
-_OBJECTS = "objects"
-
-
-def _check_key(key: str) -> str:
-    assert key and not key.startswith(("/", ".")), f"bad object key {key!r}"
-    assert ".." not in key.split("/"), f"bad object key {key!r}"
-    return key
-
-
-class ObjectStore:
-    """One store = one S3 endpoint; buckets hold objects under `root`."""
+    `root` and `chunk_size` resolve to the underlying backend via
+    attribute delegation, so reopening (`ObjectStore(store.root)`) and
+    per-call chunk sizing behave exactly as before the refactor.
+    """
 
     def __init__(self, root: str, *, chunk_size: int = 4 << 20):
-        self.root = root
-        self.chunk_size = int(chunk_size)  # default ranged-GET granularity
-        self.stats = StoreStats()
-        self._lock = threading.Lock()
-        self._manifests: dict[str, dict[str, dict]] = {}
-        self._flush_locks: dict[str, threading.Lock] = {}
-        os.makedirs(root, exist_ok=True)
-        for bucket in sorted(os.listdir(root)):
-            mpath = os.path.join(root, bucket, _MANIFEST)
-            if os.path.isfile(mpath):
-                with open(mpath) as f:
-                    self._manifests[bucket] = json.load(f)
-                self._flush_locks[bucket] = threading.Lock()
-
-    # -- namespace ---------------------------------------------------------
-
-    def create_bucket(self, bucket: str) -> None:
-        os.makedirs(os.path.join(self.root, bucket, _OBJECTS), exist_ok=True)
-        with self._lock:
-            self._manifests.setdefault(bucket, {})
-            self._flush_locks.setdefault(bucket, threading.Lock())
-        self._flush_manifest(bucket)
-
-    def _object_path(self, bucket: str, key: str) -> str:
-        return os.path.join(self.root, bucket, _OBJECTS, *_check_key(key).split("/"))
-
-    def _flush_manifest(self, bucket: str) -> None:
-        """Persist the bucket manifest. The JSON dump happens OUTSIDE the
-        store-wide lock so concurrent staging writers only contend on the
-        cheap dict update, not the file I/O; a per-bucket flush lock keeps
-        file writes ordered, and the snapshot is re-taken under the main
-        lock so the last flusher always persists the newest state."""
-        with self._flush_locks[bucket]:
-            with self._lock:
-                snapshot = dict(self._manifests[bucket])
-            mpath = os.path.join(self.root, bucket, _MANIFEST)
-            tmp = f"{mpath}.{threading.get_ident()}.tmp"
-            with open(tmp, "w") as f:
-                json.dump(snapshot, f)
-            os.replace(tmp, mpath)
-
-    def _entry(self, bucket: str, key: str) -> dict:
-        try:
-            return self._manifests[bucket][key]
-        except KeyError:
-            raise ObjectNotFound(f"{bucket}/{key}") from None
-
-    def _meta(self, key: str, e: dict) -> ObjectMeta:
-        return ObjectMeta(key=key, size=e["size"], etag=e["etag"],
-                          parts=e["parts"], metadata=dict(e["metadata"]))
-
-    # -- writes ------------------------------------------------------------
-
-    def put(self, bucket: str, key: str, data: bytes,
-            metadata: dict | None = None) -> ObjectMeta:
-        """S3 PutObject: one PUT request."""
-        return self._write(bucket, key, [bytes(data)], metadata)
-
-    def put_multipart(self, bucket: str, key: str, parts: Iterable[bytes],
-                      metadata: dict | None = None) -> ObjectMeta:
-        """S3 multipart upload: one PUT request counted per part.
-
-        (The paper's request arithmetic — 40 upload chunks per reduce task
-        — counts exactly the part uploads; initiate/complete are free.)
-        """
-        return self._write(bucket, key, [bytes(p) for p in parts], metadata)
-
-    def _write(self, bucket, key, parts: list[bytes], metadata) -> ObjectMeta:
-        if bucket not in self._manifests:
-            raise ObjectNotFound(bucket)
-        path = self._object_path(bucket, key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
-        crc = 0
-        size = 0
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
-            for p in parts:
-                f.write(p)
-                crc = zlib.crc32(p, crc)
-                size += len(p)
-        os.replace(tmp, path)
-        entry = {"size": size, "etag": f"{crc:08x}", "parts": max(len(parts), 1),
-                 "metadata": dict(metadata or {})}
-        with self._lock:
-            self._manifests[bucket][key] = entry
-            self.stats.put_requests += max(len(parts), 1)
-            self.stats.bytes_written += size
-        self._flush_manifest(bucket)
-        return self._meta(key, entry)
-
-    # -- reads -------------------------------------------------------------
-
-    def get(self, bucket: str, key: str) -> bytes:
-        """S3 GetObject (whole object): one GET request."""
-        e = self._entry(bucket, key)
-        with open(self._object_path(bucket, key), "rb") as f:
-            data = f.read()
-        assert len(data) == e["size"]
-        with self._lock:
-            self.stats.get_requests += 1
-            self.stats.bytes_read += len(data)
-        return data
-
-    def get_range(self, bucket: str, key: str, start: int, length: int) -> bytes:
-        """S3 ranged GET: one GET request; truncates at object end like S3."""
-        e = self._entry(bucket, key)
-        start = max(int(start), 0)
-        length = min(int(length), max(e["size"] - start, 0))
-        with open(self._object_path(bucket, key), "rb") as f:
-            f.seek(start)
-            data = f.read(length)
-        with self._lock:
-            self.stats.get_requests += 1
-            self.stats.bytes_read += len(data)
-        return data
-
-    def get_chunks(self, bucket: str, key: str,
-                   chunk_size: int | None = None) -> Iterator[bytes]:
-        """Download an object as ranged chunks — the paper's map download
-        pattern (one GET per chunk, §3.3.2's "120 chunks" per map task)."""
-        e = self._entry(bucket, key)
-        step = int(chunk_size or self.chunk_size)
-        assert step > 0
-        offsets = range(0, e["size"], step) if e["size"] else (0,)
-        for off in offsets:
-            yield self.get_range(bucket, key, off, step)
-
-    # -- metadata ----------------------------------------------------------
-
-    def head(self, bucket: str, key: str) -> ObjectMeta:
-        e = self._entry(bucket, key)
-        with self._lock:
-            self.stats.head_requests += 1
-        return self._meta(key, e)
-
-    def list_objects(self, bucket: str, prefix: str = "") -> list[ObjectMeta]:
-        """S3 ListObjects: manifest entries under `prefix`, key-sorted."""
-        if bucket not in self._manifests:
-            raise ObjectNotFound(bucket)
-        with self._lock:
-            self.stats.list_requests += 1
-            items = sorted(self._manifests[bucket].items())
-        return [self._meta(k, e) for k, e in items if k.startswith(prefix)]
-
-    def delete(self, bucket: str, key: str) -> None:
-        self._entry(bucket, key)
-        os.remove(self._object_path(bucket, key))
-        with self._lock:
-            del self._manifests[bucket][key]
-        self._flush_manifest(bucket)
-
-    def stats_snapshot(self) -> StoreStats:
-        """Consistent copy of the counters (for before/after deltas)."""
-        with self._lock:
-            return dataclasses.replace(self.stats)
+        super().__init__(FilesystemBackend(root, chunk_size=chunk_size))

@@ -29,9 +29,18 @@ def record_bytes(payload_words: int) -> int:
     return 4 * (2 + int(payload_words))
 
 
-def encode_records(keys, ids, payload=None) -> bytes:
-    """Pack records into one object. keys/ids (n,) u32; payload (n, pw) u32
-    or None (header-only records, pw=0)."""
+def encode_header(n_records: int, payload_words: int) -> bytes:
+    """The HEADER_BYTES prefix of an encoded object. Split out from
+    encode_records so a streaming writer that knows its final record
+    count up front (the reduce merge does — it's the sum of its run-slice
+    lengths) can emit the header first and append body chunks as they are
+    merged, never materializing the object."""
+    return np.array([MAGIC, VERSION, int(n_records), int(payload_words)],
+                    dtype="<u4").tobytes()
+
+
+def encode_body(keys, ids, payload=None) -> bytes:
+    """Interleaved rows only (no header) — one streamable body chunk."""
     keys = np.ascontiguousarray(keys, dtype=np.uint32)
     ids = np.ascontiguousarray(ids, dtype=np.uint32)
     n = keys.shape[0]
@@ -43,8 +52,14 @@ def encode_records(keys, ids, payload=None) -> bytes:
     if pw:
         assert payload.shape == (n, pw)
         rows[:, 2:] = np.asarray(payload, dtype=np.uint32)
-    header = np.array([MAGIC, VERSION, n, pw], dtype="<u4")
-    return header.tobytes() + rows.tobytes()
+    return rows.tobytes()
+
+
+def encode_records(keys, ids, payload=None) -> bytes:
+    """Pack records into one object. keys/ids (n,) u32; payload (n, pw) u32
+    or None (header-only records, pw=0)."""
+    pw = 0 if payload is None else int(payload.shape[-1])
+    return encode_header(len(keys), pw) + encode_body(keys, ids, payload)
 
 
 def decode_header(data: bytes) -> tuple[int, int]:

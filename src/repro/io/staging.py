@@ -10,13 +10,18 @@ overlap explicitly:
 
   prefetch(thunks, depth)  — double-buffered reader: keeps `depth` store
       reads in flight ahead of the consumer, so wave g+1's chunked GETs
-      (io/object_store.get_chunks) run while wave g is being sorted.
+      (io/backends.get_chunks) run while wave g is being sorted. Optionally
+      retry-aware: transient store failures (e.g. a SlowDown that escaped
+      a store-level RetryMiddleware) are re-issued with backoff instead of
+      killing the pipeline.
 
   AsyncWriter(max_inflight) — bounded write-behind for spills/uploads.
       `submit` blocks once `max_inflight` writes are pending — the static
       analogue of the paper's merge controller withholding acks to
       back-pressure producers (§2.3) — so host memory holds at most
-      max_inflight encoded runs.
+      max_inflight encoded runs. With max_workers=1 submissions execute
+      strictly in submission order, which is what lets the streaming
+      reduce feed sequential multipart part uploads through it.
 
 Both are plain thread pools: store I/O is file I/O + numpy codec work that
 releases the GIL, and device compute runs inside jit, so the overlap is
@@ -26,20 +31,46 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Iterable, Iterator, TypeVar
+from typing import Callable, Iterable, Iterator, Type, TypeVar
 
 T = TypeVar("T")
 
 
-def prefetch(thunks: Iterable[Callable[[], T]], depth: int = 2) -> Iterator[T]:
+def prefetch(
+    thunks: Iterable[Callable[[], T]],
+    depth: int = 2,
+    *,
+    retries: int = 0,
+    retry_on: tuple[Type[BaseException], ...] = (),
+    retry_delay_s: float = 0.05,
+) -> Iterator[T]:
     """Yield thunk() results in order with up to `depth` reads in flight.
 
     Double buffering is depth=2: one result being consumed, one loading.
     Exceptions from a thunk surface at the corresponding yield; unconsumed
     work is cancelled when the generator is closed.
+
+    With `retries` > 0, a thunk that raises one of `retry_on` is re-run
+    in place (exponential backoff from `retry_delay_s`) up to `retries`
+    times before the error surfaces — so a transient store stall costs a
+    delay, not the whole wave pipeline.
     """
     assert depth >= 1
+    assert retries >= 0
+
+    def attempt(thunk: Callable[[], T]) -> T:
+        for k in range(retries + 1):
+            try:
+                return thunk()
+            except retry_on:
+                if k == retries:
+                    raise
+                time.sleep(retry_delay_s * (2.0 ** k))
+        raise AssertionError("unreachable")
+
+    run = attempt if retries and retry_on else (lambda thunk: thunk())
     ex = ThreadPoolExecutor(max_workers=depth, thread_name_prefix="stage-read")
     it = iter(thunks)
     pending: collections.deque[Future] = collections.deque()
@@ -48,7 +79,7 @@ def prefetch(thunks: Iterable[Callable[[], T]], depth: int = 2) -> Iterator[T]:
         while True:
             while not exhausted and len(pending) < depth:
                 try:
-                    pending.append(ex.submit(next(it)))
+                    pending.append(ex.submit(run, next(it)))
                 except StopIteration:
                     exhausted = True
             if not pending:
@@ -61,15 +92,24 @@ def prefetch(thunks: Iterable[Callable[[], T]], depth: int = 2) -> Iterator[T]:
 
 
 class AsyncWriter:
-    """Bounded write-behind queue for store puts (spill / output upload)."""
+    """Bounded write-behind queue for store puts (spill / output upload).
 
-    def __init__(self, max_inflight: int = 2):
+    max_inflight bounds how many submissions may be pending (backpressure);
+    max_workers (default = max_inflight) is the pool width. max_workers=1
+    gives strict FIFO execution — required when submissions are order-
+    sensitive, like sequential put_part calls of one multipart upload.
+    """
+
+    def __init__(self, max_inflight: int = 2, *, max_workers: int | None = None):
         assert max_inflight >= 1
         self._ex = ThreadPoolExecutor(
-            max_workers=max_inflight, thread_name_prefix="stage-write"
+            max_workers=max_workers or max_inflight,
+            thread_name_prefix="stage-write",
         )
         self._slots = threading.Semaphore(max_inflight)
         self._futures: list[Future] = []
+        self._exc_lock = threading.Lock()
+        self._first_exc: BaseException | None = None
 
     def submit(self, fn: Callable, *args, **kwargs) -> Future:
         """Queue fn(*args); blocks while `max_inflight` writes are pending
@@ -79,6 +119,15 @@ class AsyncWriter:
         def run():
             try:
                 return fn(*args, **kwargs)
+            except BaseException as e:
+                # Record the *chronologically first* failure: with several
+                # writer threads, the future list's order is submission
+                # order, not failure order, and the root cause is whichever
+                # upload broke first (later ones often fail as fallout).
+                with self._exc_lock:
+                    if self._first_exc is None:
+                        self._first_exc = e
+                raise
             finally:
                 self._slots.release()
 
@@ -86,15 +135,31 @@ class AsyncWriter:
         self._futures.append(f)
         return f
 
+    @property
+    def failed(self) -> bool:
+        """True once any submitted write has raised (drain will re-raise
+        it). Lets order-dependent consumers — e.g. the task that would
+        commit a multipart upload after its part uploads — turn a
+        completed-but-broken pipeline into an abort instead."""
+        with self._exc_lock:
+            return self._first_exc is not None
+
     def drain(self) -> None:
-        """Wait for all pending writes; re-raises the first failure."""
+        """Wait for all pending writes; re-raises the first failure (by
+        failure time) with its original traceback."""
         futures, self._futures = self._futures, []
         for f in futures:
-            f.result()
+            f.exception()  # wait without raising; first_exc decides below
+        with self._exc_lock:
+            exc, self._first_exc = self._first_exc, None
+        if exc is not None:
+            raise exc
 
     def close(self) -> None:
-        self.drain()
-        self._ex.shutdown(wait=True)
+        try:
+            self.drain()
+        finally:  # never leak the worker thread, even when drain raises
+            self._ex.shutdown(wait=True)
 
     def __enter__(self) -> "AsyncWriter":
         return self

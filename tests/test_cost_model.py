@@ -1,9 +1,11 @@
 """The paper's TCO model (Table 2) must reproduce to the cent."""
+import dataclasses
+
 import pytest
 
 from repro.core.cost_model import (CostBreakdown, Ec2CostParams, JobProfile,
-                                   cloudsort_tco, tpu_cloudsort_tco,
-                                   tpu_sort_time_model)
+                                   cloudsort_tco, measured_tiered_cloudsort_tco,
+                                   tpu_cloudsort_tco, tpu_sort_time_model)
 
 
 def test_equation_1_hourly_cost():
@@ -36,6 +38,43 @@ def test_table2_total():
 def test_s3_hourly_rate():
     # paper: $3.0822/hr per 100 TB
     assert Ec2CostParams().s3_hourly_per_100tb() == pytest.approx(3.0822, abs=1e-3)
+
+
+def test_tiered_tco_bills_only_the_durable_tier():
+    from repro.io.backends import StoreStats
+
+    tiers = {
+        # durable counters are retry-inflated by construction (metrics
+        # middleware counts throttled attempts) — billed as-is
+        "durable": StoreStats(get_requests=10_000, put_requests=2_000,
+                              retries=500, throttled=500),
+        # spill traffic is huge but local: never touches the access legs
+        "ssd": StoreStats(get_requests=10**9, put_requests=10**9,
+                          bytes_written=10**12),
+    }
+    p = Ec2CostParams()
+    tco = measured_tiered_cloudsort_tco(
+        tiers, job_hours=1.0, reduce_hours=0.5, data_bytes=1e12)
+    assert tco.access_get == pytest.approx(p.get_per_1000 * 10_000 / 1000)
+    assert tco.access_put == pytest.approx(p.put_per_1000 * 2_000 / 1000)
+    assert tco.storage_spill == 0.0  # i4i NVMe is bundled into compute
+
+
+def test_tiered_tco_prices_attached_volume_spill_when_configured():
+    from repro.io.backends import StoreStats
+
+    tiers = {"durable": StoreStats(), "ssd": StoreStats(bytes_written=500e9)}
+    p = dataclasses.replace(Ec2CostParams(), ssd_gb_month=0.08)  # gp3-like
+    tco = measured_tiered_cloudsort_tco(
+        tiers, job_hours=2.0, reduce_hours=1.0, data_bytes=1e12, params=p)
+    assert tco.storage_spill == pytest.approx(0.08 / p.hours_per_month * 500 * 2.0)
+    assert tco.total >= tco.storage_spill > 0
+
+
+def test_paper_breakdown_has_zero_spill_leg():
+    b = cloudsort_tco()
+    assert b.storage_spill == 0.0
+    assert dict(b.rows())["data_storage_spill_ssd"] == 0.0
 
 
 def test_tpu_model_late_beats_through_on_memory():

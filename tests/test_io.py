@@ -12,7 +12,8 @@ import pytest
 
 from repro.io import records as rec
 from repro.io import staging
-from repro.io.object_store import ObjectNotFound, ObjectStore, StoreStats
+from repro.io.object_store import (IntegrityError, ObjectNotFound,
+                                   ObjectStore, RetryableError, StoreStats)
 
 
 @pytest.fixture
@@ -89,16 +90,37 @@ def test_missing_key_and_bucket_raise(store):
 
 
 def test_bad_keys_rejected(store):
+    # ValueError, not AssertionError: the traversal guard must survive -O
     for bad in ["/abs", "../up", "a/../b", ".hidden", ""]:
-        with pytest.raises(AssertionError):
+        with pytest.raises(ValueError):
             store.put("b", bad, b"")
 
 
-def test_delete_removes_object(store):
+def test_delete_removes_object_and_is_counted(store):
     store.put("b", "k", b"d")
+    before = store.stats_snapshot()
     store.delete("b", "k")
     with pytest.raises(ObjectNotFound):
         store.head("b", "k")
+    d = store.stats_snapshot() - before
+    assert d.delete_requests == 1  # free-tier priced, but tracked
+
+
+def test_zero_length_object_chunks_cost_nothing(store):
+    store.put("b", "empty", b"")
+    before = store.stats_snapshot()
+    assert list(store.get_chunks("b", "empty")) == []
+    d = store.stats_snapshot() - before
+    assert d.get_requests == 0 and d.bytes_read == 0  # no billed ranged GET
+
+
+def test_get_raises_integrity_error_on_disk_corruption(store):
+    store.put("b", "k", b"precious-bytes")
+    path = store.inner._object_path("b", "k")  # facade wraps FilesystemBackend
+    with open(path, "r+b") as f:
+        f.write(b"Precious-bytes")  # same length, different CRC
+    with pytest.raises(IntegrityError):
+        store.get("b", "k")
 
 
 def test_stats_delta_arithmetic():
@@ -218,3 +240,95 @@ def test_async_writer_drain_reraises():
     w.submit(fail)
     with pytest.raises(RuntimeError, match="spill failed"):
         w.drain()
+
+
+def test_async_writer_reports_chronologically_first_failure():
+    # Upload A is submitted first but fails LAST; upload B fails first and
+    # is the root cause. drain must raise B (failure order), not A
+    # (submission order), with B's original traceback.
+    gate = threading.Event()
+
+    def slow_then_fail():
+        gate.wait(timeout=5)
+        raise RuntimeError("fallout failure (A)")
+
+    def fast_fail():
+        raise ValueError("root cause (B)")
+
+    w = staging.AsyncWriter(max_inflight=2)
+    w.submit(slow_then_fail)
+    fb = w.submit(fast_fail)
+    fb.exception(timeout=5)  # B has definitely failed; A still blocked
+    gate.set()
+    with pytest.raises(ValueError, match="root cause") as ei:
+        w.drain()
+    assert ei.traceback[-1].name == "fast_fail"  # original traceback kept
+
+
+def test_async_writer_failed_flag_and_leakless_close():
+    w = staging.AsyncWriter(max_inflight=1)
+    assert not w.failed
+
+    def boom():
+        raise RuntimeError("upload died")
+
+    w.submit(boom).exception(timeout=5)
+    assert w.failed
+    with pytest.raises(RuntimeError, match="upload died"):
+        w.close()  # still shuts the pool down — no orphan worker thread
+    assert w._ex._shutdown
+
+
+def test_failed_part_upload_aborts_instead_of_committing():
+    # The external-sort reduce pattern: part uploads + a finisher queued on
+    # one ordered writer. If any part failed, the finisher must abort the
+    # multipart session — a truncated commit would carry a self-consistent
+    # CRC etag that no integrity check could ever catch.
+    from repro.io.object_store import MemoryBackend
+
+    backend = MemoryBackend()
+    backend.create_bucket("b")
+    mp = backend.multipart("b", "out/p0")
+
+    def failing_part():
+        raise IOError("503 mid-upload")
+
+    def finish():
+        if w.failed:
+            mp.abort()
+        else:
+            mp.complete()
+
+    w = staging.AsyncWriter(max_inflight=2, max_workers=1)
+    w.submit(mp.put_part, b"part-0")
+    w.submit(failing_part)
+    w.submit(finish)
+    with pytest.raises(IOError, match="503 mid-upload"):
+        w.close()
+    with pytest.raises(ObjectNotFound):  # nothing committed
+        backend.head("b", "out/p0")
+
+
+def test_prefetch_retries_transient_failures():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RetryableError("503 Slow Down")
+        return "ok"
+
+    out = list(staging.prefetch([flaky], depth=1, retries=3,
+                                retry_on=(RetryableError,),
+                                retry_delay_s=0.001))
+    assert out == ["ok"] and calls["n"] == 3
+
+    # without the retry budget the same error surfaces to the consumer
+    calls["n"] = 0
+    with pytest.raises(RetryableError):
+        list(staging.prefetch([flaky], depth=1))
+    # and a non-listed exception type is never retried
+    calls["n"] = 0
+    with pytest.raises(RetryableError):
+        list(staging.prefetch([flaky], depth=1, retries=5,
+                              retry_on=(KeyError,), retry_delay_s=0.001))

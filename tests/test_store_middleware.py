@@ -1,0 +1,295 @@
+"""Backends, middleware stack, and tiered store (io/backends, io/middleware,
+io/tiered).
+
+Host-only: backends are filesystem/dict + numpy-free, middlewares are
+exercised with injected clocks/sleeps so throttle/retry behaviour is
+deterministic (no real sleeping, no timing flakes).
+"""
+import os
+
+import pytest
+
+from repro.io.backends import (FilesystemBackend, IntegrityError,
+                               MemoryBackend, ObjectNotFound, SlowDown,
+                               StoreStats)
+from repro.io.middleware import (FaultProfile, LatencyBandwidthMiddleware,
+                                 MetricsMiddleware, RetryMiddleware,
+                                 RetryPolicy, ThrottlingMiddleware,
+                                 fault_injected)
+from repro.io.tiered import TieredStore, tiered_cloudsort_store
+
+
+# ---------------------------------------------------------------------------
+# backends: same S3 contract from both data planes
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(params=["fs", "mem"])
+def backend(request, tmp_path):
+    if request.param == "fs":
+        b = FilesystemBackend(str(tmp_path / "fs"), chunk_size=64)
+    else:
+        b = MemoryBackend(chunk_size=64)
+    b.create_bucket("b")
+    return b
+
+
+def test_backend_contract_roundtrip(backend):
+    meta = backend.put("b", "in/p0", b"0123456789", metadata={"records": 1})
+    assert backend.get("b", "in/p0") == b"0123456789"
+    assert backend.get_range("b", "in/p0", 2, 4) == b"2345"
+    assert backend.get_range("b", "in/p0", 8, 100) == b"89"  # EOF truncation
+    h = backend.head("b", "in/p0")
+    assert h.size == 10 and h.etag == meta.etag and h.metadata == {"records": 1}
+    assert [m.key for m in backend.list_objects("b", "in/")] == ["in/p0"]
+    backend.delete("b", "in/p0")
+    with pytest.raises(ObjectNotFound):
+        backend.get("b", "in/p0")
+    with pytest.raises(ObjectNotFound):
+        backend.put("nope", "k", b"")
+
+
+def test_backend_multipart_session_streams(backend):
+    mp = backend.multipart("b", "out/p0", metadata={"reducer": 3})
+    mp.put_part(b"aaaa")
+    mp.put_part(b"bb")
+    # parts invisible until complete
+    with pytest.raises(ObjectNotFound):
+        backend.head("b", "out/p0")
+    meta = mp.complete()
+    assert meta.parts == 2 and meta.size == 6
+    assert backend.get("b", "out/p0") == b"aaaabb"
+
+    aborted = backend.multipart("b", "out/p1")
+    aborted.put_part(b"zzz")
+    aborted.abort()
+    with pytest.raises(ObjectNotFound):
+        backend.head("b", "out/p1")
+
+
+def test_integrity_error_on_corruption(tmp_path):
+    b = FilesystemBackend(str(tmp_path / "fs"))
+    b.create_bucket("b")
+    b.put("b", "k", b"payload-bytes")
+    path = b._object_path("b", "k")
+    # same size, flipped byte -> CRC etag mismatch (a real exception, not
+    # an assert: the check must survive python -O)
+    with open(path, "r+b") as f:
+        f.write(b"Xayload-bytes")
+    with pytest.raises(IntegrityError, match="CRC"):
+        b.get("b", "k")
+    # truncation -> size mismatch
+    with open(path, "wb") as f:
+        f.write(b"short")
+    with pytest.raises(IntegrityError, match="size"):
+        b.get("b", "k")
+
+
+# ---------------------------------------------------------------------------
+# metrics middleware
+# ---------------------------------------------------------------------------
+
+
+def _metered():
+    s = MetricsMiddleware(MemoryBackend(chunk_size=64))
+    s.create_bucket("b")
+    return s
+
+
+def test_metrics_counts_deletes():
+    s = _metered()
+    s.put("b", "k", b"d")
+    s.delete("b", "k")
+    d = s.stats_snapshot()
+    assert d.delete_requests == 1 and d.put_requests == 1
+
+
+def test_zero_length_get_chunks_issues_no_request():
+    s = _metered()
+    s.put("b", "empty", b"")
+    before = s.stats_snapshot()
+    assert list(s.get_chunks("b", "empty")) == []
+    d = s.stats_snapshot() - before
+    assert d.get_requests == 0 and d.bytes_read == 0  # S3: no ranged GET
+    assert d.head_requests == 1  # sizing is metadata, free in Table 2
+
+
+def test_metrics_multipart_counts_per_part():
+    s = _metered()
+    mp = s.multipart("b", "out")
+    mp.put_part(b"x" * 10)
+    mp.put_part(b"y" * 20)
+    mp.complete()
+    d = s.stats_snapshot()
+    assert d.put_requests == 2 and d.bytes_written == 30
+
+
+# ---------------------------------------------------------------------------
+# latency / throttle / retry (injected clocks: deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_latency_middleware_accounts_stall():
+    sleeps = []
+    s = LatencyBandwidthMiddleware(
+        MemoryBackend(), FaultProfile(latency_s=0.25, bandwidth_bps=100.0),
+        sleep=sleeps.append)
+    s.create_bucket("b")
+    s.put("b", "k", b"x" * 50)  # upload: latency + 50B/100Bps = 0.75
+    s.get("b", "k")  # download: latency pre + 0.5 post
+    assert sleeps == [0.25 + 0.5, 0.25, 0.5]
+    assert s.stats.stall_seconds == pytest.approx(1.5)
+
+
+def test_throttle_raises_slowdown_and_refills():
+    clock = [0.0]
+    s = ThrottlingMiddleware(
+        MemoryBackend(), FaultProfile(get_rate=1.0, put_rate=0.0, burst=1.0),
+        clock=lambda: clock[0])
+    s.create_bucket("b")
+    s.put("b", "k", b"d")  # put_rate=0: writes unlimited
+    assert s.get("b", "k") == b"d"  # burst token
+    with pytest.raises(SlowDown):
+        s.get("b", "k")
+    clock[0] += 1.0  # 1 req/s refill
+    assert s.get("b", "k") == b"d"
+
+
+def test_retry_recovers_from_throttle_and_counts():
+    # The retry sleep *advances the throttle's clock*, so backoff is what
+    # refills the token bucket — a closed deterministic loop.
+    clock = [0.0]
+
+    def sleep(seconds):
+        clock[0] += seconds
+
+    stats = StoreStats()
+    inner = ThrottlingMiddleware(
+        MemoryBackend(), FaultProfile(get_rate=5.0, burst=1.0),
+        clock=lambda: clock[0])
+    s = RetryMiddleware(
+        MetricsMiddleware(inner, stats=stats),
+        RetryPolicy(max_attempts=8, base_delay_s=0.1, max_delay_s=1.0, jitter=0.0),
+        stats=stats, sleep=sleep)
+    s.create_bucket("b")
+    s.put("b", "k", b"data")
+    for _ in range(4):
+        assert s.get("b", "k") == b"data"
+    d = s.stats_snapshot()
+    assert d.retries > 0 and d.throttled == d.retries
+    # retry-inflated: every throttled attempt was an issued GET request
+    assert d.get_requests == 4 + d.throttled
+
+
+def test_retry_exhaustion_reraises_slowdown():
+    clock = [0.0]
+    s = RetryMiddleware(
+        ThrottlingMiddleware(MemoryBackend(),
+                             FaultProfile(get_rate=1e-9, burst=1.0),
+                             clock=lambda: clock[0]),
+        RetryPolicy(max_attempts=3, base_delay_s=0.01, jitter=0.0),
+        sleep=lambda s_: None)
+    s.create_bucket("b")
+    s.put("b", "k", b"d")
+    assert s.get("b", "k") == b"d"  # burst token
+    with pytest.raises(SlowDown):
+        s.get("b", "k")
+    assert s.stats.retries == 2  # max_attempts - 1 re-issues
+
+
+def test_fault_injected_without_retry_exposes_slowdown():
+    s = fault_injected(MemoryBackend(),
+                       profile=FaultProfile(get_rate=1e-9, burst=1.0),
+                       retry=None)
+    s.create_bucket("b")
+    s.put("b", "k", b"d")
+    assert s.get("b", "k") == b"d"
+    with pytest.raises(SlowDown):
+        s.get("b", "k")
+    assert s.stats_snapshot().throttled == 1
+
+
+# ---------------------------------------------------------------------------
+# tiered store
+# ---------------------------------------------------------------------------
+
+
+def _tiered():
+    durable = MetricsMiddleware(MemoryBackend(chunk_size=64))
+    ssd = MetricsMiddleware(MemoryBackend(chunk_size=64))
+    t = TieredStore(durable, ssd, ssd_prefixes=("spill/",))
+    t.create_bucket("b")
+    return t, durable, ssd
+
+
+def test_tiered_routes_spill_vs_durable_keys():
+    t, durable, ssd = _tiered()
+    t.put("b", "spill/wave-0/w-0", b"run-bytes")
+    t.put("b", "input/p0", b"in-bytes")
+    t.put("b", "output/p0", b"out-bytes")
+    # physical placement: spill only in the ssd tier, the rest durable
+    assert ssd.inner.head("b", "spill/wave-0/w-0").size == 9
+    assert durable.inner.head("b", "input/p0").size == 8
+    with pytest.raises(ObjectNotFound):
+        durable.inner.head("b", "spill/wave-0/w-0")
+    with pytest.raises(ObjectNotFound):
+        ssd.inner.head("b", "input/p0")
+    # reads route back transparently
+    assert t.get("b", "spill/wave-0/w-0") == b"run-bytes"
+    assert t.get_range("b", "input/p0", 0, 2) == b"in"
+    per = t.per_tier_stats()
+    assert per["ssd"].put_requests == 1 and per["durable"].put_requests == 2
+    assert per["ssd"].get_requests == 1 and per["durable"].get_requests == 1
+
+
+def test_tiered_list_merges_namespaces_key_sorted():
+    t, _, _ = _tiered()
+    for k in ["spill/w0", "input/p1", "input/p0", "output/p0"]:
+        t.put("b", k, b"d")
+    assert [m.key for m in t.list_objects("b")] == [
+        "input/p0", "input/p1", "output/p0", "spill/w0"]
+    assert [m.key for m in t.list_objects("b", "spill/")] == ["spill/w0"]
+    assert [m.key for m in t.list_objects("b", "input/")] == ["input/p0", "input/p1"]
+
+
+def test_tiered_delete_routes_and_sums_stats():
+    t, _, _ = _tiered()
+    t.put("b", "spill/w0", b"d")
+    t.put("b", "input/p0", b"d")
+    t.delete("b", "spill/w0")
+    t.delete("b", "input/p0")
+    per = t.per_tier_stats()
+    assert per["ssd"].delete_requests == 1
+    assert per["durable"].delete_requests == 1
+    total = t.stats_snapshot()
+    assert total.delete_requests == 2 and total.put_requests == 2
+
+
+def test_tiered_builder_places_tiers_on_disk(tmp_path):
+    t = tiered_cloudsort_store(str(tmp_path), faults=None)
+    t.create_bucket("b")
+    t.put("b", "spill/w0", b"run")
+    t.put("b", "input/p0", b"in")
+    assert os.path.isfile(os.path.join(str(tmp_path), "ssd", "b",
+                                       "objects", "spill", "w0"))
+    assert os.path.isfile(os.path.join(str(tmp_path), "durable", "b",
+                                       "objects", "input", "p0"))
+
+
+def test_tiered_builder_fault_stack_only_on_durable_tier(tmp_path):
+    # Tight write bucket: durable puts throttle (and get retried away),
+    # spill puts never do — local SSD has no 503s.
+    store = tiered_cloudsort_store(
+        str(tmp_path),
+        faults=FaultProfile(put_rate=5.0, burst=1.0),
+        retry=RetryPolicy(max_attempts=10, base_delay_s=0.005,
+                          max_delay_s=0.05, jitter=0.0))
+    store.create_bucket("b")
+    for i in range(4):
+        store.put("b", f"input/p{i}", b"x")
+        store.put("b", f"spill/w{i}", b"y")
+    per = store.per_tier_stats()
+    assert per["durable"].retries > 0  # real sleeps, but ~tens of ms total
+    assert per["ssd"].retries == 0 and per["ssd"].throttled == 0
+    assert per["ssd"].put_requests == 4
+    assert per["durable"].put_requests == 4 + per["durable"].throttled

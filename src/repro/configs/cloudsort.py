@@ -64,10 +64,13 @@ def ooc_smoke_plan():
     A 2^14-record wave working set against a >=4x larger store-resident
     dataset: 8 map waves at the default 2^17 records, each wave split into
     2 streaming rounds, 2 input partitions per wave, 64 KiB download
-    chunks, 16 KiB reduce merge chunks. R1=2 keeps output partitions wide
-    enough that the streaming-reduce memory bound (runs x merge chunk)
-    is strictly below a partition — the bound the example asserts — while
-    each run slice still takes several chunked fetches at smoke scale.
+    chunks, 16 KiB reduce merge-chunk cap. The reduce scheduler runs 4
+    streaming merges concurrently under a 128 KiB global memory budget —
+    strictly below one output partition (~196 KiB at the default record
+    size), the bound the example asserts — with per-partition part
+    uploads fanned out 2-wide (out-of-order part-indexed multipart).
+    R1=2 keeps output partitions wide enough that each run slice still
+    takes several chunked fetches at smoke scale.
     Lazily imported so configs stay importable without jax.
     """
     from repro.core.external_sort import ExternalSortPlan
@@ -82,6 +85,9 @@ def ooc_smoke_plan():
         output_part_records=1 << 13,
         store_chunk_bytes=64 << 10,
         merge_chunk_bytes=16 << 10,
+        parallel_reducers=4,
+        reduce_memory_budget_bytes=128 << 10,
+        part_upload_fanout=2,
     )
 
 

@@ -10,9 +10,14 @@ Paper mapping:
       chunks (io/backends.get_chunks — one GET per chunk, the paper's
       "120 chunks" map download), double-buffered against device compute
       (io/staging.prefetch, retry-aware against transient store stalls).
-      Each wave runs the in-memory two-stage streaming exoshuffle
-      (core/streaming.py), after which every worker holds one globally
-      range-partitioned sorted run.
+      Wave assembly is zero-copy: each chunk decodes straight into one
+      preallocated interleaved-row buffer (io/records.StreamDecoder), so
+      a wave's bytes are copied once off the wire instead of through
+      b"".join + np.concatenate staging copies. Each wave runs the
+      in-memory two-stage streaming exoshuffle (core/streaming.py), after
+      which every worker holds one globally range-partitioned sorted run;
+      shuffled payload rows are located by O(1) id-offset arithmetic
+      (gensort ids are contiguous per wave) instead of a per-wave argsort.
 
   spill (§2.3): each worker's merged run is written back under
       plan.spill_prefix as one sorted run object. Against a TieredStore
@@ -23,31 +28,43 @@ Paper mapping:
       write-behind via io/staging.AsyncWriter so upload overlaps the next
       wave's sort.
 
-  reduce (§2.4): output partition r streaming-merges its slice of every
-      spilled run with *bounded* memory: each run slice is fetched in
-      plan.merge_chunk_bytes ranged chunks (all empty cursors refill
-      concurrently, so an emit cycle pays ~one request stall, not one per
-      run), buffered records are merged up to the smallest last-loaded
-      key over still-active runs (so nothing can arrive later that sorts
-      before what is emitted), and merged bytes stream straight into an
-      incremental multipart upload (one PUT per part, the paper's "40
-      chunks" reduce upload) through a per-partition ordered write-behind
-      queue — up to max_inflight_writes partitions upload concurrently
-      while later partitions merge. Reduce host memory is therefore
-      ∝ runs × merge_chunk_bytes — NOT partition size — and the measured
-      peak is reported (reduce_peak_merge_bytes).
+  reduce (§2.4): a scheduler runs up to plan.parallel_reducers streaming
+      k-way merges CONCURRENTLY on a worker pool — the paper's "all
+      output partitions at once" reduce stage, the scheduling freedom
+      shuffle-as-a-library buys (Exoshuffle §4). Each active reducer
+      fetches its slice of every spilled run in bounded ranged chunks
+      (all empty cursors refill concurrently, so an emit cycle pays ~one
+      request stall, not one per run), merges buffered records up to the
+      smallest last-loaded key over still-active runs, and streams merged
+      bytes into an incremental multipart upload. Part uploads are
+      part-indexed (io/backends.put_part(index, data)) and fan out over
+      plan.part_upload_fanout threads per partition, so one partition's
+      parts upload out of order and in parallel — S3's UploadPart
+      contract — while the object assembles (and CRC-etags) in part
+      order at complete(). Reduce merge memory is governed globally:
+      with plan.reduce_memory_budget_bytes set, the budget is
+      apportioned across the active reducers into per-run chunk sizes,
+      and the measured all-reducer peak of decoded merge-buffer bytes
+      (reduce_peak_merge_bytes, thread-safe accounting) never exceeds
+      it — encoded output parts being sliced/uploaded sit on top, ~
+      (1 + max_inflight_writes) x part bytes per active reducer. Output
+      bytes are identical at any parallelism (the merge result does not
+      depend on the schedule).
 
-Every store interaction is request-accounted, so the Table-2 TCO can be
-computed from *measured* GET/PUT counts (core/cost_model.measured_cloudsort_tco,
-or .measured_tiered_cloudsort_tco for per-tier legs) instead of the
-paper's hardcoded 6M/1M constants.
+Every phase records wall-clock spans (map wait/compute/spill, reduce
+fetch/merge/upload) into the report's span timeline, so map/reduce
+overlap is measured, not asserted. Every store interaction is
+request-accounted, so the Table-2 TCO can be computed from *measured*
+GET/PUT counts (core/cost_model.measured_cloudsort_tco, or
+.measured_tiered_cloudsort_tco for per-tier legs) instead of the paper's
+hardcoded 6M/1M constants.
 """
 from __future__ import annotations
 
-import collections
+import contextlib
 import dataclasses
 import math
-import sys
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Sequence
@@ -70,8 +87,15 @@ class ExternalSortPlan:
     records_per_wave is the device-resident working set — the analogue of
     the paper's (map tasks in flight) x (2 GB block) bound.
     merge_chunk_bytes is the reduce-side counterpart: the per-run fetch
-    granularity of the streaming merge, so reduce host memory is bounded
-    by runs x merge_chunk_bytes instead of a whole output partition.
+    granularity cap of the streaming merge. parallel_reducers streaming
+    merges run concurrently; with reduce_memory_budget_bytes set, the
+    global budget is split across them (per-run chunk = budget /
+    (parallel_reducers x runs), capped at merge_chunk_bytes), so the
+    summed decoded merge-buffer bytes across all active reducers stay
+    within the budget — not parallelism x partition size. (The budget
+    governs the merge *buffers*; each active reducer additionally holds
+    up to ~one encoded output part being sliced plus max_inflight_writes
+    parts awaiting upload.)
     """
 
     records_per_wave: int  # device working set (records, across the mesh)
@@ -86,14 +110,99 @@ class ExternalSortPlan:
     input_records_per_partition: int = 1 << 13  # gensort object size
     output_part_records: int = 1 << 13  # multipart-upload part size
     store_chunk_bytes: int = 256 << 10  # map download GET granularity
-    merge_chunk_bytes: int = 64 << 10  # reduce per-run fetch granularity
+    merge_chunk_bytes: int = 64 << 10  # reduce per-run fetch granularity (cap)
     prefetch_depth: int = 2  # double buffering
-    max_inflight_writes: int = 2  # spill/upload backpressure
+    max_inflight_writes: int = 2  # spill/per-partition part backpressure
     io_retries: int = 2  # staging-level re-reads of a failed wave load
+    parallel_reducers: int = 4  # concurrent streaming merges (reduce pool)
+    reduce_memory_budget_bytes: int = 0  # global merge budget; 0 = uncapped
+    part_upload_fanout: int = 2  # out-of-order part uploads per partition
 
     @property
     def record_bytes(self) -> int:
         return rec.record_bytes(self.payload_words)
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One recorded phase interval, seconds relative to the sort start."""
+
+    phase: str  # e.g. "map.compute", "reduce.upload"
+    start: float
+    end: float
+    worker: str = ""  # "w3" map wave / "r12" reducer tag
+
+    @property
+    def seconds(self) -> float:
+        return self.end - self.start
+
+
+class PhaseTimeline:
+    """Thread-safe span recorder for the per-phase timeline.
+
+    Aggregate per-phase totals are exact; the raw span list is capped at
+    `max_spans` (oldest kept) so a huge run cannot hoard memory — the
+    report's `spans_dropped` says how many were dropped. Because spans from overlapping
+    threads both count wall time, a phase total larger than the enclosing
+    stage's wall time is *measured overlap*, which is the point.
+    """
+
+    def __init__(self, origin: float, *, max_spans: int = 4096):
+        self._origin = origin
+        self._lock = threading.Lock()
+        self._totals: dict[str, float] = {}
+        self._spans: list[Span] = []
+        self._max = int(max_spans)
+        self.dropped = 0
+
+    def add(self, phase: str, start: float, end: float | None = None,
+            *, worker: str = "") -> None:
+        end = time.perf_counter() if end is None else end
+        span = Span(phase, start - self._origin, end - self._origin, worker)
+        with self._lock:
+            self._totals[phase] = self._totals.get(phase, 0.0) + span.seconds
+            if len(self._spans) < self._max:
+                self._spans.append(span)
+            else:
+                self.dropped += 1
+
+    @contextlib.contextmanager
+    def span(self, phase: str, worker: str = ""):
+        t = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(phase, t, worker=worker)
+
+    def totals(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._totals)
+
+    def spans(self) -> list[Span]:
+        with self._lock:
+            return list(self._spans)
+
+
+class _PeakTracker:
+    """Thread-safe global peak of summed per-reducer buffered merge bytes —
+    the measurement behind the reduce_memory_budget_bytes guarantee."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._per: dict[int, int] = {}
+        self._total = 0
+        self.peak = 0
+
+    def update(self, rid: int, nbytes: int) -> None:
+        with self._lock:
+            self._total += nbytes - self._per.get(rid, 0)
+            self._per[rid] = nbytes
+            if self._total > self.peak:
+                self.peak = self._total
+
+    def clear(self, rid: int) -> None:
+        with self._lock:
+            self._total -= self._per.pop(rid, 0)
 
 
 @dataclasses.dataclass
@@ -111,9 +220,15 @@ class ExternalSortReport:
     working_set_records: int
     stats: StoreStats  # delta over the sort (map + reduce), all tiers
     runs_per_reducer: int = 0  # k of the streaming k-way merge
-    merge_chunk_bytes: int = 0  # the plan's reduce fetch granularity
-    reduce_peak_merge_bytes: int = 0  # measured max of buffered run bytes
+    merge_chunk_bytes: int = 0  # the plan's per-run fetch cap
+    reduce_chunk_bytes: int = 0  # effective per-run chunk (budget-governed)
+    reduce_peak_merge_bytes: int = 0  # measured max across ALL active merges
+    parallel_reducers: int = 1  # concurrent merges the scheduler ran
+    reduce_memory_budget_bytes: int = 0  # the global governor (0 = none)
     tier_stats: dict[str, StoreStats] | None = None  # per-tier deltas
+    spans: list[Span] = dataclasses.field(default_factory=list)
+    spans_dropped: int = 0  # spans beyond the recorder cap (totals stay exact)
+    phase_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def oversubscription(self) -> float:
@@ -122,9 +237,13 @@ class ExternalSortReport:
 
     @property
     def reduce_memory_bound_bytes(self) -> int:
-        """The streaming-merge guarantee: peak merge memory never exceeds
-        runs x merge_chunk_bytes (+ one record of rounding per run)."""
-        return self.runs_per_reducer * self.merge_chunk_bytes
+        """The scheduler's memory guarantee: the global budget when one is
+        set, else parallel_reducers x runs x effective chunk (+ one record
+        of rounding per run) — reduce_peak_merge_bytes never exceeds it."""
+        if self.reduce_memory_budget_bytes:
+            return self.reduce_memory_budget_bytes
+        chunk = self.reduce_chunk_bytes or self.merge_chunk_bytes
+        return self.parallel_reducers * self.runs_per_reducer * chunk
 
     @property
     def job_hours(self) -> float:
@@ -144,20 +263,51 @@ def _output_key(plan: ExternalSortPlan, reducer: int) -> str:
 
 
 def _group_waves(inputs, counts, records_per_wave: int):
-    """Tile the key-ordered input objects into equal-record waves."""
+    """Tile the key-ordered input objects into equal-record waves.
+
+    ValueError, not assert: the tiling contract must survive python -O —
+    a silently mis-tiled wave would sort fine and fail only at valsort.
+    """
     waves, cur, acc = [], [], 0
     for meta, c in zip(inputs, counts):
         cur.append(meta)
         acc += c
-        assert acc <= records_per_wave, (
-            "input partitions must tile records_per_wave exactly "
-            f"(partition {meta.key} overflows the wave)"
-        )
+        if acc > records_per_wave:
+            raise ValueError(
+                "input partitions must tile records_per_wave exactly "
+                f"(partition {meta.key} overflows the wave)"
+            )
         if acc == records_per_wave:
             waves.append(cur)
             cur, acc = [], 0
-    assert not cur, "total records must be a multiple of records_per_wave"
+    if cur:
+        raise ValueError("total records must be a multiple of records_per_wave")
     return waves
+
+
+def _contiguous_id_base(ids: np.ndarray) -> int | None:
+    """Base id when a wave's ids are exactly arange(base, base + n).
+
+    gensort assigns ids sequentially across key-ordered input partitions
+    (data/gensort.write_to_store), so every wave decodes to a contiguous
+    ascending id range: the payload row of shuffled record id is then
+    just (id - base) — O(1) index arithmetic per record instead of the
+    argsort + searchsorted gather (O(n log n), random access). One
+    vectorized equality pass verifies the assumption; any other id layout
+    falls back to the general gather.
+    """
+    n = ids.size
+    if n == 0:
+        return None
+    base = int(ids[0])
+    # Unwrapped comparison on purpose: a range wrapping past 2^32 would
+    # break the (id - base) gather below, so it must take the fallback.
+    if base + n - 1 != int(ids[-1]):
+        return None
+    expect = np.uint32(base) + np.arange(n, dtype=np.uint32)
+    if not bool(np.array_equal(np.asarray(ids, dtype=np.uint32), expect)):
+        return None
+    return base
 
 
 class _RunCursor:
@@ -245,6 +395,78 @@ def _merge_fragments(frags, payload_words: int):
     return keys, ids, payload
 
 
+class _SiblingFailed(Exception):
+    """Internal: this reducer was cancelled because another one failed."""
+
+
+def _reduce_chunking(plan: ExternalSortPlan, runs: int,
+                     active: int) -> tuple[int, int]:
+    """(chunk_records, chunk_bytes) per run under the global budget.
+
+    With a budget, each of the `active` concurrent reducers gets an equal
+    share, split over its `runs` cursors and capped at merge_chunk_bytes;
+    the all-reducer total active x runs x chunk therefore never exceeds
+    the budget. Without one, every cursor buffers merge_chunk_bytes.
+    """
+    rb = plan.record_bytes
+    if plan.merge_chunk_bytes < rb:
+        raise ValueError(
+            f"merge_chunk_bytes={plan.merge_chunk_bytes} must hold at least "
+            f"one {rb}-byte record, else the reduce-memory bound cannot be met"
+        )
+    chunk_bytes = plan.merge_chunk_bytes
+    if plan.reduce_memory_budget_bytes:
+        share = plan.reduce_memory_budget_bytes // max(active, 1)
+        chunk_bytes = min(chunk_bytes, share // max(runs, 1))
+        if chunk_bytes < rb:
+            raise ValueError(
+                f"reduce_memory_budget_bytes={plan.reduce_memory_budget_bytes}"
+                f" cannot give each of {active} concurrent reducers one "
+                f"{rb}-byte record per run ({runs} runs each) — raise the "
+                "budget or lower parallel_reducers"
+            )
+    return chunk_bytes // rb, chunk_bytes
+
+
+def _timed_part(timeline: PhaseTimeline, tag: str, mp, index: int,
+                data: bytes) -> None:
+    """Background part upload, recorded as a reduce.upload span."""
+    t = time.perf_counter()
+    mp.put_part(index, data)
+    timeline.add("reduce.upload", t, worker=tag)
+
+
+def _finalize_session(timeline: PhaseTimeline, tag: str,
+                      uploader: staging.AsyncWriter, mp) -> None:
+    """Background session finisher: wait for the partition's in-flight
+    parts, then commit — or abort on any failure (a truncated commit
+    would carry a self-consistent CRC etag IntegrityError can't catch).
+    Running this off the merge thread is what lets a reducer's scheduler
+    slot free while its tail uploads still stream (partition r's uploads
+    overlap partition r+active's merge even at parallel_reducers=1)."""
+    t = time.perf_counter()
+    try:
+        uploader.close()  # waits all parts; re-raises the first failure
+    except BaseException:
+        mp.abort()
+        raise
+    try:
+        mp.complete()
+    except BaseException:
+        mp.abort()
+        raise
+    finally:
+        timeline.add("reduce.upload_wait", t, worker=tag)
+
+
+def _timed_spill(timeline: PhaseTimeline, tag: str, store, bucket: str,
+                 key: str, data: bytes, metadata: dict) -> None:
+    """Background spill put, recorded as a map.spill span."""
+    t = time.perf_counter()
+    store.put(bucket, key, data, metadata=metadata)
+    timeline.add("map.spill", t, worker=tag)
+
+
 def external_sort(
     store: StoreBackend,
     bucket: str,
@@ -273,15 +495,30 @@ def external_sort(
         num_rounds=plan.num_rounds,
         impl=plan.impl,
     )
-    assert plan.records_per_wave % (w * plan.num_rounds) == 0, (
-        "records_per_wave must divide evenly into per-worker rounds"
-    )
+    if plan.records_per_wave % (w * plan.num_rounds) != 0:
+        # ValueError, not assert: plan validation must survive python -O.
+        raise ValueError(
+            "records_per_wave must divide evenly into per-worker rounds"
+        )
+    if plan.parallel_reducers < 1:
+        raise ValueError(f"parallel_reducers must be >= 1, "
+                         f"got {plan.parallel_reducers}")
+    if plan.part_upload_fanout < 1:
+        raise ValueError(f"part_upload_fanout must be >= 1, "
+                         f"got {plan.part_upload_fanout}")
 
     inputs = store.list_objects(bucket, plan.input_prefix)
-    assert inputs, f"no input objects under {plan.input_prefix!r}"
+    if not inputs:
+        raise ValueError(f"no input objects under {plan.input_prefix!r}")
     counts = [(m.size - rec.HEADER_BYTES) // plan.record_bytes for m in inputs]
     total = sum(counts)
     waves = _group_waves(inputs, counts, plan.records_per_wave)
+    num_waves = len(waves)
+    num_reducers = w * r1
+    active = min(plan.parallel_reducers, num_reducers)
+    # Budget feasibility is pure plan validation — fail here, before any
+    # map wave is fetched/sorted/spilled (and billed), not after.
+    chunk_records, chunk_bytes = _reduce_chunking(plan, num_waves, active)
     # Overwrite semantics: clear stale spill/output objects from any prior
     # run so the reduce pass and downstream validation see only this run.
     for prefix in (plan.spill_prefix, plan.output_prefix):
@@ -298,43 +535,56 @@ def external_sort(
         )
     )
 
-    # ---- map waves: stream in -> sort -> spill runs -------------------
+    # ---- map waves: stream in (zero-copy) -> sort -> spill runs -------
     def load_wave(objs):
-        ks, ids, ps = [], [], []
+        # One preallocated rows buffer for the whole wave; every chunk is
+        # copied exactly once, into its final interleaved position.
+        n_wave = sum(
+            (m.size - rec.HEADER_BYTES) // plan.record_bytes for m in objs)
+        rows = rec.alloc_rows(n_wave, pw)
+        at = 0
         for m in objs:
-            data = b"".join(store.get_chunks(bucket, m.key, plan.store_chunk_bytes))
-            k, i, p = rec.decode_records(data)
-            ks.append(k)
-            ids.append(i)
-            if pw:
-                ps.append(p)
-        return (
-            np.concatenate(ks),
-            np.concatenate(ids),
-            np.concatenate(ps) if pw else None,
-        )
+            dec = rec.StreamDecoder(rows, at, what=m.key)
+            for chunk in store.get_chunks(bucket, m.key, plan.store_chunk_bytes):
+                dec.feed(chunk)
+            at += dec.finish()
+        return rec.split_rows(rows)
 
     local_bounds = (
         np.asarray(cfg.keyspace.local_reducer_boundaries()) if r1 > 1 else None
     )  # (W, R1-1)
     spill_offsets: dict[tuple[int, int], np.ndarray] = {}
     t0 = time.perf_counter()
+    timeline = PhaseTimeline(origin=t0)
     with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
         wave_loads = (lambda objs=objs: load_wave(objs) for objs in waves)
-        for g, (keys, ids, payload) in enumerate(
-            staging.prefetch(wave_loads, depth=plan.prefetch_depth,
-                             retries=plan.io_retries,
-                             retry_on=(RetryableError,))
-        ):
+        wave_iter = iter(staging.prefetch(
+            wave_loads, depth=plan.prefetch_depth,
+            retries=plan.io_retries, retry_on=(RetryableError,)))
+        g = 0
+        while True:
+            t_wait = time.perf_counter()
+            try:
+                keys, ids, payload = next(wave_iter)
+            except StopIteration:
+                break
+            tag = f"g{g}"
+            timeline.add("map.wait", t_wait, worker=tag)
+            t_comp = time.perf_counter()
             sk, si, vcounts, ovf = sort_wave(jnp.asarray(keys), jnp.asarray(ids))
             sk, si, vcounts = np.asarray(sk), np.asarray(si), np.asarray(vcounts)
             if bool(np.asarray(ovf)):
                 raise RuntimeError(
                     "shuffle block overflow — raise capacity_factor"
                 )
-            # id -> wave row, for gathering payload of shuffled records.
-            order = np.argsort(ids)
-            sorted_ids = ids[order]
+            # id -> wave row for gathering payload of shuffled records:
+            # O(1) offset arithmetic when the wave's ids are contiguous
+            # (the gensort layout), argsort gather otherwise.
+            id_base = _contiguous_id_base(ids) if pw else None
+            order = sorted_ids = None
+            if pw and id_base is None:
+                order = np.argsort(ids)
+                sorted_ids = ids[order]
             seg = sk.shape[0] // w
             for wid in range(w):
                 n = int(vcounts[wid])
@@ -342,49 +592,54 @@ def external_sort(
                 run_i = si[wid * seg : wid * seg + n]
                 run_p = None
                 if pw:
-                    rows = order[np.searchsorted(sorted_ids, run_i)]
-                    run_p = payload[rows]
+                    if id_base is not None:
+                        sel = run_i.astype(np.int64) - id_base
+                    else:
+                        sel = order[np.searchsorted(sorted_ids, run_i)]
+                    run_p = payload[sel]
                 if local_bounds is not None:
                     internal = np.searchsorted(run_k, local_bounds[wid], side="left")
                 else:
                     internal = np.empty((0,), np.int64)
                 offsets = np.concatenate(([0], internal, [n])).astype(np.int64)
                 spill_offsets[(g, wid)] = offsets
-                spiller.submit(
-                    store.put,
-                    bucket,
-                    _spill_key(plan, g, wid),
-                    rec.encode_records(run_k, run_i, run_p),
-                    metadata={
-                        "records": n,
-                        "wave": g,
-                        "worker": wid,
-                        "reducer_offsets": [int(o) for o in offsets],
-                    },
-                )
+                data = rec.encode_records(run_k, run_i, run_p)
+                # Submit each encoded run immediately: the AsyncWriter
+                # backpressure bound (at most max_inflight encoded runs
+                # in host memory) only holds if we never batch them.
+                timeline.add("map.compute", t_comp, worker=tag)
+                t_spill = time.perf_counter()
+                spiller.submit(_timed_spill, timeline, tag, store, bucket,
+                               _spill_key(plan, g, wid), data, {
+                                   "records": n,
+                                   "wave": g,
+                                   "worker": wid,
+                                   "reducer_offsets": [int(o) for o in offsets],
+                               })
+                timeline.add("map.spill_wait", t_spill, worker=tag)
+                t_comp = time.perf_counter()
+            timeline.add("map.compute", t_comp, worker=tag)
+            g += 1
     map_seconds = time.perf_counter() - t0
 
-    # ---- reduce: streaming k-way merge, bounded chunks per run --------
-    # Memory contract: each of the (≤ num_waves) run cursors buffers at
-    # most merge_chunk_bytes of decoded records, the emit window is merged
-    # and encoded immediately, and completed output parts stream through
-    # write-behind queues. Overlap: all empty cursors of an emit cycle
-    # refill CONCURRENTLY (one stall per cycle, not one per run), and each
-    # reducer gets its own single-thread uploader (sequential put_part
-    # calls of one multipart session stay ordered) while up to
-    # max_inflight_writes reducers' uploads run concurrently — so upload
-    # stalls of partition r overlap the merge of partitions r+1....
-    num_waves = len(waves)
-    num_reducers = w * r1
-    if plan.merge_chunk_bytes < plan.record_bytes:
-        raise ValueError(
-            f"merge_chunk_bytes={plan.merge_chunk_bytes} must hold at least "
-            f"one {plan.record_bytes}-byte record, else the runs x "
-            "merge_chunk_bytes reduce-memory bound cannot be met"
-        )
-    chunk_records = plan.merge_chunk_bytes // plan.record_bytes
+    # ---- reduce: parallel scheduler over streaming k-way merges -------
+    # Memory contract: parallel_reducers merges run concurrently, each of
+    # their (≤ num_waves) run cursors buffering at most chunk_bytes of
+    # decoded records, where chunk_bytes is apportioned from the global
+    # reduce_memory_budget_bytes when one is set (see _reduce_chunking).
+    # The emit window is merged and encoded immediately; completed output
+    # parts fan out over part_upload_fanout threads per partition as
+    # part-indexed out-of-order uploads. Output bytes are independent of
+    # the schedule — partitions are independent objects and part payloads
+    # are sliced at fixed output_part_records boundaries — so any
+    # parallelism yields byte-identical (and etag-identical) partitions.
+    # (num_waves / active / chunk_records were derived up front, with the
+    # other plan validation.)
     part_bytes = plan.output_part_records * plan.record_bytes
-    peak_merge_bytes = 0
+    peak = _PeakTracker()
+    cancel = threading.Event()
+    fail_lock = threading.Lock()
+    first_fail: list[BaseException] = []
 
     def run_cursors(r: int) -> tuple[list[_RunCursor], int]:
         wid, j = divmod(r, r1)
@@ -399,85 +654,117 @@ def external_sort(
                 n_total += hi - lo
         return cursors, n_total
 
-    def _finish_session(uploader: staging.AsyncWriter, mp) -> None:
-        """Queued after a session's part uploads on its single-thread
-        writer: by the time it runs, every part either succeeded or set
-        the writer's failure flag — commit only a fully-uploaded object
-        (a truncated commit would carry a self-consistent CRC etag that
-        IntegrityError can never catch)."""
-        if uploader.failed:
-            mp.abort()
-        else:
-            mp.complete()
+    def reduce_one(r: int) -> None:
+        tag = f"r{r}"
+        cursors, n_total = run_cursors(r)
+        mp = store.multipart(bucket, _output_key(plan, r),
+                             metadata={"records": n_total, "reducer": r})
+        # max_inflight >= fanout, or the backpressure semaphore would
+        # silently cap concurrent part uploads below the fan-out width.
+        uploader = staging.AsyncWriter(
+            max(plan.max_inflight_writes, plan.part_upload_fanout),
+            max_workers=plan.part_upload_fanout)
+        next_part = 0
 
-    t0 = time.perf_counter()
-    live_uploaders: collections.deque[staging.AsyncWriter] = collections.deque()
-    refill_pool = ThreadPoolExecutor(
-        max_workers=min(16, max(2, num_waves)),
-        thread_name_prefix="reduce-refill")
-    try:
-        for r in range(num_reducers):
-            cursors, n_total = run_cursors(r)
-            mp = store.multipart(bucket, _output_key(plan, r),
-                                 metadata={"records": n_total, "reducer": r})
-            uploader = staging.AsyncWriter(plan.max_inflight_writes,
-                                           max_workers=1)
-            live_uploaders.append(uploader)
-            try:
-                # Record count is known up front (sum of run-slice
-                # lengths), so the header streams first, body chunks follow.
-                outbuf = bytearray(rec.encode_header(n_total, pw))
-                while cursors:
-                    need = [c for c in cursors
-                            if c.k64.size == 0 and c.has_more_remote]
+        def submit_part(data: bytes) -> None:
+            nonlocal next_part
+            idx, next_part = next_part, next_part + 1
+            t = time.perf_counter()  # blocks under upload backpressure
+            uploader.submit(_timed_part, timeline, tag, mp, idx, data)
+            timeline.add("reduce.upload_wait", t, worker=tag)
+
+        try:
+            # Record count is known up front (sum of run-slice
+            # lengths), so the header streams first, body follows.
+            outbuf = bytearray(rec.encode_header(n_total, pw))
+            while cursors:
+                if cancel.is_set():
+                    raise _SiblingFailed()
+                need = [c for c in cursors
+                        if c.k64.size == 0 and c.has_more_remote]
+                if need:
+                    t = time.perf_counter()
                     if len(need) == 1:
                         need[0].refill()
-                    elif need:  # concurrent ranged GETs: one RTT per cycle
+                    else:  # concurrent ranged GETs: one RTT per cycle
                         list(refill_pool.map(_RunCursor.refill, need))
-                    buffered = sum(c.buffered_bytes for c in cursors)
-                    peak_merge_bytes = max(peak_merge_bytes, buffered)
-                    # Safe emit bound: the smallest last-buffered key among
-                    # runs that still have un-fetched records — nothing
-                    # later can sort below it. When no run has remote data
-                    # left, everything buffered is emittable.
-                    remote_tails = [c.k64[-1] for c in cursors
-                                    if c.has_more_remote]
-                    bound = min(remote_tails) if remote_tails else None
-                    frags = [c.take_upto(bound) for c in cursors]
-                    cursors = [c for c in cursors if not c.exhausted]
-                    mk, mi, mpay = _merge_fragments(frags, pw)
-                    if mk.size:
-                        outbuf += rec.encode_body(mk, mi, mpay)
-                    while len(outbuf) >= part_bytes:
-                        uploader.submit(mp.put_part, bytes(outbuf[:part_bytes]))
-                        del outbuf[:part_bytes]
-                # >= 1 part always: an empty partition still has its header.
-                if outbuf or n_total == 0:
-                    uploader.submit(mp.put_part, bytes(outbuf))
+                    timeline.add("reduce.fetch", t, worker=tag)
+                peak.update(r, sum(c.buffered_bytes for c in cursors))
+                t = time.perf_counter()
+                # Safe emit bound: the smallest last-buffered key among
+                # runs that still have un-fetched records — nothing
+                # later can sort below it. When no run has remote data
+                # left, everything buffered is emittable.
+                remote_tails = [c.k64[-1] for c in cursors
+                                if c.has_more_remote]
+                bound = min(remote_tails) if remote_tails else None
+                frags = [c.take_upto(bound) for c in cursors]
+                cursors = [c for c in cursors if not c.exhausted]
+                mk, mi, mpay = _merge_fragments(frags, pw)
+                if mk.size:
+                    outbuf += rec.encode_body(mk, mi, mpay)
+                timeline.add("reduce.merge", t, worker=tag)
+                while len(outbuf) >= part_bytes:
+                    submit_part(bytes(outbuf[:part_bytes]))
+                    del outbuf[:part_bytes]
+            # >= 1 part always: an empty partition still has a header.
+            if outbuf or n_total == 0:
+                submit_part(bytes(outbuf))
+        except BaseException:
+            # Merge or upload died mid-session: let in-flight parts
+            # settle, then discard the session — never commit it.
+            try:
+                uploader.drain()
             except BaseException:
-                # Merge died mid-session: discard the partial upload after
-                # any in-flight parts finish (never commit it).
-                uploader.submit(mp.abort)
-                raise
-            uploader.submit(_finish_session, uploader, mp)
-            # Retire the oldest uploads once enough sessions are in flight;
-            # close() re-raises that session's first failure.
-            while len(live_uploaders) > plan.max_inflight_writes:
-                live_uploaders.popleft().close()
+                pass
+            try:
+                mp.abort()
+            finally:
+                peak.clear(r)
+                uploader.close()
+            raise
+        # Success: hand drain + complete to the finisher queue so this
+        # scheduler slot frees while the tail parts still upload —
+        # finishers.submit blocks once max(max_inflight_writes, active)
+        # sessions await completion (cross-partition upload backpressure).
+        peak.clear(r)
+        finishers.submit(_finalize_session, timeline, tag, uploader, mp)
+
+    def run_reducer(r: int) -> None:
+        if cancel.is_set():
+            return
+        try:
+            reduce_one(r)
+        except _SiblingFailed:
+            pass  # this partition was aborted cleanly; root cause is queued
+        except BaseException as e:
+            with fail_lock:
+                if not first_fail:
+                    first_fail.append(e)
+            cancel.set()
+
+    t0 = time.perf_counter()
+    refill_pool = ThreadPoolExecutor(
+        max_workers=min(16, max(2, num_waves * active)),
+        thread_name_prefix="reduce-refill")
+    finishers = staging.AsyncWriter(
+        max(plan.max_inflight_writes, active), max_workers=active,
+        thread_name_prefix="reduce-finish")
+    try:
+        with ThreadPoolExecutor(max_workers=active,
+                                thread_name_prefix="reduce-merge") as sched:
+            for f in [sched.submit(run_reducer, r) for r in range(num_reducers)]:
+                f.result()  # never raises: run_reducer records failures
     finally:
         refill_pool.shutdown(wait=True)
-        in_flight = sys.exc_info()[1]
-        first_exc = None
-        while live_uploaders:
-            try:
-                live_uploaders.popleft().close()
-            except BaseException as e:  # close every session before raising
-                if first_exc is None:
-                    first_exc = e
-        # Surface a background upload failure — unless the merge loop is
-        # already unwinding with its own exception (don't mask it).
-        if first_exc is not None and in_flight is None:
-            raise first_exc
+        try:
+            finishers.close()  # re-raises the first finisher failure
+        except BaseException as e:
+            with fail_lock:
+                if not first_fail:
+                    first_fail.append(e)
+    if first_fail:
+        raise first_fail[0]
     reduce_seconds = time.perf_counter() - t0
 
     tier_stats = None
@@ -498,6 +785,12 @@ def external_sort(
         stats=store.stats_snapshot() - base_stats,
         runs_per_reducer=num_waves,
         merge_chunk_bytes=plan.merge_chunk_bytes,
-        reduce_peak_merge_bytes=peak_merge_bytes,
+        reduce_chunk_bytes=chunk_bytes,
+        reduce_peak_merge_bytes=peak.peak,
+        parallel_reducers=active,
+        reduce_memory_budget_bytes=plan.reduce_memory_budget_bytes,
         tier_stats=tier_stats,
+        spans=timeline.spans(),
+        spans_dropped=timeline.dropped,
+        phase_seconds=timeline.totals(),
     )

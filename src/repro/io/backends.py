@@ -27,17 +27,25 @@ Layering:
       SSD" tier when tmpfs-like speed is wanted without touching disk.
 
 Writes go through multipart *sessions* (`multipart()` -> MultipartUpload):
-parts stream to the backend as they are produced, which is what lets the
-reduce pass upload a merged partition incrementally instead of
-materializing it (core/external_sort.py).
+parts are *part-indexed* (`put_part(index, data)`) and may arrive in any
+order from any number of threads — exactly S3's UploadPart contract, where
+part numbers decide assembly order and the wire order is free. `complete()`
+assembles parts in ascending index order and computes the CRC etag in that
+part order, so an object uploaded 3,1,2 in parallel is byte- and
+etag-identical to the same parts uploaded sequentially. This is what lets
+the reduce pass fan one partition's part uploads out over a pool instead
+of threading them through a single ordered queue (core/external_sort.py).
 
 Thread-safe: the staging layer issues puts/gets from background threads
-to overlap I/O with device compute (§2.5).
+to overlap I/O with device compute (§2.5), and concurrent `put_part`
+calls of one session race only on distinct part slots (same-index
+re-uploads are last-write-wins, like S3).
 """
 from __future__ import annotations
 
 import abc
 import dataclasses
+import itertools
 import json
 import os
 import threading
@@ -155,14 +163,19 @@ def _verify_integrity(where: str, data: bytes, entry: dict) -> bytes:
 class MultipartUpload(abc.ABC):
     """An in-progress multipart upload (S3 CreateMultipartUpload session).
 
-    `put_part` is the billable unit (one PUT per part, §3.3.2's "40
-    chunks" reduce upload); initiate/complete are free, matching the
-    paper's request arithmetic. Parts become visible atomically at
-    `complete()`; `abort()` discards them.
+    `put_part(index, data)` is the billable unit (one PUT per part,
+    §3.3.2's "40 chunks" reduce upload); initiate/complete are free,
+    matching the paper's request arithmetic. Part indices are the S3 part
+    numbers: parts may be uploaded out of order and concurrently,
+    re-uploading an index is last-write-wins, and `complete()` assembles
+    ascending-by-index (gaps are fine, as on S3) with the CRC etag
+    computed in that assembled order. Parts become visible atomically at
+    `complete()`; `abort()` discards them — including parts whose upload
+    raced the abort.
     """
 
     @abc.abstractmethod
-    def put_part(self, data: bytes) -> None: ...
+    def put_part(self, index: int, data: bytes) -> None: ...
 
     @abc.abstractmethod
     def complete(self) -> ObjectMeta: ...
@@ -216,7 +229,7 @@ class StoreBackend(abc.ABC):
         """S3 PutObject: one PUT request (a single-part session)."""
         mp = self.multipart(bucket, key, metadata)
         try:
-            mp.put_part(bytes(data))
+            mp.put_part(0, bytes(data))
             return mp.complete()
         except BaseException:
             mp.abort()
@@ -232,8 +245,8 @@ class StoreBackend(abc.ABC):
         """
         mp = self.multipart(bucket, key, metadata)
         try:
-            for p in parts:
-                mp.put_part(bytes(p))
+            for idx, p in enumerate(parts):
+                mp.put_part(idx, bytes(p))
             return mp.complete()
         except BaseException:
             mp.abort()
@@ -374,8 +387,16 @@ class FilesystemBackend(StoreBackend):
         self._flush_manifest(bucket)
 
 
+# Session nonces keep concurrent sessions for the same key from sharing
+# tmp paths (the old thread-id scheme collided for same-thread sessions).
+_MP_NONCE = itertools.count()
+
+
 class _FsMultipart(MultipartUpload):
-    """Parts append to a tmp file; `complete` promotes it atomically."""
+    """Each part lands in its own tmp file (so concurrent out-of-order
+    `put_part` calls never share a write path); `complete` streams the
+    parts together ascending-by-index — CRC etag computed in that order,
+    the S3 server-side assembly — and promotes the result atomically."""
 
     def __init__(self, backend: FilesystemBackend, bucket: str, key: str,
                  metadata: dict | None):
@@ -386,31 +407,73 @@ class _FsMultipart(MultipartUpload):
         path = backend._object_path(bucket, key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         self._path = path
-        self._tmp = f"{path}.{threading.get_ident()}.mp.tmp"
-        self._f = open(self._tmp, "wb")
-        self._crc = 0
-        self._size = 0
-        self._nparts = 0
+        self._tmp = f"{path}.{next(_MP_NONCE)}.mp"
+        self._lock = threading.Lock()
+        # index -> (part tmp file, size, crc32): size/crc are computed at
+        # upload time so a single-part complete() never re-reads the data.
+        self._parts: dict[int, tuple[str, int, int]] = {}
 
-    def put_part(self, data: bytes) -> None:
-        self._f.write(data)
-        self._crc = zlib.crc32(data, self._crc)
-        self._size += len(data)
-        self._nparts += 1
+    def _part_path(self, index: int) -> str:
+        return f"{self._tmp}.part-{int(index):05d}"
+
+    def put_part(self, index: int, data: bytes) -> None:
+        index = int(index)
+        if index < 0:
+            raise ValueError(f"part index must be >= 0, got {index}")
+        final = self._part_path(index)
+        # Write-then-replace: a same-index re-upload is atomic last-write-
+        # wins even when two uploaders race on the slot (S3 semantics).
+        staged = f"{final}.{threading.get_ident()}.w"
+        with open(staged, "wb") as f:
+            f.write(data)
+        os.replace(staged, final)
+        with self._lock:
+            self._parts[index] = (final, len(data), zlib.crc32(data))
 
     def complete(self) -> ObjectMeta:
-        self._f.close()
-        os.replace(self._tmp, self._path)
-        entry = {"size": self._size, "etag": f"{self._crc:08x}",
-                 "parts": max(self._nparts, 1), "metadata": self._metadata}
+        with self._lock:
+            parts = sorted(self._parts.items())
+        if len(parts) == 1:
+            # Plain puts and single-part sessions — all spill and gensort
+            # traffic — promote the part file directly: one disk write
+            # total, no assembly copy or CRC re-read.
+            _, (ppath, size, crc) = parts[0]
+            os.replace(ppath, self._path)
+        else:
+            crc, size = 0, 0
+            assembled = f"{self._tmp}.obj"
+            with open(assembled, "wb") as out:
+                for _, (ppath, _, _) in parts:
+                    with open(ppath, "rb") as f:
+                        data = f.read()
+                    out.write(data)
+                    crc = zlib.crc32(data, crc)
+                    size += len(data)
+            os.replace(assembled, self._path)
+            for _, (ppath, _, _) in parts:
+                if os.path.exists(ppath):
+                    os.remove(ppath)
+        entry = {"size": size, "etag": f"{crc:08x}",
+                 "parts": max(len(parts), 1), "metadata": self._metadata}
         return self._b._commit(self._bucket, self._key, entry)
 
     def abort(self) -> None:
-        try:
-            self._f.close()
-        finally:
-            if os.path.exists(self._tmp):
-                os.remove(self._tmp)
+        # Sweep by registry AND by tmp-prefix glob: a put_part racing the
+        # abort may have written its file but not yet registered it.
+        with self._lock:
+            paths = {p for p, _, _ in self._parts.values()}
+            self._parts.clear()
+        parent = os.path.dirname(self._tmp)
+        prefix = os.path.basename(self._tmp)
+        if os.path.isdir(parent):
+            paths.update(os.path.join(parent, name)
+                         for name in os.listdir(parent)
+                         if name.startswith(prefix))
+        for p in paths:
+            try:
+                os.remove(p)
+            except FileNotFoundError:
+                pass
 
 
 # ---------------------------------------------------------------------------
@@ -474,27 +537,35 @@ class MemoryBackend(StoreBackend):
 
 
 class _MemMultipart(MultipartUpload):
+    """Index-keyed part dict; `complete` joins ascending-by-index."""
+
     def __init__(self, backend: MemoryBackend, bucket: str, key: str,
                  metadata: dict | None):
         self._b = backend
         self._bucket = bucket
         self._key = key
         self._metadata = dict(metadata or {})
-        self._buf = bytearray()
-        self._nparts = 0
+        self._lock = threading.Lock()
+        self._parts: dict[int, bytes] = {}
 
-    def put_part(self, data: bytes) -> None:
-        self._buf += data
-        self._nparts += 1
+    def put_part(self, index: int, data: bytes) -> None:
+        index = int(index)
+        if index < 0:
+            raise ValueError(f"part index must be >= 0, got {index}")
+        with self._lock:
+            self._parts[index] = bytes(data)  # last-write-wins per slot
 
     def complete(self) -> ObjectMeta:
-        data = bytes(self._buf)
+        with self._lock:
+            parts = sorted(self._parts.items())
+        data = b"".join(p for _, p in parts)
         entry = {"size": len(data), "etag": f"{zlib.crc32(data):08x}",
-                 "parts": max(self._nparts, 1), "metadata": self._metadata}
+                 "parts": max(len(parts), 1), "metadata": self._metadata}
         with self._b._lock:
             self._b._buckets[self._bucket][self._key] = (data, entry)
         return ObjectMeta(key=self._key, size=entry["size"], etag=entry["etag"],
                           parts=entry["parts"], metadata=dict(self._metadata))
 
     def abort(self) -> None:
-        self._buf = bytearray()
+        with self._lock:
+            self._parts.clear()

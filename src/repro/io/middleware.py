@@ -87,14 +87,20 @@ class StoreMiddleware(StoreBackend):
 
 
 class _WrappedMultipart(MultipartUpload):
-    """Routes part uploads of an inner session through the middleware."""
+    """Routes part uploads of an inner session through the middleware.
+
+    Part-indexed and thread-safe like the sessions it wraps: concurrent
+    out-of-order `put_part(index, data)` calls each cross the middleware
+    as their own PUT attempt (so a parallel part fan-out is throttled,
+    delayed, billed, and retried per part, like real S3 UploadPart
+    traffic)."""
 
     def __init__(self, mw: StoreMiddleware, inner: MultipartUpload):
         self._mw = mw
         self._inner = inner
 
-    def put_part(self, data: bytes) -> None:
-        self._mw._call("put", lambda: self._inner.put_part(data),
+    def put_part(self, index: int, data: bytes) -> None:
+        self._mw._call("put", lambda: self._inner.put_part(index, data),
                        nbytes=len(data))
 
     def complete(self) -> ObjectMeta:  # free, like S3 CompleteMultipartUpload

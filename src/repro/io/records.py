@@ -65,7 +65,9 @@ def encode_records(keys, ids, payload=None) -> bytes:
 def decode_header(data: bytes) -> tuple[int, int]:
     """(n_records, payload_words) from the first HEADER_BYTES of an object."""
     magic, version, n, pw = np.frombuffer(data[:HEADER_BYTES], dtype="<u4")
-    assert magic == MAGIC and version == VERSION, "not an XSRT record object"
+    if magic != MAGIC or version != VERSION:
+        # ValueError, not assert: the format gate must survive python -O.
+        raise ValueError("not an XSRT record object")
     return int(n), int(pw)
 
 
@@ -93,3 +95,80 @@ def body_range(start_record: int, n_records: int, payload_words: int):
     encoded object — the ranged-GET window for a run slice."""
     rb = record_bytes(payload_words)
     return HEADER_BYTES + int(start_record) * rb, int(n_records) * rb
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy wave assembly: decode chunk streams straight into one buffer
+# ---------------------------------------------------------------------------
+
+
+def alloc_rows(n_records: int, payload_words: int) -> np.ndarray:
+    """One preallocated interleaved-row buffer for `n_records` records —
+    the target StreamDecoder fills and split_rows views into."""
+    return np.empty((int(n_records), 2 + int(payload_words)), dtype="<u4")
+
+
+def split_rows(rows: np.ndarray):
+    """(keys, ids, payload|None) *views* into an interleaved rows buffer —
+    no copy; the row storage stays the single owner of the bytes."""
+    pw = rows.shape[1] - 2
+    return rows[:, 0], rows[:, 1], (rows[:, 2:] if pw else None)
+
+
+class StreamDecoder:
+    """Decode one encoded object's chunk stream straight into a rows buffer.
+
+    The zero-copy map download path (core/external_sort.py): instead of
+    `b"".join(chunks)` + decode + `np.concatenate` across objects — three
+    full copies of every wave byte — each ranged-GET chunk is copied once,
+    directly into its final position in a preallocated `alloc_rows` buffer
+    at `start_record`. Works for any chunking: record and header
+    boundaries may fall anywhere inside or across chunks.
+
+    Feed chunks in object-byte order (`feed`), then `finish()` — which
+    validates the object header (magic/version, record count against the
+    records actually written, payload width against the buffer's) and
+    returns the record count.
+    """
+
+    def __init__(self, rows: np.ndarray, start_record: int = 0,
+                 *, what: str = "object"):
+        pw = rows.shape[1] - 2
+        self._rb = record_bytes(pw)
+        self._pw = pw
+        self._what = what
+        self._header = bytearray()
+        if not rows.flags.c_contiguous:
+            raise ValueError("rows buffer must be C-contiguous")
+        self._dest = memoryview(rows).cast("B")
+        self._off = int(start_record) * self._rb
+        self._start = self._off
+
+    def feed(self, chunk: bytes) -> None:
+        view = memoryview(chunk)
+        if len(self._header) < HEADER_BYTES:  # header may span chunks
+            take = min(HEADER_BYTES - len(self._header), len(view))
+            self._header += view[:take]
+            view = view[take:]
+        if len(view):
+            end = self._off + len(view)
+            if end > len(self._dest):
+                raise ValueError(
+                    f"{self._what}: body overflows the rows buffer "
+                    f"(byte {end} > {len(self._dest)})")
+            self._dest[self._off:end] = view
+            self._off = end
+
+    def finish(self) -> int:
+        if len(self._header) < HEADER_BYTES:
+            raise ValueError(f"{self._what}: truncated header "
+                             f"({len(self._header)} bytes)")
+        n, pw = decode_header(bytes(self._header))
+        written, want = self._off - self._start, n * self._rb
+        if pw != self._pw:
+            raise ValueError(f"{self._what}: payload_words={pw}, "
+                             f"buffer expects {self._pw}")
+        if written != want:
+            raise ValueError(f"{self._what}: body is {written} bytes, "
+                             f"header promises {want}")
+        return n

@@ -19,9 +19,11 @@ overlap explicitly:
       `submit` blocks once `max_inflight` writes are pending — the static
       analogue of the paper's merge controller withholding acks to
       back-pressure producers (§2.3) — so host memory holds at most
-      max_inflight encoded runs. With max_workers=1 submissions execute
-      strictly in submission order, which is what lets the streaming
-      reduce feed sequential multipart part uploads through it.
+      max_inflight encoded runs. Multipart part uploads are part-indexed
+      (io/backends.put_part(index, data)), so a multi-worker pool may
+      complete them out of order and the assembled object is still exact;
+      max_workers=1 remains available for genuinely order-sensitive
+      submissions (it executes strictly in submission order).
 
 Both are plain thread pools: store I/O is file I/O + numpy codec work that
 releases the GIL, and device compute runs inside jit, so the overlap is
@@ -96,15 +98,17 @@ class AsyncWriter:
 
     max_inflight bounds how many submissions may be pending (backpressure);
     max_workers (default = max_inflight) is the pool width. max_workers=1
-    gives strict FIFO execution — required when submissions are order-
-    sensitive, like sequential put_part calls of one multipart upload.
+    gives strict FIFO execution for order-sensitive submissions; part-
+    indexed multipart uploads (put_part(index, data)) don't need it — the
+    reduce path fans parts out over max_workers=part_upload_fanout.
     """
 
-    def __init__(self, max_inflight: int = 2, *, max_workers: int | None = None):
+    def __init__(self, max_inflight: int = 2, *, max_workers: int | None = None,
+                 thread_name_prefix: str = "stage-write"):
         assert max_inflight >= 1
         self._ex = ThreadPoolExecutor(
             max_workers=max_workers or max_inflight,
-            thread_name_prefix="stage-write",
+            thread_name_prefix=thread_name_prefix,
         )
         self._slots = threading.Semaphore(max_inflight)
         self._futures: list[Future] = []

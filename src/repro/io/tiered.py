@@ -13,6 +13,12 @@ Both tiers are plain StoreBackends (usually metrics-wrapped, the durable
 one usually fault-injected too); `per_tier_stats()` exposes each tier's
 counters and `stats_snapshot()` their sum, so existing consumers that
 expect one StoreStats delta keep working unchanged.
+
+Multipart sessions route whole: `multipart(bucket, key)` returns the
+owning tier's session directly, so part-indexed out-of-order parallel
+part uploads (io/backends.MultipartUpload) flow through the tier's own
+middleware stack — durable-tier parts are throttled/billed per part,
+SSD-tier parts are free — with no extra layer in between.
 """
 from __future__ import annotations
 

@@ -168,12 +168,14 @@ print("OK", s.retries, "retries absorbed")
 def test_streaming_reduce_peak_memory_bounded_by_chunk_sweep():
     # Peak merge memory must scale with merge_chunk_bytes (runs x chunk),
     # not with partition size: sweep the chunk size on the same dataset.
+    # parallel_reducers=1 isolates the per-merge contract; the global
+    # budget governor has its own test below.
     run_with_devices(SETUP + """
 import dataclasses
 partition_bytes = N // (8 * plan.reducers_per_worker) * plan.record_bytes
 peaks = {}
 for chunk in (1 << 12, 1 << 14):
-    p = dataclasses.replace(plan, merge_chunk_bytes=chunk)
+    p = dataclasses.replace(plan, merge_chunk_bytes=chunk, parallel_reducers=1)
     rep = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=p)
     val = valsort.validate_from_store(store, "sort", p.output_prefix, in_ck)
     assert val.ok, (chunk, val)
@@ -186,6 +188,40 @@ for chunk in (1 << 12, 1 << 14):
 assert peaks[1 << 12] < peaks[1 << 14]
 assert peaks[1 << 12] < partition_bytes, (peaks, partition_bytes)
 print("OK", peaks)
+""")
+
+
+def test_parallel_reduce_deterministic_and_budget_bounded():
+    # The scheduler contract (ISSUE 3): parallel_reducers=4 must produce
+    # output objects byte-identical (same CRC etag, size, part count) to
+    # parallel_reducers=1, and the measured all-reducer peak merge memory
+    # must respect the global reduce_memory_budget_bytes.
+    run_with_devices(SETUP + """
+import dataclasses
+budget = 16 << 10  # < one output partition (32 KiB at these parameters)
+partition_bytes = N // (8 * plan.reducers_per_worker) * plan.record_bytes
+assert budget < partition_bytes
+etags = {}
+for par in (1, 4):
+    p = dataclasses.replace(plan, parallel_reducers=par,
+                            reduce_memory_budget_bytes=budget,
+                            part_upload_fanout=1 if par == 1 else 3)
+    rep = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=p)
+    assert rep.parallel_reducers == par
+    assert 0 < rep.reduce_peak_merge_bytes <= budget, rep
+    assert rep.reduce_memory_bound_bytes == budget
+    val = valsort.validate_from_store(store, "sort", p.output_prefix, in_ck)
+    assert val.ok, (par, val)
+    etags[par] = [(m.key, m.etag, m.size, m.parts)
+                  for m in store.list_objects("sort", p.output_prefix)]
+    assert len(etags[par]) == 16
+# byte-identical partitions: same keys, same CRC etags, same part layout
+assert etags[1] == etags[4], (etags[1], etags[4])
+# the span timeline measured real overlapped reduce work
+assert rep.phase_seconds.get("reduce.merge", 0) > 0
+assert rep.phase_seconds.get("reduce.upload", 0) > 0
+assert rep.phase_seconds.get("map.compute", 0) > 0
+print("OK", etags[4][:2])
 """)
 
 

@@ -1,0 +1,162 @@
+"""Cluster-executor scaling: worker count x injected worker failures.
+
+The paper's headline run is a 40-worker cluster whose fault tolerance
+comes from the application rescheduling its own map/reduce tasks (§2.4,
+§2.6); core/cluster.py emulates that executor on one host. This benchmark
+measures what the emulation actually buys against a latency-injected
+store — the regime where per-worker I/O overlap pays, since the device
+mesh itself is one shared (lock-serialized) resource:
+
+  * scaling: the same dataset sorted at W in {1, 2, 4} emulated workers.
+    More workers overlap more map downloads/spills and run more
+    concurrent reduce merges, so end-to-end records/s must IMPROVE from
+    W=1 to W=4 (>= 1.05x smoke / >= 1.4x --full: CI runners are noisy,
+    the full bar is the real claim);
+  * fault recovery: a W=4 run with one worker killed mid-job
+    (FaultyWorker) must still complete, report how many tasks were
+    re-executed on the survivors, and produce BYTE-IDENTICAL output.
+
+Invariants asserted on every case:
+  * output partitions byte-identical (keys, CRC etags, sizes, part
+    layout) across every worker count, under failure, and vs. the
+    single-host driver;
+  * valsort-clean (ordering + order-independent checksum);
+  * measured all-reducer peak merge memory <= the global budget (the
+    adaptive governor's cluster-wide guarantee).
+
+Rows (name, us = end-to-end wall time, derived):
+
+  cluster_scaling/w{W}             — derived = end-to-end records/s
+  cluster_scaling/speedup_w4_vs_w1 — derived = records/s ratio
+  cluster_scaling/failover_w4_kill1— derived = re-executed task count
+
+Standalone: PYTHONPATH=src python benchmarks/bench_cluster_scaling.py [--smoke|--full]
+`run()` (the benchmarks/run.py entry) always uses smoke scale.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _build_store(latency_s: float, bandwidth_bps: float):
+    # Deterministic stall injection (no jitter/throttle randomness): the
+    # byte-identity assertions must compare runs on identical data, and
+    # the memory data plane keeps the bench latency-dominated anywhere.
+    from repro.io.backends import MemoryBackend
+    from repro.io.middleware import (FaultProfile, LatencyBandwidthMiddleware,
+                                     MetricsMiddleware)
+
+    profile = FaultProfile(latency_s=latency_s, bandwidth_bps=bandwidth_bps)
+    return MetricsMiddleware(
+        LatencyBandwidthMiddleware(MemoryBackend(chunk_size=64 << 10), profile))
+
+
+def run(full: bool = False):
+    import jax
+
+    from repro.core.cluster import ClusterExecutor, ClusterPlan
+    from repro.core.compat import make_mesh
+    from repro.core.external_sort import ExternalSortPlan, external_sort
+    from repro.data import gensort, valsort
+
+    w = len(jax.devices())
+    mesh = make_mesh((w,), ("w",))
+    plan = ExternalSortPlan(
+        records_per_wave=(1 << (13 if full else 12)) * w,
+        num_rounds=2,
+        reducers_per_worker=8,  # >= 8 partitions even on one device
+        payload_words=4,
+        impl="ref",
+        input_records_per_partition=(1 << (12 if full else 11)) * w,
+        output_part_records=1 << 10,
+        store_chunk_bytes=8 << 10,  # several latency-paying GETs per wave
+        # Chunk cap pinned below budget / (slots_max x runs): every worker
+        # count fetches the same chunk sequence, so the sweep measures
+        # scheduling (I/O overlap across workers), not chunk-size effects.
+        merge_chunk_bytes=4 << 10,
+        parallel_reducers=2,  # per worker; cluster-wide = W x this
+        reduce_memory_budget_bytes=256 << 10,  # slots_max(8) x runs(8) x cap
+    )
+    total = plan.records_per_wave * 8  # 8 waves = 8 runs per reducer
+    budget = plan.reduce_memory_budget_bytes
+
+    store = _build_store(latency_s=0.004, bandwidth_bps=200e6)
+    store.create_bucket("bench")
+    in_ck, _ = gensort.write_to_store(
+        store, "bench", plan.input_prefix, total,
+        plan.input_records_per_partition, plan.payload_words)
+
+    def layout():
+        return [(m.key, m.etag, m.size, m.parts)
+                for m in store.list_objects("bench", plan.output_prefix)]
+
+    # Single-host reference: the byte ground truth every cluster run
+    # (and the failure run) must reproduce exactly.
+    ref = external_sort(store, "bench", mesh=mesh, axis_names="w", plan=plan)
+    want = layout()
+    val = valsort.validate_from_store(store, "bench", plan.output_prefix, in_ck)
+    assert val.ok, val
+
+    rows, rates = [], {}
+    for workers in (1, 2, 4):
+        t0 = time.perf_counter()
+        crep = ClusterExecutor(
+            store, "bench", mesh=mesh, axis_names="w", plan=plan,
+            cluster=ClusterPlan(num_workers=workers)).sort()
+        secs = time.perf_counter() - t0
+        assert layout() == want, f"W={workers} changed output bytes"
+        val = valsort.validate_from_store(
+            store, "bench", plan.output_prefix, in_ck)
+        assert val.ok, (workers, val)
+        assert crep.sort.reduce_peak_merge_bytes <= budget, (crep.sort, budget)
+        assert not crep.failed_workers and crep.reexecuted_tasks == 0
+        rates[workers] = total / secs
+        rows.append((f"cluster_scaling/w{workers}", secs * 1e6,
+                     rates[workers]))
+
+    speedup = rates[4] / rates[1]
+    # The acceptance bar (1.4x) is the --full contract; the smoke run —
+    # which CI executes on shared, noisy runners — asserts only the
+    # direction (more workers must not lose) and reports the ratio.
+    bar = 1.4 if full else 1.05
+    assert speedup >= bar, (
+        f"W=4 gained only {speedup:.2f}x over W=1 (bar: {bar}x)")
+    rows.append(("cluster_scaling/speedup_w4_vs_w1", 0.0, speedup))
+
+    # One injected worker death mid-job: w1 completes 3 tasks, then dies;
+    # the driver must finish on survivors with byte-identical output and
+    # report the re-executed tasks.
+    t0 = time.perf_counter()
+    crep = ClusterExecutor(
+        store, "bench", mesh=mesh, axis_names="w", plan=plan,
+        cluster=ClusterPlan(num_workers=4, fail_after_tasks={1: 3})).sort()
+    secs = time.perf_counter() - t0
+    assert layout() == want, "worker failure changed output bytes"
+    val = valsort.validate_from_store(store, "bench", plan.output_prefix, in_ck)
+    assert val.ok, val
+    assert crep.failed_workers == ["w1"], crep.failed_workers
+    assert crep.sort.reduce_peak_merge_bytes <= budget
+    rows.append(("cluster_scaling/failover_w4_kill1", secs * 1e6,
+                 float(crep.reexecuted_tasks)))
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="small dataset, lenient speedup bar (the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="larger dataset, 1.4x speedup bar")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(full=args.full):
+        print(f"{name},{us:.3f},{derived:.6g}")
+    print(f"# total {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

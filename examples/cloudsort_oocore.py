@@ -21,6 +21,12 @@ priced from the durable tier's *measured*, retry-inflated GET/PUT
 counters — spill traffic is free, like the paper's i4i NVMe.
 
 Pass --no-faults for the PR-1 behaviour (clean store, no injection).
+Pass --workers N to run the same job through the multi-worker cluster
+executor (core/cluster.py) — N emulated workers, each with its own map
+loop and reduce scheduler over its partition range; output is
+byte-identical to the single-host run. Add --kill-worker I:K to inject a
+worker death (worker I dies after K tasks) and watch the driver
+re-execute its unfinished tasks on the survivors.
 """
 import argparse
 import dataclasses
@@ -57,6 +63,10 @@ def main():
                     help="override injected per-request latency")
     ap.add_argument("--get-rate", type=float, default=None,
                     help="override durable-tier GET tokens/s")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="emulated cluster workers (0 = single-host driver)")
+    ap.add_argument("--kill-worker", default=None, metavar="I:K",
+                    help="with --workers: worker I dies after K tasks")
     args = ap.parse_args()
 
     w = len(jax.devices())
@@ -108,7 +118,35 @@ def main():
           f"({data_bytes/1e6:.1f} MB) in {time.time()-t0:.2f}s checksum={in_ck}")
 
     # --- out-of-core sort: store -> map waves -> spill -> reduce -> store ---
-    rep = external_sort(store, "cloudsort", mesh=mesh, axis_names="w", plan=plan)
+    if args.workers > 0:
+        from repro.configs.cloudsort import cluster_smoke_plan
+        from repro.core.cluster import ClusterExecutor
+
+        # Widen the budget to the cluster-wide merge concurrency (every
+        # worker's scheduler draws on the one global budget), still under
+        # the demo's one-partition bound when possible.
+        plan, cplan = cluster_smoke_plan(args.workers, base=plan,
+                                         runs=n_waves)
+        if args.kill_worker:
+            idx, _, k = args.kill_worker.partition(":")
+            cplan = dataclasses.replace(
+                cplan, fail_after_tasks={int(idx): int(k or 1)})
+        crep = ClusterExecutor(
+            store, "cloudsort", mesh=mesh, axis_names="w", plan=plan,
+            cluster=cplan,
+        ).sort()
+        rep = crep.sort
+        print(f"[cluster] {crep.num_cluster_workers} workers, "
+              f"{crep.map_tasks} map + {crep.reduce_tasks} reduce tasks; "
+              f"confirmed per worker: {crep.per_worker_tasks}")
+        if crep.failed_workers or crep.reexecuted_tasks:
+            print(f"[cluster] failed workers: {crep.failed_workers} — "
+                  f"{crep.reexecuted_map_tasks} map / "
+                  f"{crep.reexecuted_reduce_tasks} reduce tasks "
+                  "re-executed on survivors")
+    else:
+        rep = external_sort(store, "cloudsort", mesh=mesh, axis_names="w",
+                            plan=plan)
     sort_s = rep.map_seconds + rep.reduce_seconds
     print(f"[sort] {rep.total_records} records in {sort_s:.2f}s "
           f"({rep.total_records/sort_s:,.0f} rec/s) — {rep.num_waves} waves, "
@@ -132,6 +170,11 @@ def main():
     assert rep.reduce_peak_merge_bytes <= bound, (
         rep.reduce_peak_merge_bytes, bound)
     assert bound < partition_bytes, "bound must beat materializing a partition"
+    if rep.reduce_chunk_bytes_max > rep.reduce_chunk_bytes:
+        print(f"[reduce-mem] adaptive governor: per-run chunk grew "
+              f"{rep.reduce_chunk_bytes/1e3:.1f} KB -> "
+              f"{rep.reduce_chunk_bytes_max/1e3:.1f} KB as reducers "
+              "retired (budget re-apportioned to the tail)")
 
     # --- span timeline: the overlap, measured not asserted --------------
     ph = rep.phase_seconds

@@ -91,6 +91,32 @@ def ooc_smoke_plan():
     )
 
 
+def cluster_smoke_plan(num_workers: int = 4, *, base=None, runs: int = 16):
+    """(ExternalSortPlan, ClusterPlan) for cluster smoke runs.
+
+    Takes an out-of-core plan (`base`, default ooc_smoke_plan()) and
+    widens its reduce budget to the cluster-wide merge concurrency:
+    num_workers x parallel_reducers scheduler slots all draw on one
+    global budget, and the adaptive governor's feasibility floor is one
+    record per spilled run per slot (`runs` = the job's wave count —
+    callers that know their dataset pass the real value). Returns the
+    widened plan plus a ClusterPlan partitioning it across `num_workers`
+    emulated workers. Used by examples/cloudsort_oocore.py --workers;
+    benchmarks/bench_cluster_scaling.py builds its own latency-injected
+    variant. Lazily imported so configs stay importable without jax.
+    """
+    import dataclasses as _dc
+
+    from repro.core.cluster import ClusterPlan
+
+    plan = base if base is not None else ooc_smoke_plan()
+    slots = num_workers * plan.parallel_reducers
+    budget = max(plan.reduce_memory_budget_bytes,
+                 slots * max(runs, 1) * plan.record_bytes)
+    plan = _dc.replace(plan, reduce_memory_budget_bytes=budget)
+    return plan, ClusterPlan(num_workers=num_workers)
+
+
 def smoke_fault_profile():
     """Fault injection scaled for CPU smoke runs (io/middleware.FaultProfile).
 

@@ -151,7 +151,34 @@ def measured_cloudsort_tco(
 ) -> CostBreakdown:
     """Table 2 priced from an actual run: measured request counts and
     timings (core.external_sort.ExternalSortReport), storage legs scaled
-    to the dataset actually sorted."""
+    to the dataset actually sorted.
+
+    Which Table-2 legs are MEASURED here and which are still ASSUMED:
+
+      measured — data_access_input_get / data_access_output_put come
+          from the run's StoreStats deltas: every chunked map GET,
+          ranged reduce GET, spill PUT and multipart part PUT the store
+          actually served, instead of the paper's 50k x 120 = 6M GET /
+          25k x 40 = 1M PUT arithmetic. job_hours / reduce_hours (the
+          storage-hour multipliers) are the run's wall clock.
+
+      assumed — the EC2 price sheet (Ec2CostParams: $/hr for master/
+          worker/EBS, S3 $/GB-month tiers, per-1000 request fees) is
+          carried over from the paper's November-2022 us-west-2 rates;
+          an emulated run can't measure prices. The storage-hour legs
+          also assume the paper's layout: the dataset sits in S3 for the
+          whole job (input leg) and output accretes over the reduce
+          phase (output leg).
+
+    Retry-inflated attempt counts are deliberately the billing basis:
+    MetricsMiddleware counts every *issued* attempt — throttled 503s and
+    backoff re-issues included — because S3 bills requests, not logical
+    operations. A client that retries its way through a throttling
+    regime pays for the retries; pricing the logical count would
+    understate exactly the §3.3.2 cost the paper's request-fee analysis
+    is about. (Cluster re-execution after a worker failure inflates the
+    same way: a re-run task's requests are real, billed traffic.)
+    """
     profile = measured_job_profile(stats, job_hours=job_hours, reduce_hours=reduce_hours)
     return cloudsort_tco(params, profile, data_tb=data_bytes / 1e12)
 
@@ -169,6 +196,16 @@ def measured_tiered_cloudsort_tco(
     included spill traffic — spill goes to local SSD, §2.3), while the
     SSD tier's bytes price the spill-storage leg at ssd_gb_month (0 for
     bundled instance NVMe, like the paper's i4i workers).
+
+    Measured vs. assumed, on top of measured_cloudsort_tco's split: the
+    durable/ssd request partition is measured (TieredStore routes by key
+    prefix and meters each tier separately), and the durable counters
+    are retry-inflated like a real bill — the right basis, since only
+    durable attempts cost money while SSD attempts are free however
+    often a retry or a re-executed cluster task re-issues them. Assumed:
+    spill capacity is billed by bytes *written* over job_hours (an
+    attached-volume upper bound; with the default ssd_gb_month=0 the leg
+    is $0, matching Table 2's bundled i4i NVMe).
 
     `tier_stats` is core.external_sort.ExternalSortReport.tier_stats:
     a {"durable": StoreStats, "ssd": StoreStats} delta mapping from

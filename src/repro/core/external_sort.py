@@ -2,7 +2,10 @@
 
 This is the driver that lets the reproduction actually *pose* the CloudSort
 problem (paper §2.3–§2.5): total dataset size is bounded by object-store
-capacity, while device memory holds only one map wave's working set.
+capacity, while device memory holds only one map wave's working set. The
+building blocks (WaveSorter, ReduceScheduler) are shared with the
+multi-worker cluster executor (core/cluster.py), which partitions the same
+schedule across N emulated workers with failure recovery (§2.6).
 
 Paper mapping:
 
@@ -36,20 +39,39 @@ Paper mapping:
       (all empty cursors refill concurrently, so an emit cycle pays ~one
       request stall, not one per run), merges buffered records up to the
       smallest last-loaded key over still-active runs, and streams merged
-      bytes into an incremental multipart upload. Part uploads are
-      part-indexed (io/backends.put_part(index, data)) and fan out over
-      plan.part_upload_fanout threads per partition, so one partition's
-      parts upload out of order and in parallel — S3's UploadPart
-      contract — while the object assembles (and CRC-etags) in part
-      order at complete(). Reduce merge memory is governed globally:
-      with plan.reduce_memory_budget_bytes set, the budget is
-      apportioned across the active reducers into per-run chunk sizes,
-      and the measured all-reducer peak of decoded merge-buffer bytes
-      (reduce_peak_merge_bytes, thread-safe accounting) never exceeds
-      it — encoded output parts being sliced/uploaded sit on top, ~
-      (1 + max_inflight_writes) x part bytes per active reducer. Output
-      bytes are identical at any parallelism (the merge result does not
-      depend on the schedule).
+      bytes into an incremental multipart upload fanned out over
+      plan.part_upload_fanout threads per partition.
+
+Plan knobs and their invariants (the reduce-side memory/throughput
+contract; see ExternalSortPlan for the map-side knobs):
+
+  parallel_reducers — number of streaming k-way merges one scheduler runs
+      concurrently. Output bytes are schedule-independent: partitions are
+      independent objects and part payloads are sliced at fixed
+      output_part_records boundaries, so ANY parallelism (and any cluster
+      worker count) yields byte- and etag-identical partitions.
+
+  part_upload_fanout — out-of-order part-indexed multipart uploads in
+      flight per partition (S3 UploadPart semantics; assembly order is
+      decided by part index at complete(), never by wire order).
+
+  merge_chunk_bytes — hard CAP on the per-run fetch granularity of the
+      streaming merge. Without a budget every cursor buffers at most this
+      many decoded bytes, so per-merge peak <= runs x merge_chunk_bytes.
+
+  reduce_memory_budget_bytes — global decoded-merge-buffer budget across
+      ALL concurrently active reducers (0 = uncapped). Apportionment is
+      ADAPTIVE (AdaptiveBudgetGovernor): each registering reducer starts
+      from the static fair share budget/slots, and as reducers retire
+      their share is re-apportioned to still-active merges — chunk sizes
+      grow mid-merge (up to merge_chunk_bytes), so tail stragglers fetch
+      bigger chunks instead of leaving freed budget idle. The invariant
+      is provable, not just measured: grants only move between a free
+      pool and live reducers under one lock, a live reducer's chunk never
+      shrinks, and the measured all-reducer peak of decoded merge-buffer
+      bytes (reduce_peak_merge_bytes) never exceeds the budget. Encoded
+      output parts being sliced/uploaded sit on top, ~
+      (1 + max_inflight_writes) x part bytes per active reducer.
 
 Every phase records wall-clock spans (map wait/compute/spill, reduce
 fetch/merge/upload) into the report's span timeline, so map/reduce
@@ -61,13 +83,14 @@ hardcoded 6M/1M constants.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import math
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -89,13 +112,14 @@ class ExternalSortPlan:
     merge_chunk_bytes is the reduce-side counterpart: the per-run fetch
     granularity cap of the streaming merge. parallel_reducers streaming
     merges run concurrently; with reduce_memory_budget_bytes set, the
-    global budget is split across them (per-run chunk = budget /
-    (parallel_reducers x runs), capped at merge_chunk_bytes), so the
-    summed decoded merge-buffer bytes across all active reducers stay
-    within the budget — not parallelism x partition size. (The budget
-    governs the merge *buffers*; each active reducer additionally holds
-    up to ~one encoded output part being sliced plus max_inflight_writes
-    parts awaiting upload.)
+    global budget is apportioned across them by the adaptive governor
+    (initial per-run chunk = budget / (slots x runs), capped at
+    merge_chunk_bytes, growing as reducers retire), so the summed decoded
+    merge-buffer bytes across all active reducers stay within the budget
+    — not parallelism x partition size. (The budget governs the merge
+    *buffers*; each active reducer additionally holds up to ~one encoded
+    output part being sliced plus max_inflight_writes parts awaiting
+    upload.)
     """
 
     records_per_wave: int  # device working set (records, across the mesh)
@@ -205,6 +229,157 @@ class _PeakTracker:
             self._total -= self._per.pop(rid, 0)
 
 
+class JobControl:
+    """Job-wide cancellation + first-failure collection.
+
+    Shared by every scheduler (and, in cluster mode, every worker) of one
+    sort: a real failure anywhere cancels the whole job, and the
+    chronologically first exception is what the driver re-raises.
+    """
+
+    def __init__(self):
+        self.cancel = threading.Event()
+        self._lock = threading.Lock()
+        self._first: list[BaseException] = []
+
+    def fail(self, e: BaseException) -> None:
+        with self._lock:
+            if not self._first:
+                self._first.append(e)
+        self.cancel.set()
+
+    @property
+    def failed(self) -> bool:
+        with self._lock:
+            return bool(self._first)
+
+    def raise_first(self) -> None:
+        with self._lock:
+            if self._first:
+                raise self._first[0]
+
+
+class AdaptiveBudgetGovernor:
+    """Adaptive apportionment of the global reduce memory budget.
+
+    Replaces the static active-count split: every registering reducer is
+    granted the static fair share S0 = budget // slots (the floor
+    _reduce_chunking validates up front), and on every emit cycle it may
+    `grow` its grant out of budget freed by retired reducers — so the
+    tail of the reduce phase runs with bigger per-run chunks instead of
+    leaving freed budget idle ("chunk sizes grow mid-merge").
+
+    The budget bound is provable, not just measured:
+
+      * bytes only move between the free pool and live grants under one
+        lock, and the free pool never goes negative — so the sum of live
+        grants never exceeds the budget;
+      * a live reducer's grant (hence chunk) never shrinks — growth only
+        draws from `free` beyond a reservation of S0 per not-yet-started
+        partition (up to the slot count), so a late registrant never
+        needs to claw back granted bytes;
+      * each reducer buffers at most runs x chunk <= grant decoded bytes,
+        so the measured all-reducer peak (reduce_peak_merge_bytes) is
+        under the budget at every instant.
+
+    With budget == 0 the governor is inert: every cursor just uses the
+    merge_chunk_bytes cap.
+    """
+
+    def __init__(self, *, budget: int, chunk_cap: int, record_bytes: int,
+                 slots: int, partitions: int):
+        self.budget = int(budget)
+        self.chunk_cap = int(chunk_cap)
+        self.record_bytes = int(record_bytes)
+        self.slots = max(int(slots), 1)
+        self._cond = threading.Condition()
+        self._free = self.budget
+        self._live: dict[int, tuple[int, int]] = {}  # rid -> (runs, grant)
+        # Completed rids as a SET, not a counter: a partition whose merge
+        # retired but whose async commit later died (cluster worker
+        # failure) is re-executed and retires AGAIN — dedup keeps the
+        # unstarted-partition reservation from under-counting.
+        self._done_rids: set[int] = set()
+        self._partitions = int(partitions)
+        self._base = self.budget // self.slots if self.budget else 0
+        self.max_chunk_bytes = 0 if self.budget else self.chunk_cap
+
+    def _chunk_of(self, runs: int, grant: int) -> int:
+        return min(self.chunk_cap, grant // max(runs, 1))
+
+    def register(self, rid: int, runs: int,
+                 abort: Callable[[], bool] | None = None) -> int | None:
+        """Reserve an initial grant; returns the per-run chunk in bytes.
+
+        Blocks while the free pool cannot cover even one record per run
+        (only possible transiently, while grown siblings hold surplus
+        that their retirement will release). Returns None if `abort`
+        turns true while waiting.
+        """
+        if not self.budget:
+            return self.chunk_cap
+        min_need = max(runs, 1) * self.record_bytes
+        with self._cond:
+            while self._free < min_need:
+                if abort is not None and abort():
+                    return None
+                self._cond.wait(timeout=0.05)
+            grant = max(min(self._base, runs * self.chunk_cap, self._free),
+                        min_need)
+            self._live[rid] = (runs, grant)
+            self._free -= grant
+            chunk = self._chunk_of(runs, grant)
+            self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
+            return chunk
+
+    def chunk_bytes(self, rid: int) -> int:
+        if not self.budget:
+            return self.chunk_cap
+        with self._cond:
+            runs, grant = self._live[rid]
+            return self._chunk_of(runs, grant)
+
+    def grow(self, rid: int) -> int:
+        """Re-apportion freed budget into this reducer's grant (monotone);
+        returns the current per-run chunk in bytes."""
+        if not self.budget:
+            return self.chunk_cap
+        with self._cond:
+            runs, grant = self._live[rid]
+            target = runs * self.chunk_cap
+            if grant < target:
+                # Keep S0 reserved for every partition that still has to
+                # start (bounded by the free scheduler slots), so future
+                # registrants are never starved by growth.
+                unstarted = (self._partitions - len(self._done_rids)
+                             - len(self._live))
+                reserve = self._base * max(
+                    0, min(self.slots - len(self._live), unstarted))
+                avail = self._free - reserve
+                extra = min(target - grant, avail // max(len(self._live), 1))
+                if extra > 0:
+                    grant += extra
+                    self._live[rid] = (runs, grant)
+                    self._free -= extra
+            chunk = self._chunk_of(runs, grant)
+            self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
+            return chunk
+
+    def retire(self, rid: int, *, completed: bool = True) -> None:
+        """Release the grant back to the free pool (waking any waiting
+        registrant); `completed=False` marks a failed reducer whose
+        partition will be re-executed (cluster failure recovery)."""
+        if not self.budget:
+            return
+        with self._cond:
+            entry = self._live.pop(rid, None)
+            if entry is not None:
+                self._free += entry[1]
+            if completed:
+                self._done_rids.add(rid)
+            self._cond.notify_all()
+
+
 @dataclasses.dataclass
 class ExternalSortReport:
     """What happened: sizes, timings, and *measured* store traffic."""
@@ -221,9 +396,10 @@ class ExternalSortReport:
     stats: StoreStats  # delta over the sort (map + reduce), all tiers
     runs_per_reducer: int = 0  # k of the streaming k-way merge
     merge_chunk_bytes: int = 0  # the plan's per-run fetch cap
-    reduce_chunk_bytes: int = 0  # effective per-run chunk (budget-governed)
+    reduce_chunk_bytes: int = 0  # initial per-run chunk (budget-governed)
+    reduce_chunk_bytes_max: int = 0  # largest chunk the governor granted
     reduce_peak_merge_bytes: int = 0  # measured max across ALL active merges
-    parallel_reducers: int = 1  # concurrent merges the scheduler ran
+    parallel_reducers: int = 1  # concurrent merges the scheduler(s) ran
     reduce_memory_budget_bytes: int = 0  # the global governor (0 = none)
     tier_stats: dict[str, StoreStats] | None = None  # per-tier deltas
     spans: list[Span] = dataclasses.field(default_factory=list)
@@ -315,7 +491,9 @@ class _RunCursor:
 
     Holds at most `chunk_records` decoded records at a time; `refill`
     issues one ranged GET for the next chunk, `take_upto` consumes the
-    buffered prefix that is safe to emit (every record <= bound).
+    buffered prefix that is safe to emit (every record <= bound). The
+    chunk size may be raised mid-stream (`set_chunk`) when the adaptive
+    governor re-apportions budget freed by retired reducers.
     """
 
     __slots__ = ("_store", "_bucket", "_key", "_hi", "_next", "_chunk",
@@ -345,6 +523,9 @@ class _RunCursor:
     @property
     def buffered_bytes(self) -> int:
         return self.k64.size * rec.record_bytes(self._pw)
+
+    def set_chunk(self, chunk_records: int) -> None:
+        self._chunk = int(chunk_records)
 
     def refill(self) -> None:
         n = min(self._chunk, self._hi - self._next)
@@ -403,10 +584,14 @@ def _reduce_chunking(plan: ExternalSortPlan, runs: int,
                      active: int) -> tuple[int, int]:
     """(chunk_records, chunk_bytes) per run under the global budget.
 
-    With a budget, each of the `active` concurrent reducers gets an equal
-    share, split over its `runs` cursors and capped at merge_chunk_bytes;
-    the all-reducer total active x runs x chunk therefore never exceeds
-    the budget. Without one, every cursor buffers merge_chunk_bytes.
+    This is the STATIC fair split — the governor's starting point and the
+    up-front feasibility check: with a budget, each of the `active`
+    concurrent reducers gets an equal share, split over its `runs`
+    cursors and capped at merge_chunk_bytes; the all-reducer total
+    active x runs x chunk therefore never exceeds the budget. Without
+    one, every cursor buffers merge_chunk_bytes. At runtime the adaptive
+    governor only ever grants MORE than this (never less), drawing on
+    budget freed by retired reducers.
     """
     rb = plan.record_bytes
     if plan.merge_chunk_bytes < rb:
@@ -428,6 +613,23 @@ def _reduce_chunking(plan: ExternalSortPlan, runs: int,
     return chunk_bytes // rb, chunk_bytes
 
 
+def _validate_plan(plan: ExternalSortPlan, w: int) -> None:
+    """Plan validation shared by the single-host and cluster drivers.
+
+    ValueError, not assert: must survive python -O.
+    """
+    if plan.records_per_wave % (w * plan.num_rounds) != 0:
+        raise ValueError(
+            "records_per_wave must divide evenly into per-worker rounds"
+        )
+    if plan.parallel_reducers < 1:
+        raise ValueError(f"parallel_reducers must be >= 1, "
+                         f"got {plan.parallel_reducers}")
+    if plan.part_upload_fanout < 1:
+        raise ValueError(f"part_upload_fanout must be >= 1, "
+                         f"got {plan.part_upload_fanout}")
+
+
 def _timed_part(timeline: PhaseTimeline, tag: str, mp, index: int,
                 data: bytes) -> None:
     """Background part upload, recorded as a reduce.upload span."""
@@ -437,13 +639,17 @@ def _timed_part(timeline: PhaseTimeline, tag: str, mp, index: int,
 
 
 def _finalize_session(timeline: PhaseTimeline, tag: str,
-                      uploader: staging.AsyncWriter, mp) -> None:
+                      uploader: staging.AsyncWriter, mp,
+                      on_done: Callable[[], None] | None = None) -> None:
     """Background session finisher: wait for the partition's in-flight
     parts, then commit — or abort on any failure (a truncated commit
     would carry a self-consistent CRC etag IntegrityError can't catch).
     Running this off the merge thread is what lets a reducer's scheduler
     slot free while its tail uploads still stream (partition r's uploads
-    overlap partition r+active's merge even at parallel_reducers=1)."""
+    overlap partition r+active's merge even at parallel_reducers=1).
+    `on_done` fires only after the commit succeeds — the durability
+    confirmation the cluster driver uses to decide what a dead worker
+    still owed."""
     t = time.perf_counter()
     try:
         uploader.close()  # waits all parts; re-raises the first failure
@@ -457,6 +663,8 @@ def _finalize_session(timeline: PhaseTimeline, tag: str,
         raise
     finally:
         timeline.add("reduce.upload_wait", t, worker=tag)
+    if on_done is not None:
+        on_done()
 
 
 def _timed_spill(timeline: PhaseTimeline, tag: str, store, bucket: str,
@@ -467,81 +675,62 @@ def _timed_spill(timeline: PhaseTimeline, tag: str, store, bucket: str,
     timeline.add("map.spill", t, worker=tag)
 
 
-def external_sort(
-    store: StoreBackend,
-    bucket: str,
-    *,
-    mesh: jax.sharding.Mesh,
-    axis_names: Sequence[str] | str,
-    plan: ExternalSortPlan,
-) -> ExternalSortReport:
-    """Sort every record under plan.input_prefix into plan.output_prefix.
+class WaveSorter:
+    """Map-side building block: load a wave zero-copy, sort it across the
+    mesh, spill per-mesh-worker runs.
 
-    `store` is any io/backends.StoreBackend — the plain ObjectStore, a
-    fault-injected middleware stack, or a TieredStore (in which case the
-    report carries per-tier request deltas). Input objects must be
-    io/records-encoded with plan.payload_words words of payload and
-    globally unique ids (data/gensort.write_to_store's layout). Returns
-    the run report; validate the output with data/valsort.validate_from_store.
+    Shared by the single-host driver below and by every cluster worker
+    (core/cluster.py). Deterministic by construction: the spilled run
+    bytes and reducer offsets depend only on (wave contents, plan, mesh
+    width) — never on which scheduler or emulated worker executes the
+    wave — which is what keeps cluster output byte-identical to the
+    single-host run at any worker count and under re-execution.
     """
-    axis = tuple([axis_names] if isinstance(axis_names, str) else axis_names)
-    w = int(math.prod(mesh.shape[a] for a in axis))
-    pw = plan.payload_words
-    r1 = plan.reducers_per_worker
-    cfg = ShuffleConfig(
-        num_workers=w,
-        reducers_per_worker=r1,
-        capacity_factor=plan.capacity_factor,
-        num_rounds=plan.num_rounds,
-        impl=plan.impl,
-    )
-    if plan.records_per_wave % (w * plan.num_rounds) != 0:
-        # ValueError, not assert: plan validation must survive python -O.
-        raise ValueError(
-            "records_per_wave must divide evenly into per-worker rounds"
+
+    def __init__(self, plan: ExternalSortPlan, mesh: jax.sharding.Mesh,
+                 axis_names: Sequence[str] | str):
+        axis = tuple([axis_names] if isinstance(axis_names, str)
+                     else axis_names)
+        self.plan = plan
+        self.w = int(math.prod(mesh.shape[a] for a in axis))
+        self.r1 = plan.reducers_per_worker
+        self.pw = plan.payload_words
+        _validate_plan(plan, self.w)
+        self.cfg = ShuffleConfig(
+            num_workers=self.w,
+            reducers_per_worker=self.r1,
+            capacity_factor=plan.capacity_factor,
+            num_rounds=plan.num_rounds,
+            impl=plan.impl,
         )
-    if plan.parallel_reducers < 1:
-        raise ValueError(f"parallel_reducers must be >= 1, "
-                         f"got {plan.parallel_reducers}")
-    if plan.part_upload_fanout < 1:
-        raise ValueError(f"part_upload_fanout must be >= 1, "
-                         f"got {plan.part_upload_fanout}")
-
-    inputs = store.list_objects(bucket, plan.input_prefix)
-    if not inputs:
-        raise ValueError(f"no input objects under {plan.input_prefix!r}")
-    counts = [(m.size - rec.HEADER_BYTES) // plan.record_bytes for m in inputs]
-    total = sum(counts)
-    waves = _group_waves(inputs, counts, plan.records_per_wave)
-    num_waves = len(waves)
-    num_reducers = w * r1
-    active = min(plan.parallel_reducers, num_reducers)
-    # Budget feasibility is pure plan validation — fail here, before any
-    # map wave is fetched/sorted/spilled (and billed), not after.
-    chunk_records, chunk_bytes = _reduce_chunking(plan, num_waves, active)
-    # Overwrite semantics: clear stale spill/output objects from any prior
-    # run so the reduce pass and downstream validation see only this run.
-    for prefix in (plan.spill_prefix, plan.output_prefix):
-        for meta in store.list_objects(bucket, prefix):
-            store.delete(bucket, meta.key)
-    base_stats = store.stats_snapshot()
-    tier_base = (store.per_tier_stats()
-                 if hasattr(store, "per_tier_stats") else None)
-
-    sort_wave = jax.jit(
-        lambda k, i: streaming_sort(
-            k, i, mesh=mesh, axis_names=axis_names,
-            num_rounds=plan.num_rounds, cfg=cfg,
+        self._sort = jax.jit(
+            lambda k, i: streaming_sort(
+                k, i, mesh=mesh, axis_names=axis_names,
+                num_rounds=plan.num_rounds, cfg=self.cfg,
+            )
         )
-    )
+        self._local_bounds = (
+            np.asarray(self.cfg.keyspace.local_reducer_boundaries())
+            if self.r1 > 1 else None
+        )  # (W, R1-1)
+        # The device mesh is ONE shared resource: concurrent executions of
+        # the same multi-device collective program interleave their
+        # per-device participant threads into XLA's rendezvous and
+        # deadlock (and a real accelerator would serialize them anyway).
+        # Emulated cluster workers therefore queue on this lock for the
+        # sort step, and overlap on everything else — load, spill, reduce
+        # — which is where worker-count scaling pays on a latency-bound
+        # store.
+        self._device_lock = threading.Lock()
 
-    # ---- map waves: stream in (zero-copy) -> sort -> spill runs -------
-    def load_wave(objs):
-        # One preallocated rows buffer for the whole wave; every chunk is
-        # copied exactly once, into its final interleaved position.
+    def load_wave(self, store: StoreBackend, bucket: str, objs):
+        """Chunked-GET a wave's input objects into one preallocated
+        interleaved-row buffer (zero-copy decode); returns (keys, ids,
+        payload)."""
+        plan = self.plan
         n_wave = sum(
             (m.size - rec.HEADER_BYTES) // plan.record_bytes for m in objs)
-        rows = rec.alloc_rows(n_wave, pw)
+        rows = rec.alloc_rows(n_wave, self.pw)
         at = 0
         for m in objs:
             dec = rec.StreamDecoder(rows, at, what=m.key)
@@ -550,114 +739,323 @@ def external_sort(
             at += dec.finish()
         return rec.split_rows(rows)
 
-    local_bounds = (
-        np.asarray(cfg.keyspace.local_reducer_boundaries()) if r1 > 1 else None
-    )  # (W, R1-1)
-    spill_offsets: dict[tuple[int, int], np.ndarray] = {}
-    t0 = time.perf_counter()
-    timeline = PhaseTimeline(origin=t0)
-    with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
-        wave_loads = (lambda objs=objs: load_wave(objs) for objs in waves)
-        wave_iter = iter(staging.prefetch(
-            wave_loads, depth=plan.prefetch_depth,
-            retries=plan.io_retries, retry_on=(RetryableError,)))
-        g = 0
-        while True:
-            t_wait = time.perf_counter()
-            try:
-                keys, ids, payload = next(wave_iter)
-            except StopIteration:
-                break
-            tag = f"g{g}"
-            timeline.add("map.wait", t_wait, worker=tag)
-            t_comp = time.perf_counter()
-            sk, si, vcounts, ovf = sort_wave(jnp.asarray(keys), jnp.asarray(ids))
-            sk, si, vcounts = np.asarray(sk), np.asarray(si), np.asarray(vcounts)
-            if bool(np.asarray(ovf)):
-                raise RuntimeError(
-                    "shuffle block overflow — raise capacity_factor"
-                )
-            # id -> wave row for gathering payload of shuffled records:
-            # O(1) offset arithmetic when the wave's ids are contiguous
-            # (the gensort layout), argsort gather otherwise.
-            id_base = _contiguous_id_base(ids) if pw else None
-            order = sorted_ids = None
-            if pw and id_base is None:
-                order = np.argsort(ids)
-                sorted_ids = ids[order]
-            seg = sk.shape[0] // w
-            for wid in range(w):
-                n = int(vcounts[wid])
-                run_k = sk[wid * seg : wid * seg + n]
-                run_i = si[wid * seg : wid * seg + n]
-                run_p = None
-                if pw:
-                    if id_base is not None:
-                        sel = run_i.astype(np.int64) - id_base
-                    else:
-                        sel = order[np.searchsorted(sorted_ids, run_i)]
-                    run_p = payload[sel]
-                if local_bounds is not None:
-                    internal = np.searchsorted(run_k, local_bounds[wid], side="left")
+    def compute_and_spill(self, store: StoreBackend, bucket: str, g: int,
+                          keys, ids, payload, *, spiller: staging.AsyncWriter,
+                          timeline: PhaseTimeline, tag: str,
+                          offsets_out: dict) -> None:
+        """Sort wave g on the mesh and spill each mesh-worker's run.
+
+        Writes per-reducer offsets for every spilled run into
+        `offsets_out[(g, wid)]` (they are also persisted in the spill
+        object's manifest metadata, so a process-backed worker could
+        recover them from the store alone).
+        """
+        plan, w, pw = self.plan, self.w, self.pw
+        t_comp = time.perf_counter()
+        with self._device_lock:
+            sk, si, vcounts, ovf = self._sort(jnp.asarray(keys),
+                                              jnp.asarray(ids))
+            sk, si, vcounts = (np.asarray(sk), np.asarray(si),
+                               np.asarray(vcounts))
+        if bool(np.asarray(ovf)):
+            raise RuntimeError(
+                "shuffle block overflow — raise capacity_factor"
+            )
+        # id -> wave row for gathering payload of shuffled records:
+        # O(1) offset arithmetic when the wave's ids are contiguous
+        # (the gensort layout), argsort gather otherwise.
+        id_base = _contiguous_id_base(ids) if pw else None
+        order = sorted_ids = None
+        if pw and id_base is None:
+            order = np.argsort(ids)
+            sorted_ids = ids[order]
+        seg = sk.shape[0] // w
+        for wid in range(w):
+            n = int(vcounts[wid])
+            run_k = sk[wid * seg : wid * seg + n]
+            run_i = si[wid * seg : wid * seg + n]
+            run_p = None
+            if pw:
+                if id_base is not None:
+                    sel = run_i.astype(np.int64) - id_base
                 else:
-                    internal = np.empty((0,), np.int64)
-                offsets = np.concatenate(([0], internal, [n])).astype(np.int64)
-                spill_offsets[(g, wid)] = offsets
-                data = rec.encode_records(run_k, run_i, run_p)
-                # Submit each encoded run immediately: the AsyncWriter
-                # backpressure bound (at most max_inflight encoded runs
-                # in host memory) only holds if we never batch them.
-                timeline.add("map.compute", t_comp, worker=tag)
-                t_spill = time.perf_counter()
-                spiller.submit(_timed_spill, timeline, tag, store, bucket,
-                               _spill_key(plan, g, wid), data, {
-                                   "records": n,
-                                   "wave": g,
-                                   "worker": wid,
-                                   "reducer_offsets": [int(o) for o in offsets],
-                               })
-                timeline.add("map.spill_wait", t_spill, worker=tag)
-                t_comp = time.perf_counter()
+                    sel = order[np.searchsorted(sorted_ids, run_i)]
+                run_p = payload[sel]
+            if self._local_bounds is not None:
+                internal = np.searchsorted(
+                    run_k, self._local_bounds[wid], side="left")
+            else:
+                internal = np.empty((0,), np.int64)
+            offsets = np.concatenate(([0], internal, [n])).astype(np.int64)
+            offsets_out[(g, wid)] = offsets
+            data = rec.encode_records(run_k, run_i, run_p)
+            # Submit each encoded run immediately: the AsyncWriter
+            # backpressure bound (at most max_inflight encoded runs
+            # in host memory) only holds if we never batch them.
             timeline.add("map.compute", t_comp, worker=tag)
-            g += 1
-    map_seconds = time.perf_counter() - t0
+            t_spill = time.perf_counter()
+            spiller.submit(_timed_spill, timeline, tag, store, bucket,
+                           _spill_key(plan, g, wid), data, {
+                               "records": n,
+                               "wave": g,
+                               "worker": wid,
+                               "reducer_offsets": [int(o) for o in offsets],
+                           })
+            timeline.add("map.spill_wait", t_spill, worker=tag)
+            t_comp = time.perf_counter()
+        timeline.add("map.compute", t_comp, worker=tag)
 
-    # ---- reduce: parallel scheduler over streaming k-way merges -------
-    # Memory contract: parallel_reducers merges run concurrently, each of
-    # their (≤ num_waves) run cursors buffering at most chunk_bytes of
-    # decoded records, where chunk_bytes is apportioned from the global
-    # reduce_memory_budget_bytes when one is set (see _reduce_chunking).
-    # The emit window is merged and encoded immediately; completed output
-    # parts fan out over part_upload_fanout threads per partition as
-    # part-indexed out-of-order uploads. Output bytes are independent of
-    # the schedule — partitions are independent objects and part payloads
-    # are sliced at fixed output_part_records boundaries — so any
-    # parallelism yields byte-identical (and etag-identical) partitions.
-    # (num_waves / active / chunk_records were derived up front, with the
-    # other plan validation.)
-    part_bytes = plan.output_part_records * plan.record_bytes
-    peak = _PeakTracker()
-    cancel = threading.Event()
-    fail_lock = threading.Lock()
-    first_fail: list[BaseException] = []
 
-    def run_cursors(r: int) -> tuple[list[_RunCursor], int]:
-        wid, j = divmod(r, r1)
-        cursors, n_total = [], 0
-        for g in range(num_waves):
-            offs = spill_offsets[(g, wid)]
+@dataclasses.dataclass
+class JobSetup:
+    """Shared preflight for the single-host and cluster drivers: the
+    validated wave grouping, budget feasibility + governor, and baseline
+    store counters (captured after stale-prefix cleanup) — one source of
+    truth so the two drivers cannot drift."""
+
+    sorter: WaveSorter
+    total: int
+    waves: list
+    num_waves: int
+    num_reducers: int
+    slots: int  # cluster-wide concurrent merge ceiling (governor S0 basis)
+    chunk_bytes: int  # the static fair-share chunk (reported + floor)
+    governor: AdaptiveBudgetGovernor
+    base_stats: StoreStats
+    tier_base: dict | None
+
+
+def prepare_job(store: StoreBackend, bucket: str, plan: ExternalSortPlan,
+                mesh, axis_names, *, schedulers: int = 1) -> JobSetup:
+    """Validate the plan, group waves, check budget feasibility, and clear
+    stale spill/output prefixes — before any wave is fetched (and billed).
+
+    `schedulers` is how many reduce schedulers will run concurrently
+    (1 single-host; the worker count for core/cluster.py): the governor's
+    slot count — and therefore the static fair share every reducer is
+    guaranteed — is schedulers x plan.parallel_reducers, capped at the
+    partition count.
+    """
+    sorter = WaveSorter(plan, mesh, axis_names)
+    inputs = store.list_objects(bucket, plan.input_prefix)
+    if not inputs:
+        raise ValueError(f"no input objects under {plan.input_prefix!r}")
+    counts = [(m.size - rec.HEADER_BYTES) // plan.record_bytes
+              for m in inputs]
+    waves = _group_waves(inputs, counts, plan.records_per_wave)
+    num_reducers = sorter.w * sorter.r1
+    slots = min(max(int(schedulers), 1) * plan.parallel_reducers,
+                num_reducers)
+    _, chunk_bytes = _reduce_chunking(plan, len(waves), slots)
+    governor = AdaptiveBudgetGovernor(
+        budget=plan.reduce_memory_budget_bytes,
+        chunk_cap=plan.merge_chunk_bytes,
+        record_bytes=plan.record_bytes,
+        slots=slots,
+        partitions=num_reducers,
+    )
+    # Overwrite semantics: clear stale spill/output objects from any prior
+    # run so the reduce pass and downstream validation see only this run.
+    for prefix in (plan.spill_prefix, plan.output_prefix):
+        for meta in store.list_objects(bucket, prefix):
+            store.delete(bucket, meta.key)
+    return JobSetup(
+        sorter=sorter,
+        total=sum(counts),
+        waves=waves,
+        num_waves=len(waves),
+        num_reducers=num_reducers,
+        slots=slots,
+        chunk_bytes=chunk_bytes,
+        governor=governor,
+        base_stats=store.stats_snapshot(),
+        tier_base=(store.per_tier_stats()
+                   if hasattr(store, "per_tier_stats") else None),
+    )
+
+
+def build_report(setup: JobSetup, store: StoreBackend,
+                 plan: ExternalSortPlan, *, map_seconds: float,
+                 reduce_seconds: float, peak: _PeakTracker,
+                 timeline: PhaseTimeline) -> ExternalSortReport:
+    """Assemble the run report from the shared setup + measured state —
+    the one place the report contract is populated, for both drivers."""
+    tier_stats = None
+    if setup.tier_base is not None:
+        tier_now = store.per_tier_stats()
+        tier_stats = {name: tier_now[name] - setup.tier_base[name]
+                      for name in tier_now}
+    return ExternalSortReport(
+        total_records=setup.total,
+        num_waves=setup.num_waves,
+        num_workers=setup.sorter.w,
+        num_reducers=setup.num_reducers,
+        spill_objects=setup.num_waves * setup.sorter.w,
+        output_objects=setup.num_reducers,
+        map_seconds=map_seconds,
+        reduce_seconds=reduce_seconds,
+        working_set_records=plan.records_per_wave,
+        stats=store.stats_snapshot() - setup.base_stats,
+        runs_per_reducer=setup.num_waves,
+        merge_chunk_bytes=plan.merge_chunk_bytes,
+        reduce_chunk_bytes=setup.chunk_bytes,
+        reduce_chunk_bytes_max=setup.governor.max_chunk_bytes,
+        reduce_peak_merge_bytes=peak.peak,
+        parallel_reducers=setup.slots,
+        reduce_memory_budget_bytes=plan.reduce_memory_budget_bytes,
+        tier_stats=tier_stats,
+        spans=timeline.spans(),
+        spans_dropped=timeline.dropped,
+        phase_seconds=timeline.totals(),
+    )
+
+
+@dataclasses.dataclass
+class ReduceShared:
+    """Job-level shared state for one sort's reduce pass — shared across
+    every ReduceScheduler (one on a single host, one per cluster worker),
+    so the budget governor, peak accounting, cancellation, and timeline
+    stay global while the schedulers stay per-worker."""
+
+    plan: ExternalSortPlan
+    bucket: str
+    num_waves: int
+    r1: int  # reducers per mesh worker (partition -> run-slice mapping)
+    spill_offsets: dict
+    governor: AdaptiveBudgetGovernor
+    timeline: PhaseTimeline
+    peak: _PeakTracker
+    control: JobControl
+
+
+class ReduceScheduler:
+    """One host's (or one emulated cluster worker's) reduce scheduler.
+
+    Pulls partition ids from `pop_next` and runs up to `width` streaming
+    k-way merges concurrently against `store`, sharing the job-level
+    governor/peak/cancellation through `shared`. Failure taxonomy:
+
+      * exceptions of a type in `fatal` mean THIS scheduler's worker died
+        (core/cluster.WorkerFailure): the scheduler unwinds and re-raises
+        so the cluster driver can re-execute unconfirmed partitions on
+        survivors — the job keeps going;
+      * any other exception is a job failure: it is recorded on
+        shared.control (which cancels every scheduler) and the driver
+        re-raises it after the barrier.
+
+    A partition only counts as done (`on_done`) after its multipart
+    session COMMITS — merge completion is not durability.
+    """
+
+    def __init__(self, store: StoreBackend, shared: ReduceShared, *,
+                 width: int, fatal: tuple = (), tag_prefix: str = ""):
+        self.store = store
+        self.shared = shared
+        self.width = max(int(width), 1)
+        self.fatal = tuple(fatal)
+        self.tag_prefix = tag_prefix
+
+    def run(self, pop_next: Callable[[], int | None],
+            on_done: Callable[[int], None] | None = None) -> None:
+        """Drain partitions until the queue is empty, the job is
+        cancelled, or this scheduler's worker dies (re-raised)."""
+        shared = self.shared
+        plan = shared.plan
+        refill_pool = ThreadPoolExecutor(
+            max_workers=min(16, max(2, shared.num_waves * self.width)),
+            thread_name_prefix="reduce-refill")
+        finishers = staging.AsyncWriter(
+            max(plan.max_inflight_writes, self.width), max_workers=self.width,
+            thread_name_prefix="reduce-finish")
+        dead_lock = threading.Lock()
+        dead: list[BaseException] = []
+        dead_evt = threading.Event()
+
+        def loop() -> None:
+            while not (shared.control.cancel.is_set() or dead_evt.is_set()):
+                try:
+                    r = pop_next()
+                except self.fatal as e:  # the worker died at the queue
+                    with dead_lock:
+                        dead.append(e)
+                    dead_evt.set()
+                    return
+                if r is None:
+                    return
+                try:
+                    self._reduce_one(r, refill_pool, finishers, on_done)
+                except _SiblingFailed:
+                    pass  # aborted cleanly; the root cause is recorded
+                except self.fatal as e:  # worker death: stop this scheduler
+                    with dead_lock:
+                        dead.append(e)
+                    dead_evt.set()
+                    return
+                except BaseException as e:  # real failure: cancel the job
+                    shared.control.fail(e)
+                    return
+
+        threads = [threading.Thread(target=loop, name=f"reduce-merge-{i}")
+                   for i in range(self.width)]
+        try:
+            for t in threads:
+                t.start()
+        finally:
+            for t in threads:
+                t.join()
+            refill_pool.shutdown(wait=True)
+            try:
+                finishers.close()  # re-raises the first finisher failure
+            except self.fatal as e:
+                # Death during commit: those partitions never confirmed,
+                # so the cluster driver will re-execute them.
+                with dead_lock:
+                    dead.append(e)
+            except BaseException as e:
+                shared.control.fail(e)
+        if dead:
+            raise dead[0]
+
+    # -- internals ---------------------------------------------------------
+
+    def _run_slices(self, r: int):
+        """[(spill key, lo, hi)] of partition r's non-empty run slices."""
+        shared = self.shared
+        wid, j = divmod(r, shared.r1)
+        slices, n_total = [], 0
+        for g in range(shared.num_waves):
+            offs = shared.spill_offsets[(g, wid)]
             lo, hi = int(offs[j]), int(offs[j + 1])
             if hi > lo:
-                cursors.append(_RunCursor(
-                    store, bucket, _spill_key(plan, g, wid),
-                    lo, hi, pw, chunk_records))
+                slices.append((_spill_key(shared.plan, g, wid), lo, hi))
                 n_total += hi - lo
-        return cursors, n_total
+        return slices, n_total
 
-    def reduce_one(r: int) -> None:
-        tag = f"r{r}"
-        cursors, n_total = run_cursors(r)
-        mp = store.multipart(bucket, _output_key(plan, r),
+    def _reduce_one(self, r: int, refill_pool, finishers,
+                    on_done: Callable[[int], None] | None) -> None:
+        shared = self.shared
+        plan = shared.plan
+        store = self.store
+        timeline = shared.timeline
+        governor = shared.governor
+        pw = plan.payload_words
+        rb = plan.record_bytes
+        part_bytes = plan.output_part_records * rb
+        tag = f"{self.tag_prefix}r{r}"
+        slices, n_total = self._run_slices(r)
+        registered = bool(slices)
+        chunk_records = 0
+        if registered:
+            chunk = governor.register(
+                r, len(slices), abort=shared.control.cancel.is_set)
+            if chunk is None:
+                raise _SiblingFailed()
+            chunk_records = chunk // rb
+        cursors = [
+            _RunCursor(store, shared.bucket, key, lo, hi, pw, chunk_records)
+            for key, lo, hi in slices
+        ]
+        mp = store.multipart(shared.bucket, _output_key(plan, r),
                              metadata={"records": n_total, "reducer": r})
         # max_inflight >= fanout, or the backpressure semaphore would
         # silently cap concurrent part uploads below the fan-out width.
@@ -678,8 +1076,16 @@ def external_sort(
             # lengths), so the header streams first, body follows.
             outbuf = bytearray(rec.encode_header(n_total, pw))
             while cursors:
-                if cancel.is_set():
+                if shared.control.cancel.is_set():
                     raise _SiblingFailed()
+                if registered:
+                    # Adaptive governor: soak up budget freed by retired
+                    # reducers — the per-run chunk can only grow.
+                    grown = governor.grow(r) // rb
+                    if grown != chunk_records:
+                        chunk_records = grown
+                        for c in cursors:
+                            c.set_chunk(grown)
                 need = [c for c in cursors
                         if c.k64.size == 0 and c.has_more_remote]
                 if need:
@@ -689,7 +1095,7 @@ def external_sort(
                     else:  # concurrent ranged GETs: one RTT per cycle
                         list(refill_pool.map(_RunCursor.refill, need))
                     timeline.add("reduce.fetch", t, worker=tag)
-                peak.update(r, sum(c.buffered_bytes for c in cursors))
+                shared.peak.update(r, sum(c.buffered_bytes for c in cursors))
                 t = time.perf_counter()
                 # Safe emit bound: the smallest last-buffered key among
                 # runs that still have un-fetched records — nothing
@@ -719,78 +1125,103 @@ def external_sort(
                 pass
             try:
                 mp.abort()
+            except BaseException:
+                pass  # a dead worker's abort fails too; parts are orphaned
             finally:
-                peak.clear(r)
+                shared.peak.clear(r)
+                if registered:
+                    governor.retire(r, completed=False)
                 uploader.close()
             raise
         # Success: hand drain + complete to the finisher queue so this
         # scheduler slot frees while the tail parts still upload —
-        # finishers.submit blocks once max(max_inflight_writes, active)
+        # finishers.submit blocks once max(max_inflight_writes, width)
         # sessions await completion (cross-partition upload backpressure).
-        peak.clear(r)
-        finishers.submit(_finalize_session, timeline, tag, uploader, mp)
+        shared.peak.clear(r)
+        if registered:
+            governor.retire(r)
+        confirm = None if on_done is None else (lambda: on_done(r))
+        finishers.submit(_finalize_session, timeline, tag, uploader, mp,
+                         confirm)
 
-    def run_reducer(r: int) -> None:
-        if cancel.is_set():
-            return
-        try:
-            reduce_one(r)
-        except _SiblingFailed:
-            pass  # this partition was aborted cleanly; root cause is queued
-        except BaseException as e:
-            with fail_lock:
-                if not first_fail:
-                    first_fail.append(e)
-            cancel.set()
+
+def external_sort(
+    store: StoreBackend,
+    bucket: str,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_names: Sequence[str] | str,
+    plan: ExternalSortPlan,
+) -> ExternalSortReport:
+    """Sort every record under plan.input_prefix into plan.output_prefix.
+
+    `store` is any io/backends.StoreBackend — the plain ObjectStore, a
+    fault-injected middleware stack, or a TieredStore (in which case the
+    report carries per-tier request deltas). Input objects must be
+    io/records-encoded with plan.payload_words words of payload and
+    globally unique ids (data/gensort.write_to_store's layout). Returns
+    the run report; validate the output with data/valsort.validate_from_store.
+
+    This is the single-host driver; core/cluster.ClusterExecutor runs the
+    same schedule partitioned across N emulated workers with failure
+    recovery, and produces byte-identical output.
+    """
+    # Budget feasibility is pure plan validation — prepare_job fails
+    # before any map wave is fetched/sorted/spilled (and billed).
+    setup = prepare_job(store, bucket, plan, mesh, axis_names)
+    sorter = setup.sorter
+
+    # ---- map waves: stream in (zero-copy) -> sort -> spill runs -------
+    spill_offsets: dict[tuple[int, int], np.ndarray] = {}
+    t0 = time.perf_counter()
+    timeline = PhaseTimeline(origin=t0)
+    control = JobControl()
+    with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
+        wave_loads = (lambda objs=objs: sorter.load_wave(store, bucket, objs)
+                      for objs in setup.waves)
+        wave_iter = iter(staging.prefetch(
+            wave_loads, depth=plan.prefetch_depth,
+            retries=plan.io_retries, retry_on=(RetryableError,)))
+        g = 0
+        while True:
+            t_wait = time.perf_counter()
+            try:
+                keys, ids, payload = next(wave_iter)
+            except StopIteration:
+                break
+            tag = f"g{g}"
+            timeline.add("map.wait", t_wait, worker=tag)
+            sorter.compute_and_spill(
+                store, bucket, g, keys, ids, payload, spiller=spiller,
+                timeline=timeline, tag=tag, offsets_out=spill_offsets)
+            g += 1
+    map_seconds = time.perf_counter() - t0
+
+    # ---- reduce: scheduler of streaming k-way merges ------------------
+    # Memory contract: `slots` merges run concurrently, each of their
+    # (≤ num_waves) run cursors buffering at most the governor-granted
+    # chunk of decoded records; grants are apportioned from the global
+    # reduce_memory_budget_bytes when one is set and re-apportioned as
+    # reducers retire (AdaptiveBudgetGovernor). Output bytes are
+    # independent of the schedule — see the module docstring.
+    peak = _PeakTracker()
+    shared = ReduceShared(
+        plan=plan, bucket=bucket, num_waves=setup.num_waves, r1=sorter.r1,
+        spill_offsets=spill_offsets, governor=setup.governor,
+        timeline=timeline, peak=peak, control=control,
+    )
+    pending = collections.deque(range(setup.num_reducers))
+    pop_lock = threading.Lock()
+
+    def pop_next() -> int | None:
+        with pop_lock:
+            return pending.popleft() if pending else None
 
     t0 = time.perf_counter()
-    refill_pool = ThreadPoolExecutor(
-        max_workers=min(16, max(2, num_waves * active)),
-        thread_name_prefix="reduce-refill")
-    finishers = staging.AsyncWriter(
-        max(plan.max_inflight_writes, active), max_workers=active,
-        thread_name_prefix="reduce-finish")
-    try:
-        with ThreadPoolExecutor(max_workers=active,
-                                thread_name_prefix="reduce-merge") as sched:
-            for f in [sched.submit(run_reducer, r) for r in range(num_reducers)]:
-                f.result()  # never raises: run_reducer records failures
-    finally:
-        refill_pool.shutdown(wait=True)
-        try:
-            finishers.close()  # re-raises the first finisher failure
-        except BaseException as e:
-            with fail_lock:
-                if not first_fail:
-                    first_fail.append(e)
-    if first_fail:
-        raise first_fail[0]
+    ReduceScheduler(store, shared, width=setup.slots).run(pop_next)
+    control.raise_first()
     reduce_seconds = time.perf_counter() - t0
 
-    tier_stats = None
-    if tier_base is not None:
-        tier_now = store.per_tier_stats()
-        tier_stats = {name: tier_now[name] - tier_base[name]
-                      for name in tier_now}
-    return ExternalSortReport(
-        total_records=total,
-        num_waves=num_waves,
-        num_workers=w,
-        num_reducers=num_reducers,
-        spill_objects=num_waves * w,
-        output_objects=num_reducers,
-        map_seconds=map_seconds,
-        reduce_seconds=reduce_seconds,
-        working_set_records=plan.records_per_wave,
-        stats=store.stats_snapshot() - base_stats,
-        runs_per_reducer=num_waves,
-        merge_chunk_bytes=plan.merge_chunk_bytes,
-        reduce_chunk_bytes=chunk_bytes,
-        reduce_peak_merge_bytes=peak.peak,
-        parallel_reducers=active,
-        reduce_memory_budget_bytes=plan.reduce_memory_budget_bytes,
-        tier_stats=tier_stats,
-        spans=timeline.spans(),
-        spans_dropped=timeline.dropped,
-        phase_seconds=timeline.totals(),
-    )
+    return build_report(setup, store, plan, map_seconds=map_seconds,
+                        reduce_seconds=reduce_seconds, peak=peak,
+                        timeline=timeline)

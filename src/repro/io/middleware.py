@@ -25,6 +25,28 @@ the same hook (kind "put"). Derived StoreBackend methods (`put`,
 `put_multipart`, `get_chunks`) are inherited, never delegated — they
 decompose into primitives on the *outermost* layer, so each ranged chunk
 and each part crosses the whole stack exactly once.
+
+How the external-sort plan knobs (core/external_sort.ExternalSortPlan)
+meet this stack — the request-shape invariants the middleware sees:
+
+  merge_chunk_bytes / reduce_memory_budget_bytes — every reduce-side
+      fetch is one ranged GET of at most merge_chunk_bytes (smaller when
+      the global budget's governor apportions less), so the GET token
+      bucket and latency injection see many small requests, exactly the
+      traffic the paper's 503 regime throttles. The budget bounds
+      decoded merge-buffer bytes, NOT request count: shrinking the chunk
+      raises GET traffic (and the billed access leg) while lowering
+      memory — the § 3.3.2 cost/memory trade made measurable.
+
+  parallel_reducers (x cluster workers) — the number of merge loops
+      issuing those GETs concurrently; with KillSwitchMiddleware (below)
+      a worker's whole view dies at once, mid-request-stream.
+
+  part_upload_fanout — concurrent put_part PUTs per partition crossing
+      the stack out of order; each part is its own billed/throttled/
+      retried attempt (_WrappedMultipart), like real S3 UploadPart
+      traffic. PUT-bucket pressure scales with
+      parallel_reducers x part_upload_fanout.
 """
 from __future__ import annotations
 
@@ -270,6 +292,55 @@ class ThrottlingMiddleware(StoreMiddleware):
             bucket = self._write_bucket
         if bucket is not None and not bucket.try_acquire():
             raise SlowDown(f"503 Slow Down ({kind})")
+        return issue()
+
+
+# ---------------------------------------------------------------------------
+# Kill switch: emulated host death (core/cluster.py's failure domain)
+# ---------------------------------------------------------------------------
+
+
+class KillSwitchMiddleware(StoreMiddleware):
+    """Emulated host death for one worker's view of a shared store.
+
+    Once tripped — explicitly via `trip()` (core/cluster.FaultyWorker) or
+    automatically after `fail_after_requests` served requests — every
+    subsequent request raises `exc_factory()`. The exception should NOT
+    be a RetryableError: a dead host does not come back on backoff, so
+    the store-level retry stack must propagate it to the cluster driver,
+    whose task re-execution is the correct recovery. Requests refused by
+    a tripped switch never reach inner layers, so they are not billed or
+    throttled — a dead worker stops generating traffic, it doesn't
+    generate errors on the bill.
+    """
+
+    def __init__(self, inner: StoreBackend, *,
+                 exc_factory: Callable[[], BaseException],
+                 fail_after_requests: int | None = None):
+        super().__init__(inner)
+        self._exc_factory = exc_factory
+        self._budget = fail_after_requests
+        self._lock = threading.Lock()
+        self._tripped = threading.Event()
+
+    @property
+    def tripped(self) -> bool:
+        return self._tripped.is_set()
+
+    def trip(self) -> None:
+        self._tripped.set()
+
+    def _call(self, kind, issue, *, read=False, nbytes=0):
+        if self._tripped.is_set():
+            raise self._exc_factory()
+        if self._budget is not None and kind != "bucket":
+            with self._lock:
+                if self._budget <= 0:
+                    self._tripped.set()
+                else:
+                    self._budget -= 1
+            if self._tripped.is_set():
+                raise self._exc_factory()
         return issue()
 
 

@@ -19,6 +19,22 @@ owning tier's session directly, so part-indexed out-of-order parallel
 part uploads (io/backends.MultipartUpload) flow through the tier's own
 middleware stack — durable-tier parts are throttled/billed per part,
 SSD-tier parts are free — with no extra layer in between.
+
+How the external-sort plan knobs (core/external_sort.ExternalSortPlan)
+split across the tiers:
+
+  merge_chunk_bytes / reduce_memory_budget_bytes — reduce-side ranged
+      GETs hit the SSD tier (spilled runs live under spill_prefix), so
+      the budget governor's chunk sizing trades *SSD* request count
+      against memory; it never changes the durable bill. The knobs'
+      memory invariant (all-reducer decoded peak <= budget) is
+      tier-independent.
+
+  parallel_reducers / part_upload_fanout — output partitions are durable-
+      tier multipart uploads: PUT attempts (and 503/retry inflation)
+      scale with parallel_reducers x part_upload_fanout, and those are
+      exactly the requests measured_tiered_cloudsort_tco bills. Spill
+      PUTs from map workers stay on the free SSD tier at any fan-out.
 """
 from __future__ import annotations
 

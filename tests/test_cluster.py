@@ -1,0 +1,120 @@
+"""Cluster executor: byte-identity, failure recovery, budget governance.
+
+The ISSUE-4 acceptance contract: the multi-worker executor must be a
+pure re-scheduling of the single-host sort — byte- and etag-identical
+output at any worker count, under injected worker deaths (task-counted
+and mid-request), with every unfinished task of a dead worker re-executed
+on survivors; and the cluster-wide adaptive reduce budget must hold.
+"""
+from helpers import run_with_devices
+
+SETUP = """
+import tempfile
+import jax
+from repro.core.external_sort import ExternalSortPlan, external_sort
+from repro.core.cluster import (ClusterExecutor, ClusterFailure, ClusterPlan)
+from repro.data import gensort, valsort
+from repro.io.object_store import ObjectStore
+
+from repro.core.compat import make_mesh
+mesh = make_mesh((8,), ("w",))
+plan = ExternalSortPlan(
+    records_per_wave=1 << 13,
+    num_rounds=2,
+    reducers_per_worker=2,
+    payload_words=2,
+    impl="ref",
+    input_records_per_partition=1 << 12,
+    output_part_records=1 << 11,
+    store_chunk_bytes=16 << 10,
+    parallel_reducers=2,
+    reduce_memory_budget_bytes=64 << 10,
+)
+N = 1 << 15  # 4 waves x 8 mesh workers; 16 output partitions
+store = ObjectStore(tempfile.mkdtemp(prefix="cluster-test-"))
+store.create_bucket("sort")
+in_ck, nparts = gensort.write_to_store(
+    store, "sort", plan.input_prefix, N,
+    plan.input_records_per_partition, plan.payload_words)
+
+def layout():
+    return [(m.key, m.etag, m.size, m.parts)
+            for m in store.list_objects("sort", plan.output_prefix)]
+"""
+
+
+def test_cluster_byte_identical_to_single_host_at_worker_counts():
+    # W in {1, 2, 4}: same keys, CRC etags, sizes, and part layout as the
+    # single-host driver — the executor is a re-scheduling, not a rewrite.
+    run_with_devices(SETUP + """
+rep0 = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan)
+want = layout()
+assert len(want) == 16
+
+for W in (1, 2, 4):
+    crep = ClusterExecutor(
+        store, "sort", mesh=mesh, axis_names="w", plan=plan,
+        cluster=ClusterPlan(num_workers=W)).sort()
+    assert layout() == want, f"W={W} changed output bytes"
+    val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+    assert val.ok and val.total_records == N, (W, val)
+    assert crep.num_cluster_workers == W
+    assert not crep.failed_workers and crep.reexecuted_tasks == 0
+    assert crep.map_tasks == 4 and crep.reduce_tasks == 16
+    # every task was confirmed by somebody, and the budget held globally
+    assert sum(crep.per_worker_tasks.values()) == 20
+    assert crep.sort.reduce_peak_merge_bytes <= plan.reduce_memory_budget_bytes
+    # per-worker store views really attribute traffic
+    assert sum(s.get_requests for s in crep.per_worker_stats.values()) > 0
+print("OK")
+""", timeout=900)
+
+
+def test_killed_workers_tasks_reexecuted_and_valsort_clean():
+    # Two failure modes: w1 dies at its 3rd task pop (its in-flight
+    # sibling merges are severed mid-stream by the store kill switch),
+    # and in a second run w2's store view dies mid-request. Both must
+    # re-execute the unconfirmed tasks on survivors and keep the output
+    # byte-identical to a clean run.
+    run_with_devices(SETUP + """
+rep0 = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan)
+want = layout()
+
+crep = ClusterExecutor(
+    store, "sort", mesh=mesh, axis_names="w", plan=plan,
+    cluster=ClusterPlan(num_workers=4, fail_after_tasks={1: 2})).sort()
+assert layout() == want, "task-kill run changed output bytes"
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok and val.total_records == N, val
+assert crep.failed_workers == ["w1"], crep.failed_workers
+assert crep.reexecuted_tasks >= 1, crep
+# the dead worker confirmed at most its task budget; survivors covered
+# the rest, and every partition is durably accounted for
+assert crep.per_worker_tasks.get("w1", 0) <= 2
+assert sum(crep.per_worker_tasks.values()) >= 20
+
+crep = ClusterExecutor(
+    store, "sort", mesh=mesh, axis_names="w", plan=plan,
+    cluster=ClusterPlan(num_workers=4, fail_after_requests={2: 30})).sort()
+assert layout() == want, "request-kill run changed output bytes"
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok, val
+assert crep.failed_workers == ["w2"], crep.failed_workers
+assert crep.reexecuted_tasks >= 1, crep
+print("OK", crep.reexecuted_map_tasks, crep.reexecuted_reduce_tasks)
+""", timeout=900)
+
+
+def test_all_workers_dead_raises_cluster_failure():
+    run_with_devices(SETUP + """
+try:
+    ClusterExecutor(
+        store, "sort", mesh=mesh, axis_names="w", plan=plan,
+        cluster=ClusterPlan(num_workers=2,
+                            fail_after_tasks={0: 0, 1: 0})).sort()
+except ClusterFailure as e:
+    assert "workers dead" in str(e), e
+else:
+    raise AssertionError("expected ClusterFailure when every worker dies")
+print("OK")
+""")

@@ -1,0 +1,69 @@
+"""Fail on broken relative links in the repo's markdown docs.
+
+Scans README.md plus every .md under docs/ (and the other top-level .md
+files) for inline markdown links/images `[text](target)`. Relative
+targets must resolve to an existing file or directory; external schemes
+(http/https/mailto) and pure in-page anchors (#...) are skipped, and a
+`path#fragment` target is checked for the path part only.
+
+CI runs this as the docs job; run locally with:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — target up to the first unescaped ')'; images too.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def md_files() -> list[str]:
+    files = [os.path.join(REPO, name) for name in sorted(os.listdir(REPO))
+             if name.endswith(".md")]
+    docs = os.path.join(REPO, "docs")
+    for root, _, names in os.walk(docs):
+        files += [os.path.join(root, n) for n in sorted(names)
+                  if n.endswith(".md")]
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        base = REPO if rel.startswith("/") else os.path.dirname(path)
+        resolved = os.path.normpath(os.path.join(base, rel.lstrip("/")))
+        if not os.path.exists(resolved):
+            line = text.count("\n", 0, m.start()) + 1
+            errors.append(f"{os.path.relpath(path, REPO)}:{line}: "
+                          f"broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = md_files()
+    errors = []
+    for path in files:
+        errors += check_file(path)
+    for err in errors:
+        print(err, file=sys.stderr)
+    print(f"checked {len(files)} markdown files, "
+          f"{len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,6 +8,8 @@
   bench_store_faults    — §2.5 overlap efficiency under injected S3 faults
   bench_reduce_scaling  — §2.4 parallel-reduce scheduler x part fan-out
   bench_cluster_scaling — §2.6 cluster executor: worker count x failures
+  bench_groupby         — shuffle-as-a-library generality: group-by
+                          aggregation with a map-side combiner
   roofline              — §Roofline rows from the dry-run artifacts
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -20,14 +22,16 @@ import traceback
 
 def main() -> None:
     from benchmarks import (bench_cluster_scaling, bench_cost_model,
-                            bench_external_sort, bench_kernels,
-                            bench_pipeline_overlap, bench_reduce_scaling,
-                            bench_sort_stages, bench_store_faults, roofline)
+                            bench_external_sort, bench_groupby,
+                            bench_kernels, bench_pipeline_overlap,
+                            bench_reduce_scaling, bench_sort_stages,
+                            bench_store_faults, roofline)
 
     print("name,us_per_call,derived")
     for mod in (bench_cost_model, bench_sort_stages, bench_pipeline_overlap,
                 bench_kernels, bench_external_sort, bench_store_faults,
-                bench_reduce_scaling, bench_cluster_scaling, roofline):
+                bench_reduce_scaling, bench_cluster_scaling, bench_groupby,
+                roofline):
         try:
             for name, us, derived in mod.run():
                 print(f"{name},{us:.3f},{derived:.6g}")

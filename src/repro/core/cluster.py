@@ -3,334 +3,60 @@
 Exoshuffle's headline CloudSort run is a 40-worker cluster whose
 straggler/failure tolerance comes from the application re-scheduling its
 own map/reduce tasks (paper §2.4, §2.6 — the freedom shuffle-as-a-library
-buys). Until this module, the reproduction's executor was a thread pool on
-one host; ClusterExecutor partitions the same job across N *emulated*
-workers, each with its own schedule, store view, and failure domain:
+buys). Since the library refactor the machinery lives in
+src/repro/shuffle/ and is workload-agnostic:
 
-  tasks        — the job decomposes exactly as the single-host driver
-      does: one MAP task per wave (load -> mesh sort -> spill runs) and
-      one REDUCE task per output partition (streaming k-way merge ->
-      multipart upload). Task bodies are the shared building blocks
-      (core/external_sort.WaveSorter / ReduceScheduler), so the bytes a
-      task produces depend only on (task id, plan, input) — never on
-      which worker runs it, or how many times.
+  * the Worker protocol, ThreadWorker, FaultyWorker, the stealing
+    TaskPool, and the durable-confirmation phase driver are
+    shuffle/executor.py (re-exported here under their old names);
+  * the CloudSort task bodies are shuffle/sort.SortMapOp /
+    MergeReduceOp, wrapping core/external_sort.WaveSorter and the
+    streaming k-way merge;
+  * single-host vs. cluster execution is one
+    `ShuffleJob.run(workers=N)` call (shuffle/job.py).
 
-  workers      — `Worker` is the narrow protocol (a name, a store view,
-      two phase entry points); `ThreadWorker` backs it with host threads
-      that share the device mesh (emulated workers partition the
-      *schedule*, not the per-wave device working set). The protocol is
-      deliberately store-recoverable — spill offsets are persisted in
-      the spill objects' manifest metadata — so a process-backed worker
-      could implement it against the store alone.
-
-  scheduling   — each worker prefers its contiguous assigned range of
-      waves / partitions and steals from the longest surviving queue
-      when its own drains (§2.4's dynamic placement; also what
-      automatically redistributes a dead worker's queued tasks). Within
-      a worker, the reduce phase runs its own ReduceScheduler with
-      plan.parallel_reducers concurrent merges, all drawing chunk grants
-      from the job-global AdaptiveBudgetGovernor — so cluster-wide
-      reduce memory stays under plan.reduce_memory_budget_bytes no
-      matter how many workers run.
-
-  failure      — `FaultyWorker` wraps any worker in the spirit of the
-      PR-2 store middleware: after a task budget (or, via
-      io/middleware.KillSwitchMiddleware, a request budget) the worker
-      dies — every later task pop raises WorkerFailure AND its store
-      view starts refusing requests, so sibling merges die mid-flight,
-      leaving partial multipart sessions and undrained spills behind.
-      The driver detects the death at the phase barrier: a task only
-      counts as done once its output is durably committed (spills
-      drained; multipart COMPLETE returned), so everything a dead worker
-      still owed is re-executed on survivors in the next round. Because
-      task bodies are deterministic and commits are atomic (manifest
-      replace), re-execution is idempotent: output is byte- and
-      etag-identical to the single-host run at any worker count and
-      under any single-worker (indeed any non-total) failure.
-
-The cost model sees cluster runs unchanged: all workers share one
-underlying store, so measured GET/PUT counts (retry- and re-execution-
-inflated, like a real bill) flow into measured_cloudsort_tco exactly as
-before, while per-worker MetricsMiddleware views break traffic out by
-worker in the report.
+`ClusterExecutor` / `cluster_external_sort` below are thin deprecated
+shims over that call — byte- and etag-identical to the pre-refactor
+driver at any worker count and under any non-total failure, which
+tests/test_cluster.py asserts. See shuffle/executor.py's docstrings for
+the semantics (tasks, scheduling, failure recovery, re-execution); they
+are unchanged.
 """
 from __future__ import annotations
 
-import abc
-import collections
-import dataclasses
-import threading
-import time
-from typing import Callable, Mapping, Sequence
+import warnings
+from typing import Sequence
 
 import jax
-import numpy as np
 
 from repro.core import external_sort as xs
-from repro.io import staging
-from repro.io.backends import RetryableError, StoreBackend, StoreStats
-from repro.io.middleware import KillSwitchMiddleware, MetricsMiddleware
+from repro.io.backends import StoreBackend
+from repro.shuffle.api import ClusterShuffleReport
+from repro.shuffle.executor import (ClusterFailure, ClusterPlan,
+                                    FaultyWorker, TaskPool, ThreadWorker,
+                                    Worker, WorkerFailure, build_workers)
 
+# Backwards-compatible aliases (the classes moved to the shuffle library).
+_TaskPool = TaskPool
 
-class WorkerFailure(RuntimeError):
-    """An emulated worker died. Deliberately NOT a RetryableError: store
-    retries cannot resurrect a host, only the driver's re-execution can."""
-
-
-class ClusterFailure(RuntimeError):
-    """The job cannot make progress (e.g. every worker died)."""
-
-
-@dataclasses.dataclass(frozen=True)
-class ClusterPlan:
-    """How the job is partitioned across emulated workers.
-
-    `fail_after_tasks[i]` / `fail_after_requests[i]` inject a death into
-    worker i (wrapping it in FaultyWorker): the worker completes that
-    many tasks / store requests, then dies. Used by the fault-tolerance
-    tests and benchmarks; production runs leave them empty.
-    """
-
-    num_workers: int = 2
-    fail_after_tasks: Mapping[int, int] = dataclasses.field(
-        default_factory=dict)
-    fail_after_requests: Mapping[int, int] = dataclasses.field(
-        default_factory=dict)
-
-    def __post_init__(self):
-        if self.num_workers < 1:
-            raise ValueError(
-                f"num_workers must be >= 1, got {self.num_workers}")
-
-
-@dataclasses.dataclass
-class ClusterContext:
-    """Everything a worker needs to execute tasks for one job."""
-
-    plan: xs.ExternalSortPlan
-    bucket: str
-    sorter: xs.WaveSorter
-    waves: list  # wave index -> list[ObjectMeta] of its input objects
-    timeline: xs.PhaseTimeline
-    control: xs.JobControl
-    spill_offsets: dict
-    reduce_shared: xs.ReduceShared
-
-
-class Worker(abc.ABC):
-    """One emulated cluster worker.
-
-    The protocol is two phase entry points plus a store view. A phase
-    entry point drains tasks from `pop_next` (returning None ends the
-    phase) and calls `on_done(task_id)` only once the task's output is
-    DURABLE in the shared store — that confirmation, not the call
-    returning, is what the driver's failure recovery trusts. A dying
-    worker raises WorkerFailure; any other exception is a job error.
-    """
-
-    name: str
-    store: StoreBackend
-
-    @abc.abstractmethod
-    def run_map_phase(self, ctx: ClusterContext,
-                      pop_next: Callable[[], int | None],
-                      on_done: Callable[[int], None]) -> None: ...
-
-    @abc.abstractmethod
-    def run_reduce_phase(self, ctx: ClusterContext,
-                         pop_next: Callable[[], int | None],
-                         on_done: Callable[[int], None]) -> None: ...
-
-
-class ThreadWorker(Worker):
-    """Thread-backed emulated worker with its own metrics-wrapped view of
-    the shared store (per-worker request attribution in the report; the
-    shared store underneath still counts the global, billed traffic)."""
-
-    def __init__(self, name: str, store: StoreBackend, *,
-                 metrics: bool = True):
-        self.name = name
-        self.store = MetricsMiddleware(store) if metrics else store
-
-    # -- map: one wave per task, compute sequential within the worker ----
-    # (records_per_wave is the device working set; a worker never SORTS
-    # more than one wave at a time, exactly like the single-host driver —
-    # but like it, the next wave's chunked GETs prefetch while the
-    # current wave sorts/spills, via the same staging.prefetch pipeline.)
-
-    def run_map_phase(self, ctx, pop_next, on_done):
-        plan = ctx.plan
-        popped: collections.deque[int] = collections.deque()
-
-        def wave_loads():
-            # Pulled from inside the prefetch pipeline on this worker's
-            # thread: each pull claims the next task (up to prefetch_depth
-            # ahead of the sort). A claimed-but-unconfirmed task at death
-            # is simply re-executed by the driver's next round.
-            while not ctx.control.cancel.is_set():
-                g = pop_next()
-                if g is None:
-                    return
-                popped.append(g)
-                yield lambda g=g: ctx.sorter.load_wave(
-                    self.store, ctx.bucket, ctx.waves[g])
-
-        with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
-            wave_iter = iter(staging.prefetch(
-                wave_loads(), depth=plan.prefetch_depth,
-                retries=plan.io_retries, retry_on=(RetryableError,)))
-            while True:
-                t_wait = time.perf_counter()
-                try:
-                    keys, ids, payload = next(wave_iter)
-                except StopIteration:
-                    return
-                g = popped.popleft()
-                tag = f"{self.name}/g{g}"
-                ctx.timeline.add("map.wait", t_wait, worker=tag)
-                ctx.sorter.compute_and_spill(
-                    self.store, ctx.bucket, g, keys, ids, payload,
-                    spiller=spiller, timeline=ctx.timeline, tag=tag,
-                    offsets_out=ctx.spill_offsets)
-                # The task is only done once its runs are durable: drain
-                # the write-behind queue before confirming, so a worker
-                # that dies with spills in flight leaves the wave
-                # unconfirmed (and re-executed) rather than half-spilled.
-                spiller.drain()
-                on_done(g)
-
-    # -- reduce: the worker's own scheduler over its partition range -----
-
-    def run_reduce_phase(self, ctx, pop_next, on_done):
-        xs.ReduceScheduler(
-            self.store, ctx.reduce_shared,
-            width=ctx.plan.parallel_reducers,
-            fatal=(WorkerFailure,),
-            tag_prefix=f"{self.name}/",
-        ).run(pop_next, on_done=on_done)
-
-
-class FaultyWorker(Worker):
-    """Failure-injecting wrapper — the worker-level analogue of the PR-2
-    store fault middleware.
-
-    The wrapped worker completes `fail_after_tasks` tasks (and/or its
-    store view serves `fail_after_requests` requests) and then dies:
-    subsequent task pops raise WorkerFailure, and the store view's kill
-    switch makes every in-flight sibling request fail too — so partial
-    multipart sessions and undrained spills are left behind exactly as a
-    host crash would leave them, for the driver to re-execute elsewhere.
-    """
-
-    def __init__(self, inner: Worker, *, fail_after_tasks: int | None = None,
-                 fail_after_requests: int | None = None):
-        self.inner = inner
-        self.name = inner.name
-        self._kill = KillSwitchMiddleware(
-            inner.store,
-            exc_factory=lambda: WorkerFailure(
-                f"{self.name}: store unreachable (worker dead)"),
-            fail_after_requests=fail_after_requests,
-        )
-        # The inner worker now talks through the kill switch, so tripping
-        # it severs the whole worker, not just new tasks.
-        self.store = inner.store = self._kill
-        self._lock = threading.Lock()
-        self._remaining = fail_after_tasks
-
-    def _gated(self, pop_next):
-        def pop():
-            with self._lock:
-                if self._remaining is not None and self._remaining <= 0:
-                    self._kill.trip()
-                    raise WorkerFailure(f"{self.name}: injected worker death")
-            task = pop_next()
-            if task is None:
-                return None
-            with self._lock:
-                if self._remaining is not None:
-                    self._remaining -= 1
-            return task
-        return pop
-
-    def run_map_phase(self, ctx, pop_next, on_done):
-        self.inner.run_map_phase(ctx, self._gated(pop_next), on_done)
-
-    def run_reduce_phase(self, ctx, pop_next, on_done):
-        self.inner.run_reduce_phase(ctx, self._gated(pop_next), on_done)
-
-
-class _TaskPool:
-    """Range-partitioned shared task queue with stealing.
-
-    Each worker prefers its own contiguous slice (the "assigned partition
-    range"); when it drains, it steals from the tail of the longest
-    surviving queue — dynamic load balancing, and the mechanism that
-    hands a dead worker's queued tasks to survivors without any special
-    casing.
-    """
-
-    def __init__(self, tasks: Sequence[int], worker_names: Sequence[str]):
-        self._lock = threading.Lock()
-        self._q: dict[str, collections.deque[int]] = {
-            name: collections.deque() for name in worker_names}
-        names = list(worker_names)
-        n, k = len(tasks), len(names)
-        bounds = [round(i * n / k) for i in range(k + 1)]
-        for i, name in enumerate(names):
-            self._q[name].extend(tasks[bounds[i]:bounds[i + 1]])
-
-    def popper(self, name: str) -> Callable[[], int | None]:
-        def pop() -> int | None:
-            with self._lock:
-                own = self._q[name]
-                if own:
-                    return own.popleft()
-                donor = max((q for q in self._q.values() if q),
-                            key=len, default=None)
-                if donor is not None:
-                    return donor.pop()  # steal from the tail
-                return None
-        return pop
-
-
-@dataclasses.dataclass
-class ClusterSortReport:
-    """A cluster run's report: the familiar single-host report plus the
-    cluster-level story (who died, what was re-executed, who did what)."""
-
-    sort: xs.ExternalSortReport
-    num_cluster_workers: int
-    failed_workers: list[str]
-    reexecuted_map_tasks: int
-    reexecuted_reduce_tasks: int
-    map_tasks: int
-    reduce_tasks: int
-    per_worker_stats: dict[str, StoreStats]
-    per_worker_tasks: dict[str, int]
-
-    @property
-    def reexecuted_tasks(self) -> int:
-        return self.reexecuted_map_tasks + self.reexecuted_reduce_tasks
-
-    @property
-    def records_per_second(self) -> float:
-        secs = self.sort.map_seconds + self.sort.reduce_seconds
-        return self.sort.total_records / secs if secs > 0 else 0.0
+#: A cluster run's report (renamed when the library was carved out; the
+#: legacy `.sort` accessor still reads the inner report).
+ClusterSortReport = ClusterShuffleReport
 
 
 class ClusterExecutor:
-    """Partition one external sort across N emulated workers with failure
-    recovery; output is byte-identical to the single-host driver.
+    """DEPRECATED shim: partition one external sort across N emulated
+    workers with failure recovery; output is byte-identical to the
+    single-host driver. Build the job through the library instead —
 
-    Tasks run in two barriered phases (every reduce merge needs every
-    wave's spilled run, so the barrier is inherent to the dataflow, not a
-    scheduling choice). Within a phase the driver runs ROUNDS: it
-    launches every surviving worker on the pending task pool, joins them,
-    marks workers that raised WorkerFailure as dead, and re-runs the
-    phase with whatever tasks were never durably confirmed — the
-    re-executed tasks the report counts. A real (non-WorkerFailure)
-    exception anywhere cancels the job and re-raises.
+        from repro.shuffle.sort import sort_shuffle_job
+        sort_shuffle_job(store, bucket, mesh=mesh, axis_names=axis_names,
+                         plan=plan).run(cluster=cluster)
+
+    The constructor keeps its historical signature: `cluster` (a
+    shuffle/executor.ClusterPlan) sizes the default ThreadWorker fleet
+    and injects FaultyWorker deaths; `workers` supplies a hand-built
+    fleet instead.
     """
 
     def __init__(self, store: StoreBackend, bucket: str, *,
@@ -338,153 +64,26 @@ class ClusterExecutor:
                  plan: xs.ExternalSortPlan,
                  cluster: ClusterPlan = ClusterPlan(),
                  workers: Sequence[Worker] | None = None):
+        warnings.warn(
+            "ClusterExecutor is a deprecated shim; use "
+            "repro.shuffle.sort.sort_shuffle_job(...).run(workers=N) or "
+            ".run(cluster=ClusterPlan(...))",
+            DeprecationWarning, stacklevel=2)
         self.store = store
         self.bucket = bucket
         self.mesh = mesh
         self.axis_names = axis_names
         self.plan = plan
         self.cluster = cluster
-        if workers is None:
-            workers = []
-            for i in range(cluster.num_workers):
-                wk: Worker = ThreadWorker(f"w{i}", store)
-                tasks_budget = cluster.fail_after_tasks.get(i)
-                reqs_budget = cluster.fail_after_requests.get(i)
-                if tasks_budget is not None or reqs_budget is not None:
-                    wk = FaultyWorker(wk, fail_after_tasks=tasks_budget,
-                                      fail_after_requests=reqs_budget)
-                workers.append(wk)
-        self.workers = list(workers)
-        self._lock = threading.Lock()
-        self._dead: set[str] = set()
-        self.failed_workers: list[str] = []
-
-    # -- phase driver ------------------------------------------------------
-
-    def _drive(self, worker: Worker, entry: Callable[[Worker], None],
-               control: xs.JobControl) -> None:
-        try:
-            entry(worker)
-        except WorkerFailure:
-            with self._lock:
-                if worker.name not in self._dead:
-                    self._dead.add(worker.name)
-                    self.failed_workers.append(worker.name)
-        except BaseException as e:
-            control.fail(e)
-
-    def _run_phase(self, phase: str, tasks: Sequence[int],
-                   entry: Callable[[Worker, Callable, Callable], None],
-                   control: xs.JobControl,
-                   per_worker_tasks: dict[str, int]) -> int:
-        """Run `tasks` to durable completion; returns re-executions."""
-        done: set[int] = set()
-        done_lock = threading.Lock()
-        pending = list(tasks)
-        reexecuted = 0
-        first_round = True
-        while pending:
-            with self._lock:
-                alive = [wk for wk in self.workers
-                         if wk.name not in self._dead]
-            if not alive:
-                raise ClusterFailure(
-                    f"all {len(self.workers)} workers dead during {phase} "
-                    f"phase with {len(pending)} tasks unfinished")
-            if not first_round:
-                reexecuted += len(pending)
-            first_round = False
-            pool = _TaskPool(pending, [wk.name for wk in alive])
-
-            def on_done_for(wk: Worker):
-                def on_done(task: int) -> None:
-                    with done_lock:
-                        done.add(task)
-                        per_worker_tasks[wk.name] = (
-                            per_worker_tasks.get(wk.name, 0) + 1)
-                return on_done
-
-            threads = [
-                threading.Thread(
-                    target=self._drive,
-                    args=(wk, lambda w, p=pool.popper(wk.name),
-                          d=on_done_for(wk): entry(w, p, d), control),
-                    name=f"cluster-{wk.name}-{phase}")
-                for wk in alive
-            ]
-            for t in threads:
-                t.start()
-            for t in threads:
-                t.join()
-            control.raise_first()
-            with done_lock:
-                pending = [t for t in tasks if t not in done]
-        return reexecuted
-
-    # -- the job -----------------------------------------------------------
+        self.workers = (list(workers) if workers is not None
+                        else build_workers(store, cluster))
 
     def sort(self) -> ClusterSortReport:
-        plan, store, bucket = self.plan, self.store, self.bucket
-        # Shared preflight with the single-host driver (one source of
-        # truth for validation, wave grouping, budget feasibility). The
-        # governor's slot count is the cluster-wide merge concurrency:
-        # every worker's scheduler draws from the same global budget.
-        setup = xs.prepare_job(store, bucket, plan, self.mesh,
-                               self.axis_names,
-                               schedulers=len(self.workers))
+        from repro.shuffle.sort import sort_shuffle_job
 
-        t_origin = time.perf_counter()
-        timeline = xs.PhaseTimeline(origin=t_origin)
-        control = xs.JobControl()
-        spill_offsets: dict[tuple[int, int], np.ndarray] = {}
-        peak = xs._PeakTracker()
-        ctx = ClusterContext(
-            plan=plan, bucket=bucket, sorter=setup.sorter,
-            waves=setup.waves, timeline=timeline, control=control,
-            spill_offsets=spill_offsets,
-            reduce_shared=xs.ReduceShared(
-                plan=plan, bucket=bucket, num_waves=setup.num_waves,
-                r1=setup.sorter.r1, spill_offsets=spill_offsets,
-                governor=setup.governor, timeline=timeline, peak=peak,
-                control=control,
-            ),
-        )
-        per_worker_tasks: dict[str, int] = {}
-
-        # ---- map phase (barrier: reduce needs every wave's runs) -------
-        reexec_map = self._run_phase(
-            "map", list(range(setup.num_waves)),
-            lambda wk, pop, on_done: wk.run_map_phase(ctx, pop, on_done),
-            control, per_worker_tasks)
-        map_seconds = time.perf_counter() - t_origin
-
-        # ---- reduce phase ----------------------------------------------
-        t_reduce = time.perf_counter()
-        reexec_reduce = self._run_phase(
-            "reduce", list(range(setup.num_reducers)),
-            lambda wk, pop, on_done: wk.run_reduce_phase(ctx, pop, on_done),
-            control, per_worker_tasks)
-        reduce_seconds = time.perf_counter() - t_reduce
-
-        per_worker_stats = {
-            wk.name: wk.store.stats_snapshot()
-            for wk in self.workers
-            if hasattr(wk.store, "stats_snapshot")
-        }
-        return ClusterSortReport(
-            sort=xs.build_report(setup, store, plan,
-                                 map_seconds=map_seconds,
-                                 reduce_seconds=reduce_seconds,
-                                 peak=peak, timeline=timeline),
-            num_cluster_workers=len(self.workers),
-            failed_workers=list(self.failed_workers),
-            reexecuted_map_tasks=reexec_map,
-            reexecuted_reduce_tasks=reexec_reduce,
-            map_tasks=setup.num_waves,
-            reduce_tasks=setup.num_reducers,
-            per_worker_stats=per_worker_stats,
-            per_worker_tasks=dict(per_worker_tasks),
-        )
+        job = sort_shuffle_job(self.store, self.bucket, mesh=self.mesh,
+                               axis_names=self.axis_names, plan=self.plan)
+        return job.run(worker_list=self.workers)
 
 
 def cluster_external_sort(
@@ -497,8 +96,27 @@ def cluster_external_sort(
     cluster: ClusterPlan = ClusterPlan(),
     workers: Sequence[Worker] | None = None,
 ) -> ClusterSortReport:
-    """Convenience wrapper: build a ClusterExecutor and run the sort."""
+    """DEPRECATED shim: build a ClusterExecutor and run the sort. Use
+    `repro.shuffle.sort.sort_shuffle_job(...).run(cluster=...)`."""
+    warnings.warn(
+        "cluster_external_sort() is a deprecated shim; use "
+        "repro.shuffle.sort.sort_shuffle_job(...).run(workers=N) or "
+        ".run(cluster=ClusterPlan(...))",
+        DeprecationWarning, stacklevel=2)
     return ClusterExecutor(
         store, bucket, mesh=mesh, axis_names=axis_names, plan=plan,
         cluster=cluster, workers=workers,
     ).sort()
+
+
+__all__ = [
+    "ClusterExecutor",
+    "ClusterFailure",
+    "ClusterPlan",
+    "ClusterSortReport",
+    "FaultyWorker",
+    "ThreadWorker",
+    "Worker",
+    "WorkerFailure",
+    "cluster_external_sort",
+]

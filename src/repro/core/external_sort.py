@@ -1,13 +1,22 @@
 """Out-of-core external sort: the dataset lives in the object store, not HBM.
 
-This is the driver that lets the reproduction actually *pose* the CloudSort
-problem (paper §2.3–§2.5): total dataset size is bounded by object-store
-capacity, while device memory holds only one map wave's working set. The
-building blocks (WaveSorter, ReduceScheduler) are shared with the
-multi-worker cluster executor (core/cluster.py), which partitions the same
-schedule across N emulated workers with failure recovery (§2.6).
+This module is the CloudSort *workload*: the wave/spill layout, the
+device-mesh map body (WaveSorter), and the ExternalSortPlan schedule.
+Since the shuffle-as-a-library refactor, the generic machinery that used
+to live here — span timelines, job control, the AdaptiveBudgetGovernor,
+streaming run cursors, the reduce scheduler, the staged map loop, the
+single-host/cluster drivers — is the library (src/repro/shuffle/), and
+the sort is one instantiation of it:
 
-Paper mapping:
+    from repro.shuffle.sort import sort_shuffle_job
+    report = sort_shuffle_job(store, bucket, mesh=mesh, axis_names="w",
+                              plan=plan).run(workers=N)
+
+`external_sort()` below is kept as a thin deprecated shim over exactly
+that call (workers=0), byte- and etag-identical to the pre-refactor
+driver; core/cluster.cluster_external_sort is the cluster-mode shim.
+
+Paper mapping (unchanged by the refactor):
 
   map waves (§2.3, §2.5): input partitions stream from the store in ranged
       chunks (io/backends.get_chunks — one GET per chunk, the paper's
@@ -32,15 +41,14 @@ Paper mapping:
       wave's sort.
 
   reduce (§2.4): a scheduler runs up to plan.parallel_reducers streaming
-      k-way merges CONCURRENTLY on a worker pool — the paper's "all
-      output partitions at once" reduce stage, the scheduling freedom
+      k-way merges CONCURRENTLY per worker (shuffle/runtime.ReduceScheduler
+      driving shuffle/sort.MergeReduceOp) — the paper's "all output
+      partitions at once" reduce stage, the scheduling freedom
       shuffle-as-a-library buys (Exoshuffle §4). Each active reducer
-      fetches its slice of every spilled run in bounded ranged chunks
-      (all empty cursors refill concurrently, so an emit cycle pays ~one
-      request stall, not one per run), merges buffered records up to the
-      smallest last-loaded key over still-active runs, and streams merged
-      bytes into an incremental multipart upload fanned out over
-      plan.part_upload_fanout threads per partition.
+      fetches its slice of every spilled run in bounded ranged chunks,
+      merges buffered records up to the smallest last-loaded key over
+      still-active runs, and streams merged bytes into an incremental
+      multipart upload fanned out over plan.part_upload_fanout threads.
 
 Plan knobs and their invariants (the reduce-side memory/throughput
 contract; see ExternalSortPlan for the map-side knobs):
@@ -61,17 +69,14 @@ contract; see ExternalSortPlan for the map-side knobs):
 
   reduce_memory_budget_bytes — global decoded-merge-buffer budget across
       ALL concurrently active reducers (0 = uncapped). Apportionment is
-      ADAPTIVE (AdaptiveBudgetGovernor): each registering reducer starts
-      from the static fair share budget/slots, and as reducers retire
-      their share is re-apportioned to still-active merges — chunk sizes
-      grow mid-merge (up to merge_chunk_bytes), so tail stragglers fetch
-      bigger chunks instead of leaving freed budget idle. The invariant
-      is provable, not just measured: grants only move between a free
-      pool and live reducers under one lock, a live reducer's chunk never
-      shrinks, and the measured all-reducer peak of decoded merge-buffer
-      bytes (reduce_peak_merge_bytes) never exceeds the budget. Encoded
-      output parts being sliced/uploaded sit on top, ~
-      (1 + max_inflight_writes) x part bytes per active reducer.
+      ADAPTIVE (shuffle/runtime.AdaptiveBudgetGovernor): each registering
+      reducer starts from the static fair share budget/slots, and as
+      reducers retire their share is re-apportioned to still-active
+      merges — chunk sizes grow mid-merge (up to merge_chunk_bytes), so
+      tail stragglers fetch bigger chunks instead of leaving freed budget
+      idle. The invariant is provable, not just measured — see the
+      governor's docstring — and the measured all-reducer peak
+      (reduce_peak_merge_bytes) never exceeds the budget.
 
 Every phase records wall-clock spans (map wait/compute/spill, reduce
 fetch/merge/upload) into the report's span timeline, so map/reduce
@@ -83,14 +88,12 @@ hardcoded 6M/1M constants.
 """
 from __future__ import annotations
 
-import collections
-import contextlib
 import dataclasses
 import math
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Callable, Sequence
+import warnings
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -100,7 +103,32 @@ from repro.core.exoshuffle import ShuffleConfig
 from repro.core.streaming import streaming_sort
 from repro.io import records as rec
 from repro.io import staging
-from repro.io.backends import RetryableError, StoreBackend, StoreStats
+from repro.io.backends import StoreBackend
+from repro.shuffle import runtime as _rt
+from repro.shuffle.api import (ShuffleReport, require,
+                               validate_dataflow_plan)
+
+# Backwards-compatible re-exports: this machinery moved to the shuffle
+# library (shuffle/runtime.py) when the generic dataflow API was carved
+# out; the old names keep working for existing callers.
+Span = _rt.Span
+PhaseTimeline = _rt.PhaseTimeline
+JobControl = _rt.JobControl
+AdaptiveBudgetGovernor = _rt.AdaptiveBudgetGovernor
+ReduceShared = _rt.ReduceShared
+ReduceScheduler = _rt.ReduceScheduler
+_PeakTracker = _rt.PeakTracker
+_RunCursor = _rt.RunCursor
+_SiblingFailed = _rt.SiblingFailed
+_reduce_chunking = _rt.reduce_chunking
+_merge_fragments = _rt.merge_fragments
+_timed_part = _rt.timed_part
+_timed_spill = _rt.timed_put
+_finalize_session = _rt.finalize_session
+
+#: The run report (renamed ShuffleReport when the library was carved
+#: out — same fields, every workload reports through it).
+ExternalSortReport = ShuffleReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,288 +174,23 @@ class ExternalSortPlan:
     def record_bytes(self) -> int:
         return rec.record_bytes(self.payload_words)
 
-
-@dataclasses.dataclass(frozen=True)
-class Span:
-    """One recorded phase interval, seconds relative to the sort start."""
-
-    phase: str  # e.g. "map.compute", "reduce.upload"
-    start: float
-    end: float
-    worker: str = ""  # "w3" map wave / "r12" reducer tag
-
-    @property
-    def seconds(self) -> float:
-        return self.end - self.start
-
-
-class PhaseTimeline:
-    """Thread-safe span recorder for the per-phase timeline.
-
-    Aggregate per-phase totals are exact; the raw span list is capped at
-    `max_spans` (oldest kept) so a huge run cannot hoard memory — the
-    report's `spans_dropped` says how many were dropped. Because spans from overlapping
-    threads both count wall time, a phase total larger than the enclosing
-    stage's wall time is *measured overlap*, which is the point.
-    """
-
-    def __init__(self, origin: float, *, max_spans: int = 4096):
-        self._origin = origin
-        self._lock = threading.Lock()
-        self._totals: dict[str, float] = {}
-        self._spans: list[Span] = []
-        self._max = int(max_spans)
-        self.dropped = 0
-
-    def add(self, phase: str, start: float, end: float | None = None,
-            *, worker: str = "") -> None:
-        end = time.perf_counter() if end is None else end
-        span = Span(phase, start - self._origin, end - self._origin, worker)
-        with self._lock:
-            self._totals[phase] = self._totals.get(phase, 0.0) + span.seconds
-            if len(self._spans) < self._max:
-                self._spans.append(span)
-            else:
-                self.dropped += 1
-
-    @contextlib.contextmanager
-    def span(self, phase: str, worker: str = ""):
-        t = time.perf_counter()
-        try:
-            yield
-        finally:
-            self.add(phase, t, worker=worker)
-
-    def totals(self) -> dict[str, float]:
-        with self._lock:
-            return dict(self._totals)
-
-    def spans(self) -> list[Span]:
-        with self._lock:
-            return list(self._spans)
-
-
-class _PeakTracker:
-    """Thread-safe global peak of summed per-reducer buffered merge bytes —
-    the measurement behind the reduce_memory_budget_bytes guarantee."""
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self._per: dict[int, int] = {}
-        self._total = 0
-        self.peak = 0
-
-    def update(self, rid: int, nbytes: int) -> None:
-        with self._lock:
-            self._total += nbytes - self._per.get(rid, 0)
-            self._per[rid] = nbytes
-            if self._total > self.peak:
-                self.peak = self._total
-
-    def clear(self, rid: int) -> None:
-        with self._lock:
-            self._total -= self._per.pop(rid, 0)
-
-
-class JobControl:
-    """Job-wide cancellation + first-failure collection.
-
-    Shared by every scheduler (and, in cluster mode, every worker) of one
-    sort: a real failure anywhere cancels the whole job, and the
-    chronologically first exception is what the driver re-raises.
-    """
-
-    def __init__(self):
-        self.cancel = threading.Event()
-        self._lock = threading.Lock()
-        self._first: list[BaseException] = []
-
-    def fail(self, e: BaseException) -> None:
-        with self._lock:
-            if not self._first:
-                self._first.append(e)
-        self.cancel.set()
-
-    @property
-    def failed(self) -> bool:
-        with self._lock:
-            return bool(self._first)
-
-    def raise_first(self) -> None:
-        with self._lock:
-            if self._first:
-                raise self._first[0]
-
-
-class AdaptiveBudgetGovernor:
-    """Adaptive apportionment of the global reduce memory budget.
-
-    Replaces the static active-count split: every registering reducer is
-    granted the static fair share S0 = budget // slots (the floor
-    _reduce_chunking validates up front), and on every emit cycle it may
-    `grow` its grant out of budget freed by retired reducers — so the
-    tail of the reduce phase runs with bigger per-run chunks instead of
-    leaving freed budget idle ("chunk sizes grow mid-merge").
-
-    The budget bound is provable, not just measured:
-
-      * bytes only move between the free pool and live grants under one
-        lock, and the free pool never goes negative — so the sum of live
-        grants never exceeds the budget;
-      * a live reducer's grant (hence chunk) never shrinks — growth only
-        draws from `free` beyond a reservation of S0 per not-yet-started
-        partition (up to the slot count), so a late registrant never
-        needs to claw back granted bytes;
-      * each reducer buffers at most runs x chunk <= grant decoded bytes,
-        so the measured all-reducer peak (reduce_peak_merge_bytes) is
-        under the budget at every instant.
-
-    With budget == 0 the governor is inert: every cursor just uses the
-    merge_chunk_bytes cap.
-    """
-
-    def __init__(self, *, budget: int, chunk_cap: int, record_bytes: int,
-                 slots: int, partitions: int):
-        self.budget = int(budget)
-        self.chunk_cap = int(chunk_cap)
-        self.record_bytes = int(record_bytes)
-        self.slots = max(int(slots), 1)
-        self._cond = threading.Condition()
-        self._free = self.budget
-        self._live: dict[int, tuple[int, int]] = {}  # rid -> (runs, grant)
-        # Completed rids as a SET, not a counter: a partition whose merge
-        # retired but whose async commit later died (cluster worker
-        # failure) is re-executed and retires AGAIN — dedup keeps the
-        # unstarted-partition reservation from under-counting.
-        self._done_rids: set[int] = set()
-        self._partitions = int(partitions)
-        self._base = self.budget // self.slots if self.budget else 0
-        self.max_chunk_bytes = 0 if self.budget else self.chunk_cap
-
-    def _chunk_of(self, runs: int, grant: int) -> int:
-        return min(self.chunk_cap, grant // max(runs, 1))
-
-    def register(self, rid: int, runs: int,
-                 abort: Callable[[], bool] | None = None) -> int | None:
-        """Reserve an initial grant; returns the per-run chunk in bytes.
-
-        Blocks while the free pool cannot cover even one record per run
-        (only possible transiently, while grown siblings hold surplus
-        that their retirement will release). Returns None if `abort`
-        turns true while waiting.
-        """
-        if not self.budget:
-            return self.chunk_cap
-        min_need = max(runs, 1) * self.record_bytes
-        with self._cond:
-            while self._free < min_need:
-                if abort is not None and abort():
-                    return None
-                self._cond.wait(timeout=0.05)
-            grant = max(min(self._base, runs * self.chunk_cap, self._free),
-                        min_need)
-            self._live[rid] = (runs, grant)
-            self._free -= grant
-            chunk = self._chunk_of(runs, grant)
-            self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
-            return chunk
-
-    def chunk_bytes(self, rid: int) -> int:
-        if not self.budget:
-            return self.chunk_cap
-        with self._cond:
-            runs, grant = self._live[rid]
-            return self._chunk_of(runs, grant)
-
-    def grow(self, rid: int) -> int:
-        """Re-apportion freed budget into this reducer's grant (monotone);
-        returns the current per-run chunk in bytes."""
-        if not self.budget:
-            return self.chunk_cap
-        with self._cond:
-            runs, grant = self._live[rid]
-            target = runs * self.chunk_cap
-            if grant < target:
-                # Keep S0 reserved for every partition that still has to
-                # start (bounded by the free scheduler slots), so future
-                # registrants are never starved by growth.
-                unstarted = (self._partitions - len(self._done_rids)
-                             - len(self._live))
-                reserve = self._base * max(
-                    0, min(self.slots - len(self._live), unstarted))
-                avail = self._free - reserve
-                extra = min(target - grant, avail // max(len(self._live), 1))
-                if extra > 0:
-                    grant += extra
-                    self._live[rid] = (runs, grant)
-                    self._free -= extra
-            chunk = self._chunk_of(runs, grant)
-            self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
-            return chunk
-
-    def retire(self, rid: int, *, completed: bool = True) -> None:
-        """Release the grant back to the free pool (waking any waiting
-        registrant); `completed=False` marks a failed reducer whose
-        partition will be re-executed (cluster failure recovery)."""
-        if not self.budget:
-            return
-        with self._cond:
-            entry = self._live.pop(rid, None)
-            if entry is not None:
-                self._free += entry[1]
-            if completed:
-                self._done_rids.add(rid)
-            self._cond.notify_all()
-
-
-@dataclasses.dataclass
-class ExternalSortReport:
-    """What happened: sizes, timings, and *measured* store traffic."""
-
-    total_records: int
-    num_waves: int
-    num_workers: int
-    num_reducers: int
-    spill_objects: int
-    output_objects: int
-    map_seconds: float
-    reduce_seconds: float
-    working_set_records: int
-    stats: StoreStats  # delta over the sort (map + reduce), all tiers
-    runs_per_reducer: int = 0  # k of the streaming k-way merge
-    merge_chunk_bytes: int = 0  # the plan's per-run fetch cap
-    reduce_chunk_bytes: int = 0  # initial per-run chunk (budget-governed)
-    reduce_chunk_bytes_max: int = 0  # largest chunk the governor granted
-    reduce_peak_merge_bytes: int = 0  # measured max across ALL active merges
-    parallel_reducers: int = 1  # concurrent merges the scheduler(s) ran
-    reduce_memory_budget_bytes: int = 0  # the global governor (0 = none)
-    tier_stats: dict[str, StoreStats] | None = None  # per-tier deltas
-    spans: list[Span] = dataclasses.field(default_factory=list)
-    spans_dropped: int = 0  # spans beyond the recorder cap (totals stay exact)
-    phase_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
-
-    @property
-    def oversubscription(self) -> float:
-        """Dataset size / per-wave device working set (>1 = out-of-core)."""
-        return self.total_records / self.working_set_records
-
-    @property
-    def reduce_memory_bound_bytes(self) -> int:
-        """The scheduler's memory guarantee: the global budget when one is
-        set, else parallel_reducers x runs x effective chunk (+ one record
-        of rounding per run) — reduce_peak_merge_bytes never exceeds it."""
-        if self.reduce_memory_budget_bytes:
-            return self.reduce_memory_budget_bytes
-        chunk = self.reduce_chunk_bytes or self.merge_chunk_bytes
-        return self.parallel_reducers * self.runs_per_reducer * chunk
-
-    @property
-    def job_hours(self) -> float:
-        return (self.map_seconds + self.reduce_seconds) / 3600.0
-
-    @property
-    def reduce_hours(self) -> float:
-        return self.reduce_seconds / 3600.0
+    def validate(self) -> None:
+        """Mesh-independent plan validation (ValueError with the knob
+        name and value — never an assert). The mesh-dependent checks
+        (wave/round divisibility) run in WaveSorter, which knows the
+        mesh width."""
+        validate_dataflow_plan(self)
+        require(self.records_per_wave >= 1, "records_per_wave",
+                self.records_per_wave, "must hold >= 1 record per wave")
+        require(self.num_rounds >= 1, "num_rounds", self.num_rounds,
+                "must run >= 1 streaming round per wave")
+        require(self.reducers_per_worker >= 1, "reducers_per_worker",
+                self.reducers_per_worker, "must be >= 1 (R1)")
+        require(self.input_records_per_partition >= 1,
+                "input_records_per_partition",
+                self.input_records_per_partition, "must be >= 1")
+        require(self.capacity_factor > 0, "capacity_factor",
+                self.capacity_factor, "must be > 0")
 
 
 def _spill_key(plan: ExternalSortPlan, wave: int, worker: int) -> str:
@@ -448,16 +211,15 @@ def _group_waves(inputs, counts, records_per_wave: int):
     for meta, c in zip(inputs, counts):
         cur.append(meta)
         acc += c
-        if acc > records_per_wave:
-            raise ValueError(
-                "input partitions must tile records_per_wave exactly "
-                f"(partition {meta.key} overflows the wave)"
-            )
+        require(acc <= records_per_wave, "records_per_wave",
+                records_per_wave,
+                "input partitions must tile it exactly "
+                f"(partition {meta.key} overflows the wave)")
         if acc == records_per_wave:
             waves.append(cur)
             cur, acc = [], 0
-    if cur:
-        raise ValueError("total records must be a multiple of records_per_wave")
+    require(not cur, "records_per_wave", records_per_wave,
+            "total input records must be a multiple of it")
     return waves
 
 
@@ -486,204 +248,27 @@ def _contiguous_id_base(ids: np.ndarray) -> int | None:
     return base
 
 
-class _RunCursor:
-    """Bounded window over one spilled run's reducer slice.
-
-    Holds at most `chunk_records` decoded records at a time; `refill`
-    issues one ranged GET for the next chunk, `take_upto` consumes the
-    buffered prefix that is safe to emit (every record <= bound). The
-    chunk size may be raised mid-stream (`set_chunk`) when the adaptive
-    governor re-apportions budget freed by retired reducers.
-    """
-
-    __slots__ = ("_store", "_bucket", "_key", "_hi", "_next", "_chunk",
-                 "_pw", "k64", "keys", "ids", "payload")
-
-    def __init__(self, store, bucket, key, lo, hi, payload_words, chunk_records):
-        self._store = store
-        self._bucket = bucket
-        self._key = key
-        self._next = int(lo)
-        self._hi = int(hi)
-        self._chunk = int(chunk_records)
-        self._pw = int(payload_words)
-        self.keys = np.empty((0,), np.uint32)
-        self.ids = np.empty((0,), np.uint32)
-        self.payload = None
-        self.k64 = np.empty((0,), np.uint64)
-
-    @property
-    def has_more_remote(self) -> bool:
-        return self._next < self._hi
-
-    @property
-    def exhausted(self) -> bool:
-        return not self.has_more_remote and self.k64.size == 0
-
-    @property
-    def buffered_bytes(self) -> int:
-        return self.k64.size * rec.record_bytes(self._pw)
-
-    def set_chunk(self, chunk_records: int) -> None:
-        self._chunk = int(chunk_records)
-
-    def refill(self) -> None:
-        n = min(self._chunk, self._hi - self._next)
-        start, length = rec.body_range(self._next, n, self._pw)
-        body = self._store.get_range(self._bucket, self._key, start, length)
-        self._next += n
-        k, i, p = rec.decode_body(body, self._pw)
-        self.keys, self.ids, self.payload = k, i, p
-        self.k64 = k.astype(np.uint64) << np.uint64(32) | i.astype(np.uint64)
-
-    def take_upto(self, bound):
-        """Consume and return the (keys, ids, payload, k64) prefix with
-        k64 <= bound; bound=None consumes everything buffered."""
-        cut = self.k64.size if bound is None else int(
-            np.searchsorted(self.k64, bound, side="right"))
-        out = (self.keys[:cut], self.ids[:cut],
-               None if self.payload is None else self.payload[:cut],
-               self.k64[:cut])
-        self.keys, self.ids = self.keys[cut:], self.ids[cut:]
-        self.payload = None if self.payload is None else self.payload[cut:]
-        self.k64 = self.k64[cut:]
-        return out
-
-
-def _merge_fragments(frags, payload_words: int):
-    """Merge already-sorted fragments (one per run) into one sorted batch.
-
-    Fragment keys are globally unique (key<<32|id with unique ids), so a
-    plain stable argsort over the concatenated packed keys is an exact
-    k-way merge of the emit window — small (≤ runs x chunk records) by
-    construction, which is the whole point of the streaming reduce.
-    """
-    frags = [f for f in frags if f[3].size]
-    if not frags:
-        empty = np.empty((0,), np.uint32)
-        pw = int(payload_words)
-        return empty, empty, (np.empty((0, pw), np.uint32) if pw else None)
-    if len(frags) == 1:
-        k, i, p, _ = frags[0]
-        return k, i, p
-    k64 = np.concatenate([f[3] for f in frags])
-    order = np.argsort(k64, kind="stable")
-    keys = np.concatenate([f[0] for f in frags])[order]
-    ids = np.concatenate([f[1] for f in frags])[order]
-    payload = None
-    if payload_words:
-        payload = np.concatenate([f[2] for f in frags])[order]
-    return keys, ids, payload
-
-
-class _SiblingFailed(Exception):
-    """Internal: this reducer was cancelled because another one failed."""
-
-
-def _reduce_chunking(plan: ExternalSortPlan, runs: int,
-                     active: int) -> tuple[int, int]:
-    """(chunk_records, chunk_bytes) per run under the global budget.
-
-    This is the STATIC fair split — the governor's starting point and the
-    up-front feasibility check: with a budget, each of the `active`
-    concurrent reducers gets an equal share, split over its `runs`
-    cursors and capped at merge_chunk_bytes; the all-reducer total
-    active x runs x chunk therefore never exceeds the budget. Without
-    one, every cursor buffers merge_chunk_bytes. At runtime the adaptive
-    governor only ever grants MORE than this (never less), drawing on
-    budget freed by retired reducers.
-    """
-    rb = plan.record_bytes
-    if plan.merge_chunk_bytes < rb:
-        raise ValueError(
-            f"merge_chunk_bytes={plan.merge_chunk_bytes} must hold at least "
-            f"one {rb}-byte record, else the reduce-memory bound cannot be met"
-        )
-    chunk_bytes = plan.merge_chunk_bytes
-    if plan.reduce_memory_budget_bytes:
-        share = plan.reduce_memory_budget_bytes // max(active, 1)
-        chunk_bytes = min(chunk_bytes, share // max(runs, 1))
-        if chunk_bytes < rb:
-            raise ValueError(
-                f"reduce_memory_budget_bytes={plan.reduce_memory_budget_bytes}"
-                f" cannot give each of {active} concurrent reducers one "
-                f"{rb}-byte record per run ({runs} runs each) — raise the "
-                "budget or lower parallel_reducers"
-            )
-    return chunk_bytes // rb, chunk_bytes
-
-
 def _validate_plan(plan: ExternalSortPlan, w: int) -> None:
-    """Plan validation shared by the single-host and cluster drivers.
-
-    ValueError, not assert: must survive python -O.
+    """Plan validation shared by every sort entry point, including the
+    mesh-dependent divisibility check. ValueError, not assert: must
+    survive python -O.
     """
-    if plan.records_per_wave % (w * plan.num_rounds) != 0:
-        raise ValueError(
-            "records_per_wave must divide evenly into per-worker rounds"
-        )
-    if plan.parallel_reducers < 1:
-        raise ValueError(f"parallel_reducers must be >= 1, "
-                         f"got {plan.parallel_reducers}")
-    if plan.part_upload_fanout < 1:
-        raise ValueError(f"part_upload_fanout must be >= 1, "
-                         f"got {plan.part_upload_fanout}")
-
-
-def _timed_part(timeline: PhaseTimeline, tag: str, mp, index: int,
-                data: bytes) -> None:
-    """Background part upload, recorded as a reduce.upload span."""
-    t = time.perf_counter()
-    mp.put_part(index, data)
-    timeline.add("reduce.upload", t, worker=tag)
-
-
-def _finalize_session(timeline: PhaseTimeline, tag: str,
-                      uploader: staging.AsyncWriter, mp,
-                      on_done: Callable[[], None] | None = None) -> None:
-    """Background session finisher: wait for the partition's in-flight
-    parts, then commit — or abort on any failure (a truncated commit
-    would carry a self-consistent CRC etag IntegrityError can't catch).
-    Running this off the merge thread is what lets a reducer's scheduler
-    slot free while its tail uploads still stream (partition r's uploads
-    overlap partition r+active's merge even at parallel_reducers=1).
-    `on_done` fires only after the commit succeeds — the durability
-    confirmation the cluster driver uses to decide what a dead worker
-    still owed."""
-    t = time.perf_counter()
-    try:
-        uploader.close()  # waits all parts; re-raises the first failure
-    except BaseException:
-        mp.abort()
-        raise
-    try:
-        mp.complete()
-    except BaseException:
-        mp.abort()
-        raise
-    finally:
-        timeline.add("reduce.upload_wait", t, worker=tag)
-    if on_done is not None:
-        on_done()
-
-
-def _timed_spill(timeline: PhaseTimeline, tag: str, store, bucket: str,
-                 key: str, data: bytes, metadata: dict) -> None:
-    """Background spill put, recorded as a map.spill span."""
-    t = time.perf_counter()
-    store.put(bucket, key, data, metadata=metadata)
-    timeline.add("map.spill", t, worker=tag)
+    plan.validate()
+    require(plan.records_per_wave % (w * plan.num_rounds) == 0,
+            "records_per_wave", plan.records_per_wave,
+            f"must divide evenly into {w} mesh workers x "
+            f"{plan.num_rounds} rounds")
 
 
 class WaveSorter:
     """Map-side building block: load a wave zero-copy, sort it across the
     mesh, spill per-mesh-worker runs.
 
-    Shared by the single-host driver below and by every cluster worker
-    (core/cluster.py). Deterministic by construction: the spilled run
-    bytes and reducer offsets depend only on (wave contents, plan, mesh
-    width) — never on which scheduler or emulated worker executes the
-    wave — which is what keeps cluster output byte-identical to the
+    Wrapped by shuffle/sort.SortMapOp, which is how the single-host and
+    cluster drivers reach it. Deterministic by construction: the spilled
+    run bytes and reducer offsets depend only on (wave contents, plan,
+    mesh width) — never on which scheduler or emulated worker executes
+    the wave — which is what keeps cluster output byte-identical to the
     single-host run at any worker count and under re-execution.
     """
 
@@ -806,345 +391,6 @@ class WaveSorter:
         timeline.add("map.compute", t_comp, worker=tag)
 
 
-@dataclasses.dataclass
-class JobSetup:
-    """Shared preflight for the single-host and cluster drivers: the
-    validated wave grouping, budget feasibility + governor, and baseline
-    store counters (captured after stale-prefix cleanup) — one source of
-    truth so the two drivers cannot drift."""
-
-    sorter: WaveSorter
-    total: int
-    waves: list
-    num_waves: int
-    num_reducers: int
-    slots: int  # cluster-wide concurrent merge ceiling (governor S0 basis)
-    chunk_bytes: int  # the static fair-share chunk (reported + floor)
-    governor: AdaptiveBudgetGovernor
-    base_stats: StoreStats
-    tier_base: dict | None
-
-
-def prepare_job(store: StoreBackend, bucket: str, plan: ExternalSortPlan,
-                mesh, axis_names, *, schedulers: int = 1) -> JobSetup:
-    """Validate the plan, group waves, check budget feasibility, and clear
-    stale spill/output prefixes — before any wave is fetched (and billed).
-
-    `schedulers` is how many reduce schedulers will run concurrently
-    (1 single-host; the worker count for core/cluster.py): the governor's
-    slot count — and therefore the static fair share every reducer is
-    guaranteed — is schedulers x plan.parallel_reducers, capped at the
-    partition count.
-    """
-    sorter = WaveSorter(plan, mesh, axis_names)
-    inputs = store.list_objects(bucket, plan.input_prefix)
-    if not inputs:
-        raise ValueError(f"no input objects under {plan.input_prefix!r}")
-    counts = [(m.size - rec.HEADER_BYTES) // plan.record_bytes
-              for m in inputs]
-    waves = _group_waves(inputs, counts, plan.records_per_wave)
-    num_reducers = sorter.w * sorter.r1
-    slots = min(max(int(schedulers), 1) * plan.parallel_reducers,
-                num_reducers)
-    _, chunk_bytes = _reduce_chunking(plan, len(waves), slots)
-    governor = AdaptiveBudgetGovernor(
-        budget=plan.reduce_memory_budget_bytes,
-        chunk_cap=plan.merge_chunk_bytes,
-        record_bytes=plan.record_bytes,
-        slots=slots,
-        partitions=num_reducers,
-    )
-    # Overwrite semantics: clear stale spill/output objects from any prior
-    # run so the reduce pass and downstream validation see only this run.
-    for prefix in (plan.spill_prefix, plan.output_prefix):
-        for meta in store.list_objects(bucket, prefix):
-            store.delete(bucket, meta.key)
-    return JobSetup(
-        sorter=sorter,
-        total=sum(counts),
-        waves=waves,
-        num_waves=len(waves),
-        num_reducers=num_reducers,
-        slots=slots,
-        chunk_bytes=chunk_bytes,
-        governor=governor,
-        base_stats=store.stats_snapshot(),
-        tier_base=(store.per_tier_stats()
-                   if hasattr(store, "per_tier_stats") else None),
-    )
-
-
-def build_report(setup: JobSetup, store: StoreBackend,
-                 plan: ExternalSortPlan, *, map_seconds: float,
-                 reduce_seconds: float, peak: _PeakTracker,
-                 timeline: PhaseTimeline) -> ExternalSortReport:
-    """Assemble the run report from the shared setup + measured state —
-    the one place the report contract is populated, for both drivers."""
-    tier_stats = None
-    if setup.tier_base is not None:
-        tier_now = store.per_tier_stats()
-        tier_stats = {name: tier_now[name] - setup.tier_base[name]
-                      for name in tier_now}
-    return ExternalSortReport(
-        total_records=setup.total,
-        num_waves=setup.num_waves,
-        num_workers=setup.sorter.w,
-        num_reducers=setup.num_reducers,
-        spill_objects=setup.num_waves * setup.sorter.w,
-        output_objects=setup.num_reducers,
-        map_seconds=map_seconds,
-        reduce_seconds=reduce_seconds,
-        working_set_records=plan.records_per_wave,
-        stats=store.stats_snapshot() - setup.base_stats,
-        runs_per_reducer=setup.num_waves,
-        merge_chunk_bytes=plan.merge_chunk_bytes,
-        reduce_chunk_bytes=setup.chunk_bytes,
-        reduce_chunk_bytes_max=setup.governor.max_chunk_bytes,
-        reduce_peak_merge_bytes=peak.peak,
-        parallel_reducers=setup.slots,
-        reduce_memory_budget_bytes=plan.reduce_memory_budget_bytes,
-        tier_stats=tier_stats,
-        spans=timeline.spans(),
-        spans_dropped=timeline.dropped,
-        phase_seconds=timeline.totals(),
-    )
-
-
-@dataclasses.dataclass
-class ReduceShared:
-    """Job-level shared state for one sort's reduce pass — shared across
-    every ReduceScheduler (one on a single host, one per cluster worker),
-    so the budget governor, peak accounting, cancellation, and timeline
-    stay global while the schedulers stay per-worker."""
-
-    plan: ExternalSortPlan
-    bucket: str
-    num_waves: int
-    r1: int  # reducers per mesh worker (partition -> run-slice mapping)
-    spill_offsets: dict
-    governor: AdaptiveBudgetGovernor
-    timeline: PhaseTimeline
-    peak: _PeakTracker
-    control: JobControl
-
-
-class ReduceScheduler:
-    """One host's (or one emulated cluster worker's) reduce scheduler.
-
-    Pulls partition ids from `pop_next` and runs up to `width` streaming
-    k-way merges concurrently against `store`, sharing the job-level
-    governor/peak/cancellation through `shared`. Failure taxonomy:
-
-      * exceptions of a type in `fatal` mean THIS scheduler's worker died
-        (core/cluster.WorkerFailure): the scheduler unwinds and re-raises
-        so the cluster driver can re-execute unconfirmed partitions on
-        survivors — the job keeps going;
-      * any other exception is a job failure: it is recorded on
-        shared.control (which cancels every scheduler) and the driver
-        re-raises it after the barrier.
-
-    A partition only counts as done (`on_done`) after its multipart
-    session COMMITS — merge completion is not durability.
-    """
-
-    def __init__(self, store: StoreBackend, shared: ReduceShared, *,
-                 width: int, fatal: tuple = (), tag_prefix: str = ""):
-        self.store = store
-        self.shared = shared
-        self.width = max(int(width), 1)
-        self.fatal = tuple(fatal)
-        self.tag_prefix = tag_prefix
-
-    def run(self, pop_next: Callable[[], int | None],
-            on_done: Callable[[int], None] | None = None) -> None:
-        """Drain partitions until the queue is empty, the job is
-        cancelled, or this scheduler's worker dies (re-raised)."""
-        shared = self.shared
-        plan = shared.plan
-        refill_pool = ThreadPoolExecutor(
-            max_workers=min(16, max(2, shared.num_waves * self.width)),
-            thread_name_prefix="reduce-refill")
-        finishers = staging.AsyncWriter(
-            max(plan.max_inflight_writes, self.width), max_workers=self.width,
-            thread_name_prefix="reduce-finish")
-        dead_lock = threading.Lock()
-        dead: list[BaseException] = []
-        dead_evt = threading.Event()
-
-        def loop() -> None:
-            while not (shared.control.cancel.is_set() or dead_evt.is_set()):
-                try:
-                    r = pop_next()
-                except self.fatal as e:  # the worker died at the queue
-                    with dead_lock:
-                        dead.append(e)
-                    dead_evt.set()
-                    return
-                if r is None:
-                    return
-                try:
-                    self._reduce_one(r, refill_pool, finishers, on_done)
-                except _SiblingFailed:
-                    pass  # aborted cleanly; the root cause is recorded
-                except self.fatal as e:  # worker death: stop this scheduler
-                    with dead_lock:
-                        dead.append(e)
-                    dead_evt.set()
-                    return
-                except BaseException as e:  # real failure: cancel the job
-                    shared.control.fail(e)
-                    return
-
-        threads = [threading.Thread(target=loop, name=f"reduce-merge-{i}")
-                   for i in range(self.width)]
-        try:
-            for t in threads:
-                t.start()
-        finally:
-            for t in threads:
-                t.join()
-            refill_pool.shutdown(wait=True)
-            try:
-                finishers.close()  # re-raises the first finisher failure
-            except self.fatal as e:
-                # Death during commit: those partitions never confirmed,
-                # so the cluster driver will re-execute them.
-                with dead_lock:
-                    dead.append(e)
-            except BaseException as e:
-                shared.control.fail(e)
-        if dead:
-            raise dead[0]
-
-    # -- internals ---------------------------------------------------------
-
-    def _run_slices(self, r: int):
-        """[(spill key, lo, hi)] of partition r's non-empty run slices."""
-        shared = self.shared
-        wid, j = divmod(r, shared.r1)
-        slices, n_total = [], 0
-        for g in range(shared.num_waves):
-            offs = shared.spill_offsets[(g, wid)]
-            lo, hi = int(offs[j]), int(offs[j + 1])
-            if hi > lo:
-                slices.append((_spill_key(shared.plan, g, wid), lo, hi))
-                n_total += hi - lo
-        return slices, n_total
-
-    def _reduce_one(self, r: int, refill_pool, finishers,
-                    on_done: Callable[[int], None] | None) -> None:
-        shared = self.shared
-        plan = shared.plan
-        store = self.store
-        timeline = shared.timeline
-        governor = shared.governor
-        pw = plan.payload_words
-        rb = plan.record_bytes
-        part_bytes = plan.output_part_records * rb
-        tag = f"{self.tag_prefix}r{r}"
-        slices, n_total = self._run_slices(r)
-        registered = bool(slices)
-        chunk_records = 0
-        if registered:
-            chunk = governor.register(
-                r, len(slices), abort=shared.control.cancel.is_set)
-            if chunk is None:
-                raise _SiblingFailed()
-            chunk_records = chunk // rb
-        cursors = [
-            _RunCursor(store, shared.bucket, key, lo, hi, pw, chunk_records)
-            for key, lo, hi in slices
-        ]
-        mp = store.multipart(shared.bucket, _output_key(plan, r),
-                             metadata={"records": n_total, "reducer": r})
-        # max_inflight >= fanout, or the backpressure semaphore would
-        # silently cap concurrent part uploads below the fan-out width.
-        uploader = staging.AsyncWriter(
-            max(plan.max_inflight_writes, plan.part_upload_fanout),
-            max_workers=plan.part_upload_fanout)
-        next_part = 0
-
-        def submit_part(data: bytes) -> None:
-            nonlocal next_part
-            idx, next_part = next_part, next_part + 1
-            t = time.perf_counter()  # blocks under upload backpressure
-            uploader.submit(_timed_part, timeline, tag, mp, idx, data)
-            timeline.add("reduce.upload_wait", t, worker=tag)
-
-        try:
-            # Record count is known up front (sum of run-slice
-            # lengths), so the header streams first, body follows.
-            outbuf = bytearray(rec.encode_header(n_total, pw))
-            while cursors:
-                if shared.control.cancel.is_set():
-                    raise _SiblingFailed()
-                if registered:
-                    # Adaptive governor: soak up budget freed by retired
-                    # reducers — the per-run chunk can only grow.
-                    grown = governor.grow(r) // rb
-                    if grown != chunk_records:
-                        chunk_records = grown
-                        for c in cursors:
-                            c.set_chunk(grown)
-                need = [c for c in cursors
-                        if c.k64.size == 0 and c.has_more_remote]
-                if need:
-                    t = time.perf_counter()
-                    if len(need) == 1:
-                        need[0].refill()
-                    else:  # concurrent ranged GETs: one RTT per cycle
-                        list(refill_pool.map(_RunCursor.refill, need))
-                    timeline.add("reduce.fetch", t, worker=tag)
-                shared.peak.update(r, sum(c.buffered_bytes for c in cursors))
-                t = time.perf_counter()
-                # Safe emit bound: the smallest last-buffered key among
-                # runs that still have un-fetched records — nothing
-                # later can sort below it. When no run has remote data
-                # left, everything buffered is emittable.
-                remote_tails = [c.k64[-1] for c in cursors
-                                if c.has_more_remote]
-                bound = min(remote_tails) if remote_tails else None
-                frags = [c.take_upto(bound) for c in cursors]
-                cursors = [c for c in cursors if not c.exhausted]
-                mk, mi, mpay = _merge_fragments(frags, pw)
-                if mk.size:
-                    outbuf += rec.encode_body(mk, mi, mpay)
-                timeline.add("reduce.merge", t, worker=tag)
-                while len(outbuf) >= part_bytes:
-                    submit_part(bytes(outbuf[:part_bytes]))
-                    del outbuf[:part_bytes]
-            # >= 1 part always: an empty partition still has a header.
-            if outbuf or n_total == 0:
-                submit_part(bytes(outbuf))
-        except BaseException:
-            # Merge or upload died mid-session: let in-flight parts
-            # settle, then discard the session — never commit it.
-            try:
-                uploader.drain()
-            except BaseException:
-                pass
-            try:
-                mp.abort()
-            except BaseException:
-                pass  # a dead worker's abort fails too; parts are orphaned
-            finally:
-                shared.peak.clear(r)
-                if registered:
-                    governor.retire(r, completed=False)
-                uploader.close()
-            raise
-        # Success: hand drain + complete to the finisher queue so this
-        # scheduler slot frees while the tail parts still upload —
-        # finishers.submit blocks once max(max_inflight_writes, width)
-        # sessions await completion (cross-partition upload backpressure).
-        shared.peak.clear(r)
-        if registered:
-            governor.retire(r)
-        confirm = None if on_done is None else (lambda: on_done(r))
-        finishers.submit(_finalize_session, timeline, tag, uploader, mp,
-                         confirm)
-
-
 def external_sort(
     store: StoreBackend,
     bucket: str,
@@ -1155,73 +401,25 @@ def external_sort(
 ) -> ExternalSortReport:
     """Sort every record under plan.input_prefix into plan.output_prefix.
 
+    DEPRECATED shim (kept byte- and etag-identical to the pre-refactor
+    driver): build the job through the library instead —
+
+        from repro.shuffle.sort import sort_shuffle_job
+        sort_shuffle_job(store, bucket, mesh=mesh, axis_names=axis_names,
+                         plan=plan).run(workers=0)
+
     `store` is any io/backends.StoreBackend — the plain ObjectStore, a
     fault-injected middleware stack, or a TieredStore (in which case the
     report carries per-tier request deltas). Input objects must be
     io/records-encoded with plan.payload_words words of payload and
     globally unique ids (data/gensort.write_to_store's layout). Returns
     the run report; validate the output with data/valsort.validate_from_store.
-
-    This is the single-host driver; core/cluster.ClusterExecutor runs the
-    same schedule partitioned across N emulated workers with failure
-    recovery, and produces byte-identical output.
     """
-    # Budget feasibility is pure plan validation — prepare_job fails
-    # before any map wave is fetched/sorted/spilled (and billed).
-    setup = prepare_job(store, bucket, plan, mesh, axis_names)
-    sorter = setup.sorter
+    warnings.warn(
+        "external_sort() is a deprecated shim; use "
+        "repro.shuffle.sort.sort_shuffle_job(...).run(workers=0)",
+        DeprecationWarning, stacklevel=2)
+    from repro.shuffle.sort import sort_shuffle_job
 
-    # ---- map waves: stream in (zero-copy) -> sort -> spill runs -------
-    spill_offsets: dict[tuple[int, int], np.ndarray] = {}
-    t0 = time.perf_counter()
-    timeline = PhaseTimeline(origin=t0)
-    control = JobControl()
-    with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
-        wave_loads = (lambda objs=objs: sorter.load_wave(store, bucket, objs)
-                      for objs in setup.waves)
-        wave_iter = iter(staging.prefetch(
-            wave_loads, depth=plan.prefetch_depth,
-            retries=plan.io_retries, retry_on=(RetryableError,)))
-        g = 0
-        while True:
-            t_wait = time.perf_counter()
-            try:
-                keys, ids, payload = next(wave_iter)
-            except StopIteration:
-                break
-            tag = f"g{g}"
-            timeline.add("map.wait", t_wait, worker=tag)
-            sorter.compute_and_spill(
-                store, bucket, g, keys, ids, payload, spiller=spiller,
-                timeline=timeline, tag=tag, offsets_out=spill_offsets)
-            g += 1
-    map_seconds = time.perf_counter() - t0
-
-    # ---- reduce: scheduler of streaming k-way merges ------------------
-    # Memory contract: `slots` merges run concurrently, each of their
-    # (≤ num_waves) run cursors buffering at most the governor-granted
-    # chunk of decoded records; grants are apportioned from the global
-    # reduce_memory_budget_bytes when one is set and re-apportioned as
-    # reducers retire (AdaptiveBudgetGovernor). Output bytes are
-    # independent of the schedule — see the module docstring.
-    peak = _PeakTracker()
-    shared = ReduceShared(
-        plan=plan, bucket=bucket, num_waves=setup.num_waves, r1=sorter.r1,
-        spill_offsets=spill_offsets, governor=setup.governor,
-        timeline=timeline, peak=peak, control=control,
-    )
-    pending = collections.deque(range(setup.num_reducers))
-    pop_lock = threading.Lock()
-
-    def pop_next() -> int | None:
-        with pop_lock:
-            return pending.popleft() if pending else None
-
-    t0 = time.perf_counter()
-    ReduceScheduler(store, shared, width=setup.slots).run(pop_next)
-    control.raise_first()
-    reduce_seconds = time.perf_counter() - t0
-
-    return build_report(setup, store, plan, map_seconds=map_seconds,
-                        reduce_seconds=reduce_seconds, peak=peak,
-                        timeline=timeline)
+    return sort_shuffle_job(store, bucket, mesh=mesh, axis_names=axis_names,
+                            plan=plan).run(workers=0)

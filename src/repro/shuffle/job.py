@@ -1,0 +1,257 @@
+"""ShuffleJob / ShuffleSession: the library front end.
+
+A ShuffleJob is a workload description — store + bucket + plan + the
+three operators and a partitioner. One `job.run(workers=N)` call owns
+everything the drivers used to hand-roll per workload:
+
+  * plan validation (api.validate_dataflow_plan + the plan's own
+    `validate`) and operator preflight, before any input byte is billed;
+  * wave/split enumeration via MapOp.plan_tasks, budget feasibility
+    (runtime.reduce_chunking) and the AdaptiveBudgetGovernor, sized to
+    the cluster-wide merge concurrency;
+  * stale spill/output prefix cleanup and baseline store counters, so
+    the report's measured traffic is this run's alone;
+  * the span timeline and job-wide cancellation;
+  * execution: inline single-host (workers=0) or the multi-worker phase
+    driver with durable-confirmation failure recovery (workers>=1, or an
+    explicit Worker fleet for failure injection).
+
+The sort and group-by instantiations (shuffle/sort.py,
+shuffle/groupby.py) differ only in the operators they pass here — which
+is the paper's point.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Sequence
+
+from repro.io.backends import StoreBackend, StoreStats
+
+from repro.shuffle import executor as ex
+from repro.shuffle import runtime as rt
+from repro.shuffle.api import (ClusterShuffleReport, MapOp, Partitioner,
+                               ReduceOp, ShuffleReport, require,
+                               validate_dataflow_plan)
+
+
+class ShuffleSession:
+    """One prepared run of a ShuffleJob: validated plan, enumerated map
+    tasks, feasibility-checked budget governor, cleared prefixes, and
+    baseline store counters. Create via ShuffleJob.prepare()/run() —
+    a session is single-use (the governor and operator state are one
+    run's)."""
+
+    def __init__(self, job: "ShuffleJob", *, schedulers: int):
+        store, bucket, plan = job.store, job.bucket, job.plan
+        self.job = job
+        # Validation first: fail before any input byte is fetched/billed.
+        if hasattr(plan, "validate"):
+            plan.validate()
+        else:
+            validate_dataflow_plan(plan)
+        self.num_tasks = job.map_op.plan_tasks(store, bucket)
+        require(self.num_tasks >= 1, "input_prefix", plan.input_prefix,
+                "MapOp.plan_tasks found no input splits")
+        self.num_partitions = job.partitioner.num_partitions
+        # Governor slots = the cluster-wide concurrent-merge ceiling:
+        # every scheduler (one per worker) draws on one global budget.
+        self.slots = min(max(int(schedulers), 1) * plan.parallel_reducers,
+                         self.num_partitions)
+        # Budget feasibility is pure plan validation (each partition
+        # streams at most one run per map task).
+        _, self.chunk_bytes = rt.reduce_chunking(
+            plan, self.num_tasks, self.slots)
+        self.governor = rt.AdaptiveBudgetGovernor(
+            budget=plan.reduce_memory_budget_bytes,
+            chunk_cap=plan.merge_chunk_bytes,
+            record_bytes=plan.record_bytes,
+            slots=self.slots,
+            partitions=self.num_partitions,
+        )
+        # Overwrite semantics: clear stale spill/output objects from any
+        # prior run so the reduce pass and downstream validation see only
+        # this run.
+        for prefix in (plan.spill_prefix, plan.output_prefix):
+            for meta in store.list_objects(bucket, prefix):
+                store.delete(bucket, meta.key)
+        # Bare data planes (no MetricsMiddleware anywhere) still run;
+        # their reports just carry zeroed counters.
+        self.base_stats = (store.stats_snapshot()
+                           if hasattr(store, "stats_snapshot")
+                           else StoreStats())
+        self.tier_base = (store.per_tier_stats()
+                          if hasattr(store, "per_tier_stats") else None)
+        # Run-scoped execution state.
+        self.timeline = rt.PhaseTimeline(origin=time.perf_counter())
+        self.control = rt.JobControl()
+        self.peak = rt.PeakTracker()
+        self.shared = rt.ReduceShared(
+            plan=plan, bucket=bucket, reduce_op=job.reduce_op,
+            governor=self.governor, timeline=self.timeline, peak=self.peak,
+            control=self.control,
+        )
+
+    # -- execution ---------------------------------------------------------
+
+    def run_single_host(self) -> ShuffleReport:
+        """The inline driver: one staged map loop, one reduce scheduler
+        running `slots` streaming merges."""
+        job = self.job
+        store, bucket, plan = job.store, job.bucket, job.plan
+        t0 = time.perf_counter()
+        pending = collections.deque(range(self.num_tasks))
+        pop_lock = threading.Lock()
+
+        def pop_task() -> int | None:
+            with pop_lock:
+                return pending.popleft() if pending else None
+
+        rt.run_map_tasks(store, bucket, job.map_op, pop_task, plan=plan,
+                         timeline=self.timeline, control=self.control)
+        map_seconds = time.perf_counter() - t0
+
+        parts = collections.deque(range(self.num_partitions))
+
+        def pop_partition() -> int | None:
+            with pop_lock:
+                return parts.popleft() if parts else None
+
+        t0 = time.perf_counter()
+        rt.ReduceScheduler(store, self.shared, width=self.slots,
+                           runs_hint=self.num_tasks).run(pop_partition)
+        self.control.raise_first()
+        reduce_seconds = time.perf_counter() - t0
+        return self.build_report(map_seconds=map_seconds,
+                                 reduce_seconds=reduce_seconds)
+
+    def run_cluster(self,
+                    workers: Sequence[ex.Worker]) -> ClusterShuffleReport:
+        """The multi-worker driver: two barriered phases of rounds over
+        the surviving fleet, re-executing whatever a dead worker never
+        durably confirmed (see shuffle/executor.PhaseDriver)."""
+        job = self.job
+        ctx = ex.WorkerContext(
+            plan=job.plan, bucket=job.bucket, map_op=job.map_op,
+            reduce_shared=self.shared, timeline=self.timeline,
+            control=self.control, num_map_tasks=self.num_tasks,
+        )
+        driver = ex.PhaseDriver(workers)
+
+        t_origin = time.perf_counter()
+        reexec_map = driver.run_phase(
+            "map", list(range(self.num_tasks)),
+            lambda wk, pop, done: wk.run_map_phase(ctx, pop, done),
+            self.control)
+        map_seconds = time.perf_counter() - t_origin
+
+        t_reduce = time.perf_counter()
+        reexec_reduce = driver.run_phase(
+            "reduce", list(range(self.num_partitions)),
+            lambda wk, pop, done: wk.run_reduce_phase(ctx, pop, done),
+            self.control)
+        reduce_seconds = time.perf_counter() - t_reduce
+
+        return ClusterShuffleReport(
+            report=self.build_report(map_seconds=map_seconds,
+                                     reduce_seconds=reduce_seconds),
+            num_cluster_workers=len(driver.workers),
+            failed_workers=list(driver.failed_workers),
+            reexecuted_map_tasks=reexec_map,
+            reexecuted_reduce_tasks=reexec_reduce,
+            map_tasks=self.num_tasks,
+            reduce_tasks=self.num_partitions,
+            per_worker_stats=driver.per_worker_stats(),
+            per_worker_tasks=dict(driver.per_worker_tasks),
+        )
+
+    # -- reporting ---------------------------------------------------------
+
+    def build_report(self, *, map_seconds: float,
+                     reduce_seconds: float) -> ShuffleReport:
+        """Assemble the run report from the session + measured state —
+        the one place the report contract is populated, for every
+        workload and both execution modes."""
+        job = self.job
+        store, plan, map_op = job.store, job.plan, job.map_op
+        tier_stats = None
+        if self.tier_base is not None:
+            tier_now = store.per_tier_stats()
+            tier_stats = {name: tier_now[name] - self.tier_base[name]
+                          for name in tier_now}
+        return ShuffleReport(
+            total_records=map_op.total_records,
+            num_waves=self.num_tasks,
+            num_workers=map_op.num_mesh_workers,
+            num_reducers=self.num_partitions,
+            spill_objects=self.num_tasks * map_op.spill_objects_per_task,
+            output_objects=self.num_partitions,
+            map_seconds=map_seconds,
+            reduce_seconds=reduce_seconds,
+            working_set_records=map_op.working_set_records,
+            stats=(store.stats_snapshot() - self.base_stats
+                   if hasattr(store, "stats_snapshot") else StoreStats()),
+            runs_per_reducer=self.num_tasks,
+            merge_chunk_bytes=plan.merge_chunk_bytes,
+            reduce_chunk_bytes=self.chunk_bytes,
+            reduce_chunk_bytes_max=self.governor.max_chunk_bytes,
+            reduce_peak_merge_bytes=self.peak.peak,
+            parallel_reducers=self.slots,
+            reduce_memory_budget_bytes=plan.reduce_memory_budget_bytes,
+            tier_stats=tier_stats,
+            spans=self.timeline.spans(),
+            spans_dropped=self.timeline.dropped,
+            phase_seconds=self.timeline.totals(),
+        )
+
+
+class ShuffleJob:
+    """A shuffle workload: operators + partitioner + plan over one store.
+
+    The public entry point of the library. `run(workers=N)` executes the
+    whole dataflow — N=0 inline on the calling host, N>=1 across N
+    emulated workers with application-level failure recovery; pass
+    `cluster=` (a shuffle/executor.ClusterPlan) to inject worker deaths,
+    or `worker_list=` to bring a hand-built Worker fleet.
+    """
+
+    def __init__(self, store: StoreBackend, bucket: str, *, plan,
+                 map_op: MapOp, reduce_op: ReduceOp,
+                 partitioner: Partitioner):
+        self.store = store
+        self.bucket = bucket
+        self.plan = plan
+        self.map_op = map_op
+        self.reduce_op = reduce_op
+        self.partitioner = partitioner
+
+    def prepare(self, *, schedulers: int = 1) -> ShuffleSession:
+        """Preflight one run (validation, task enumeration, governor,
+        prefix cleanup) without executing it. `schedulers` is how many
+        reduce schedulers will draw on the global budget (1 single-host;
+        the worker count in cluster mode)."""
+        return ShuffleSession(self, schedulers=schedulers)
+
+    def run(self, workers: int = 0, *,
+            cluster: ex.ClusterPlan | None = None,
+            worker_list: Sequence[ex.Worker] | None = None):
+        """Execute the job; returns a ShuffleReport (single-host) or a
+        ClusterShuffleReport (cluster mode)."""
+        if worker_list is not None:
+            fleet: Sequence[ex.Worker] | None = list(worker_list)
+        elif cluster is not None:
+            fleet = ex.build_workers(self.store, cluster)
+        elif workers >= 1:
+            fleet = ex.build_workers(self.store,
+                                     ex.ClusterPlan(num_workers=workers))
+        else:
+            fleet = None
+        if fleet is None:
+            return self.prepare(schedulers=1).run_single_host()
+        require(len(fleet) >= 1, "worker_list", len(fleet),
+                "must supply >= 1 worker")
+        return self.prepare(schedulers=len(fleet)).run_cluster(fleet)
+
+
+__all__ = ["ShuffleJob", "ShuffleSession"]

@@ -1,0 +1,771 @@
+"""The shuffle engine room: staging loops, streaming merges, governance.
+
+Everything here used to live inside core/external_sort.py and was
+sort-flavoured by accident, not by necessity: span timelines, job-wide
+cancellation, the adaptive reduce-memory governor, bounded run cursors,
+the reduce scheduler, and the prefetched map loop are workload-agnostic
+once the workload-specific decisions are pushed behind the MapOp /
+ReduceOp / PartitionReducer protocols (shuffle/api.py). The sort keeps
+its exact byte behaviour — SortMapOp / MergeReduceOp (shuffle/sort.py)
+wrap the same WaveSorter / k-way-merge bodies this code used to call
+directly — and any other workload (shuffle/groupby.py) gets the same
+staging, budget, and fault-recovery machinery for free.
+
+Memory contract (the reduce side): up to `slots` streaming reducers run
+concurrently, each holding at most `runs x chunk` decoded bytes, where
+chunks are granted by the AdaptiveBudgetGovernor out of the plan's
+global `reduce_memory_budget_bytes` — see the governor docstring for
+the provable bound. Encoded output parts being sliced/uploaded sit on
+top (~(1 + max_inflight_writes) x part bytes per active reducer).
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable
+
+import numpy as np
+
+from repro.io import records as rec
+from repro.io import staging
+from repro.io.backends import RetryableError, StoreBackend
+
+from repro.shuffle.api import MapOp, ReduceOp, require
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One recorded phase interval, seconds relative to the job start."""
+
+    phase: str  # e.g. "map.compute", "reduce.upload"
+    start: float
+    end: float
+    worker: str = ""  # "w3" map task / "r12" reducer tag
+
+    @property
+    def seconds(self) -> float:
+        return self.end - self.start
+
+
+class PhaseTimeline:
+    """Thread-safe span recorder for the per-phase timeline.
+
+    Aggregate per-phase totals are exact; the raw span list is capped at
+    `max_spans` (oldest kept) so a huge run cannot hoard memory — the
+    report's `spans_dropped` says how many were dropped. Because spans from overlapping
+    threads both count wall time, a phase total larger than the enclosing
+    stage's wall time is *measured overlap*, which is the point.
+    """
+
+    def __init__(self, origin: float, *, max_spans: int = 4096):
+        self._origin = origin
+        self._lock = threading.Lock()
+        self._totals: dict[str, float] = {}
+        self._spans: list[Span] = []
+        self._max = int(max_spans)
+        self.dropped = 0
+
+    def add(self, phase: str, start: float, end: float | None = None,
+            *, worker: str = "") -> None:
+        end = time.perf_counter() if end is None else end
+        span = Span(phase, start - self._origin, end - self._origin, worker)
+        with self._lock:
+            self._totals[phase] = self._totals.get(phase, 0.0) + span.seconds
+            if len(self._spans) < self._max:
+                self._spans.append(span)
+            else:
+                self.dropped += 1
+
+    @contextlib.contextmanager
+    def span(self, phase: str, worker: str = ""):
+        t = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(phase, t, worker=worker)
+
+    def totals(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._totals)
+
+    def spans(self) -> list[Span]:
+        with self._lock:
+            return list(self._spans)
+
+
+class PeakTracker:
+    """Thread-safe global peak of summed per-reducer buffered merge bytes —
+    the measurement behind the reduce_memory_budget_bytes guarantee."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._per: dict[int, int] = {}
+        self._total = 0
+        self.peak = 0
+
+    def update(self, rid: int, nbytes: int) -> None:
+        with self._lock:
+            self._total += nbytes - self._per.get(rid, 0)
+            self._per[rid] = nbytes
+            if self._total > self.peak:
+                self.peak = self._total
+
+    def clear(self, rid: int) -> None:
+        with self._lock:
+            self._total -= self._per.pop(rid, 0)
+
+
+class JobControl:
+    """Job-wide cancellation + first-failure collection.
+
+    Shared by every scheduler (and, in cluster mode, every worker) of one
+    job: a real failure anywhere cancels the whole job, and the
+    chronologically first exception is what the driver re-raises.
+    """
+
+    def __init__(self):
+        self.cancel = threading.Event()
+        self._lock = threading.Lock()
+        self._first: list[BaseException] = []
+
+    def fail(self, e: BaseException) -> None:
+        with self._lock:
+            if not self._first:
+                self._first.append(e)
+        self.cancel.set()
+
+    @property
+    def failed(self) -> bool:
+        with self._lock:
+            return bool(self._first)
+
+    def raise_first(self) -> None:
+        with self._lock:
+            if self._first:
+                raise self._first[0]
+
+
+class AdaptiveBudgetGovernor:
+    """Adaptive apportionment of the global reduce memory budget.
+
+    Replaces the static active-count split: every registering reducer is
+    granted the static fair share S0 = budget // slots (the floor
+    reduce_chunking validates up front), and on every emit cycle it may
+    `grow` its grant out of budget freed by retired reducers — so the
+    tail of the reduce phase runs with bigger per-run chunks instead of
+    leaving freed budget idle ("chunk sizes grow mid-merge").
+
+    The budget bound is provable, not just measured:
+
+      * bytes only move between the free pool and live grants under one
+        lock, and the free pool never goes negative — so the sum of live
+        grants never exceeds the budget;
+      * a live reducer's grant (hence chunk) never shrinks — growth only
+        draws from `free` beyond a reservation of S0 per not-yet-started
+        partition (up to the slot count), so a late registrant never
+        needs to claw back granted bytes;
+      * each reducer buffers at most runs x chunk <= grant decoded bytes,
+        so the measured all-reducer peak (reduce_peak_merge_bytes) is
+        under the budget at every instant.
+
+    With budget == 0 the governor is inert: every cursor just uses the
+    merge_chunk_bytes cap.
+    """
+
+    def __init__(self, *, budget: int, chunk_cap: int, record_bytes: int,
+                 slots: int, partitions: int):
+        self.budget = int(budget)
+        self.chunk_cap = int(chunk_cap)
+        self.record_bytes = int(record_bytes)
+        self.slots = max(int(slots), 1)
+        self._cond = threading.Condition()
+        self._free = self.budget
+        self._live: dict[int, tuple[int, int]] = {}  # rid -> (runs, grant)
+        # Completed rids as a SET, not a counter: a partition whose merge
+        # retired but whose async commit later died (cluster worker
+        # failure) is re-executed and retires AGAIN — dedup keeps the
+        # unstarted-partition reservation from under-counting.
+        self._done_rids: set[int] = set()
+        self._partitions = int(partitions)
+        self._base = self.budget // self.slots if self.budget else 0
+        self.max_chunk_bytes = 0 if self.budget else self.chunk_cap
+
+    def _chunk_of(self, runs: int, grant: int) -> int:
+        return min(self.chunk_cap, grant // max(runs, 1))
+
+    def register(self, rid: int, runs: int,
+                 abort: Callable[[], bool] | None = None) -> int | None:
+        """Reserve an initial grant; returns the per-run chunk in bytes.
+
+        Blocks while the free pool cannot cover even one record per run
+        (only possible transiently, while grown siblings hold surplus
+        that their retirement will release). Returns None if `abort`
+        turns true while waiting.
+        """
+        if not self.budget:
+            return self.chunk_cap
+        min_need = max(runs, 1) * self.record_bytes
+        with self._cond:
+            while self._free < min_need:
+                if abort is not None and abort():
+                    return None
+                self._cond.wait(timeout=0.05)
+            grant = max(min(self._base, runs * self.chunk_cap, self._free),
+                        min_need)
+            self._live[rid] = (runs, grant)
+            self._free -= grant
+            chunk = self._chunk_of(runs, grant)
+            self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
+            return chunk
+
+    def chunk_bytes(self, rid: int) -> int:
+        if not self.budget:
+            return self.chunk_cap
+        with self._cond:
+            runs, grant = self._live[rid]
+            return self._chunk_of(runs, grant)
+
+    def grow(self, rid: int) -> int:
+        """Re-apportion freed budget into this reducer's grant (monotone);
+        returns the current per-run chunk in bytes."""
+        if not self.budget:
+            return self.chunk_cap
+        with self._cond:
+            runs, grant = self._live[rid]
+            target = runs * self.chunk_cap
+            if grant < target:
+                # Keep S0 reserved for every partition that still has to
+                # start (bounded by the free scheduler slots), so future
+                # registrants are never starved by growth.
+                unstarted = (self._partitions - len(self._done_rids)
+                             - len(self._live))
+                reserve = self._base * max(
+                    0, min(self.slots - len(self._live), unstarted))
+                avail = self._free - reserve
+                extra = min(target - grant, avail // max(len(self._live), 1))
+                if extra > 0:
+                    grant += extra
+                    self._live[rid] = (runs, grant)
+                    self._free -= extra
+            chunk = self._chunk_of(runs, grant)
+            self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
+            return chunk
+
+    def retire(self, rid: int, *, completed: bool = True) -> None:
+        """Release the grant back to the free pool (waking any waiting
+        registrant); `completed=False` marks a failed reducer whose
+        partition will be re-executed (cluster failure recovery)."""
+        if not self.budget:
+            return
+        with self._cond:
+            entry = self._live.pop(rid, None)
+            if entry is not None:
+                self._free += entry[1]
+            if completed:
+                self._done_rids.add(rid)
+            self._cond.notify_all()
+
+
+def reduce_chunking(plan, runs: int, active: int) -> tuple[int, int]:
+    """(chunk_records, chunk_bytes) per run under the global budget.
+
+    This is the STATIC fair split — the governor's starting point and the
+    up-front feasibility check: with a budget, each of the `active`
+    concurrent reducers gets an equal share, split over its `runs`
+    cursors and capped at merge_chunk_bytes; the all-reducer total
+    active x runs x chunk therefore never exceeds the budget. Without
+    one, every cursor buffers merge_chunk_bytes. At runtime the adaptive
+    governor only ever grants MORE than this (never less), drawing on
+    budget freed by retired reducers.
+    """
+    rb = plan.record_bytes
+    require(plan.merge_chunk_bytes >= rb, "merge_chunk_bytes",
+            plan.merge_chunk_bytes,
+            f"must hold at least one {rb}-byte record, else the "
+            "reduce-memory bound cannot be met")
+    chunk_bytes = plan.merge_chunk_bytes
+    if plan.reduce_memory_budget_bytes:
+        share = plan.reduce_memory_budget_bytes // max(active, 1)
+        chunk_bytes = min(chunk_bytes, share // max(runs, 1))
+        require(chunk_bytes >= rb, "reduce_memory_budget_bytes",
+                plan.reduce_memory_budget_bytes,
+                f"cannot give each of {active} concurrent reducers one "
+                f"{rb}-byte record per run ({runs} runs each) — raise the "
+                "budget or lower parallel_reducers")
+    return chunk_bytes // rb, chunk_bytes
+
+
+class RunCursor:
+    """Bounded window over one spilled run's partition slice.
+
+    Holds at most `chunk_records` decoded records at a time; `refill`
+    issues one ranged GET for the next chunk, `take_upto` consumes the
+    buffered prefix that is safe to emit (every record <= bound). The
+    chunk size may be raised mid-stream (`set_chunk`) when the adaptive
+    governor re-apportions budget freed by retired reducers.
+    """
+
+    __slots__ = ("_store", "_bucket", "_key", "_hi", "_next", "_chunk",
+                 "_pw", "k64", "keys", "ids", "payload")
+
+    def __init__(self, store, bucket, key, lo, hi, payload_words, chunk_records):
+        self._store = store
+        self._bucket = bucket
+        self._key = key
+        self._next = int(lo)
+        self._hi = int(hi)
+        self._chunk = int(chunk_records)
+        self._pw = int(payload_words)
+        self.keys = np.empty((0,), np.uint32)
+        self.ids = np.empty((0,), np.uint32)
+        self.payload = None
+        self.k64 = np.empty((0,), np.uint64)
+
+    @property
+    def has_more_remote(self) -> bool:
+        return self._next < self._hi
+
+    @property
+    def exhausted(self) -> bool:
+        return not self.has_more_remote and self.k64.size == 0
+
+    @property
+    def buffered_bytes(self) -> int:
+        return self.k64.size * rec.record_bytes(self._pw)
+
+    def set_chunk(self, chunk_records: int) -> None:
+        self._chunk = int(chunk_records)
+
+    def refill(self) -> None:
+        n = min(self._chunk, self._hi - self._next)
+        start, length = rec.body_range(self._next, n, self._pw)
+        body = self._store.get_range(self._bucket, self._key, start, length)
+        self._next += n
+        k, i, p = rec.decode_body(body, self._pw)
+        self.keys, self.ids, self.payload = k, i, p
+        self.k64 = k.astype(np.uint64) << np.uint64(32) | i.astype(np.uint64)
+
+    def take_upto(self, bound):
+        """Consume and return the (keys, ids, payload, k64) prefix with
+        k64 <= bound; bound=None consumes everything buffered."""
+        cut = self.k64.size if bound is None else int(
+            np.searchsorted(self.k64, bound, side="right"))
+        out = (self.keys[:cut], self.ids[:cut],
+               None if self.payload is None else self.payload[:cut],
+               self.k64[:cut])
+        self.keys, self.ids = self.keys[cut:], self.ids[cut:]
+        self.payload = None if self.payload is None else self.payload[cut:]
+        self.k64 = self.k64[cut:]
+        return out
+
+
+def merge_fragments(frags, payload_words: int):
+    """Merge already-sorted fragments (one per run) into one sorted batch.
+
+    A plain stable argsort over the concatenated packed keys
+    (key<<32|id) is the k-way merge of the emit window — small
+    (≤ runs x chunk records) by construction, which is the whole point
+    of the streaming reduce. Packed keys need NOT be unique across
+    fragments (the group-by's (key, count) records collide routinely):
+    ties keep a stable, deterministic order — fragment list order, then
+    within-fragment order — so output bytes are reproducible, but a
+    consumer must not assume distinct packed keys. The sort workload's
+    gensort ids happen to be unique, which is what makes its merge
+    windows totally ordered.
+    """
+    frags = [f for f in frags if f[3].size]
+    if not frags:
+        empty = np.empty((0,), np.uint32)
+        pw = int(payload_words)
+        return empty, empty, (np.empty((0, pw), np.uint32) if pw else None)
+    if len(frags) == 1:
+        k, i, p, _ = frags[0]
+        return k, i, p
+    k64 = np.concatenate([f[3] for f in frags])
+    order = np.argsort(k64, kind="stable")
+    keys = np.concatenate([f[0] for f in frags])[order]
+    ids = np.concatenate([f[1] for f in frags])[order]
+    payload = None
+    if payload_words:
+        payload = np.concatenate([f[2] for f in frags])[order]
+    return keys, ids, payload
+
+
+class SiblingFailed(Exception):
+    """Internal: this reducer was cancelled because another one failed."""
+
+
+def timed_part(timeline: PhaseTimeline, tag: str, mp, index: int,
+               data: bytes) -> None:
+    """Background part upload, recorded as a reduce.upload span."""
+    t = time.perf_counter()
+    mp.put_part(index, data)
+    timeline.add("reduce.upload", t, worker=tag)
+
+
+def timed_put(timeline: PhaseTimeline, tag: str, store, bucket: str,
+              key: str, data: bytes, metadata: dict) -> None:
+    """Background spill put, recorded as a map.spill span."""
+    t = time.perf_counter()
+    store.put(bucket, key, data, metadata=metadata)
+    timeline.add("map.spill", t, worker=tag)
+
+
+def finalize_session(timeline: PhaseTimeline, tag: str,
+                     uploader: staging.AsyncWriter, mp,
+                     on_done: Callable[[], None] | None = None) -> None:
+    """Background session finisher: wait for the partition's in-flight
+    parts, then commit — or abort on any failure (a truncated commit
+    would carry a self-consistent CRC etag IntegrityError can't catch).
+    Running this off the merge thread is what lets a reducer's scheduler
+    slot free while its tail uploads still stream (partition r's uploads
+    overlap partition r+active's merge even at parallel_reducers=1).
+    `on_done` fires only after the commit succeeds — the durability
+    confirmation the cluster driver uses to decide what a dead worker
+    still owed."""
+    t = time.perf_counter()
+    try:
+        uploader.close()  # waits all parts; re-raises the first failure
+    except BaseException:
+        mp.abort()
+        raise
+    try:
+        mp.complete()
+    except BaseException:
+        mp.abort()
+        raise
+    finally:
+        timeline.add("reduce.upload_wait", t, worker=tag)
+    if on_done is not None:
+        on_done()
+
+
+@dataclasses.dataclass
+class ReduceShared:
+    """Job-level shared state for one shuffle's reduce pass — shared
+    across every ReduceScheduler (one on a single host, one per cluster
+    worker), so the budget governor, peak accounting, cancellation, and
+    timeline stay global while the schedulers stay per-worker. The
+    workload enters only through `reduce_op`."""
+
+    plan: "object"  # any dataflow plan (see api.validate_dataflow_plan)
+    bucket: str
+    reduce_op: ReduceOp
+    governor: AdaptiveBudgetGovernor
+    timeline: PhaseTimeline
+    peak: PeakTracker
+    control: JobControl
+
+
+class ReduceScheduler:
+    """One host's (or one emulated cluster worker's) reduce scheduler.
+
+    Pulls partition ids from `pop_next` and runs up to `width` streaming
+    reducers concurrently against `store`, sharing the job-level
+    governor/peak/cancellation through `shared` and delegating the data
+    to `shared.reduce_op` (sources + PartitionReducer sink). Failure
+    taxonomy:
+
+      * exceptions of a type in `fatal` mean THIS scheduler's worker died
+        (shuffle/executor.WorkerFailure): the scheduler unwinds and
+        re-raises so the cluster driver can re-execute unconfirmed
+        partitions on survivors — the job keeps going;
+      * any other exception is a job failure: it is recorded on
+        shared.control (which cancels every scheduler) and the driver
+        re-raises it after the barrier.
+
+    A partition only counts as done (`on_done`) after its multipart
+    session COMMITS — merge completion is not durability.
+    """
+
+    def __init__(self, store: StoreBackend, shared: ReduceShared, *,
+                 width: int, runs_hint: int = 2, fatal: tuple = (),
+                 tag_prefix: str = ""):
+        self.store = store
+        self.shared = shared
+        self.width = max(int(width), 1)
+        self.runs_hint = max(int(runs_hint), 1)
+        self.fatal = tuple(fatal)
+        self.tag_prefix = tag_prefix
+
+    def run(self, pop_next: Callable[[], int | None],
+            on_done: Callable[[int], None] | None = None) -> None:
+        """Drain partitions until the queue is empty, the job is
+        cancelled, or this scheduler's worker dies (re-raised)."""
+        shared = self.shared
+        plan = shared.plan
+        refill_pool = ThreadPoolExecutor(
+            max_workers=min(16, max(2, self.runs_hint * self.width)),
+            thread_name_prefix="reduce-refill")
+        finishers = staging.AsyncWriter(
+            max(plan.max_inflight_writes, self.width), max_workers=self.width,
+            thread_name_prefix="reduce-finish")
+        dead_lock = threading.Lock()
+        dead: list[BaseException] = []
+        dead_evt = threading.Event()
+
+        def loop() -> None:
+            while not (shared.control.cancel.is_set() or dead_evt.is_set()):
+                try:
+                    r = pop_next()
+                except self.fatal as e:  # the worker died at the queue
+                    with dead_lock:
+                        dead.append(e)
+                    dead_evt.set()
+                    return
+                if r is None:
+                    return
+                try:
+                    self._reduce_one(r, refill_pool, finishers, on_done)
+                except SiblingFailed:
+                    pass  # aborted cleanly; the root cause is recorded
+                except self.fatal as e:  # worker death: stop this scheduler
+                    with dead_lock:
+                        dead.append(e)
+                    dead_evt.set()
+                    return
+                except BaseException as e:  # real failure: cancel the job
+                    shared.control.fail(e)
+                    return
+
+        threads = [threading.Thread(target=loop, name=f"reduce-merge-{i}")
+                   for i in range(self.width)]
+        try:
+            for t in threads:
+                t.start()
+        finally:
+            for t in threads:
+                t.join()
+            refill_pool.shutdown(wait=True)
+            try:
+                finishers.close()  # re-raises the first finisher failure
+            except self.fatal as e:
+                # Death during commit: those partitions never confirmed,
+                # so the cluster driver will re-execute them.
+                with dead_lock:
+                    dead.append(e)
+            except BaseException as e:
+                shared.control.fail(e)
+        if dead:
+            raise dead[0]
+
+    # -- internals ---------------------------------------------------------
+
+    def _reduce_one(self, r: int, refill_pool, finishers,
+                    on_done: Callable[[int], None] | None) -> None:
+        shared = self.shared
+        plan = shared.plan
+        op = shared.reduce_op
+        store = self.store
+        timeline = shared.timeline
+        governor = shared.governor
+        pw = op.payload_words
+        rb = rec.record_bytes(pw)
+        part_bytes = plan.output_part_records * rb
+        tag = f"{self.tag_prefix}r{r}"
+        slices, n_total = op.sources(r)
+        registered = bool(slices)
+        chunk_records = 0
+        if registered:
+            chunk = governor.register(
+                r, len(slices), abort=shared.control.cancel.is_set)
+            if chunk is None:
+                raise SiblingFailed()
+            chunk_records = chunk // rb
+        # Everything past a successful register sits inside the
+        # try/cleanup below (mp/uploader as None sentinels until
+        # created): store.multipart() or a user ReduceOp.open() raising
+        # must still retire the grant and abort any created session, or
+        # re-execution would deduct the budget pool a second time.
+        mp = None
+        uploader = None
+
+        def submit_part(data: bytes) -> None:
+            nonlocal next_part
+            idx, next_part = next_part, next_part + 1
+            t = time.perf_counter()  # blocks under upload backpressure
+            uploader.submit(timed_part, timeline, tag, mp, idx, data)
+            timeline.add("reduce.upload_wait", t, worker=tag)
+
+        try:
+            cursors = [
+                RunCursor(store, shared.bucket, key, lo, hi, pw,
+                          chunk_records)
+                for key, lo, hi in slices
+            ]
+            mp = store.multipart(shared.bucket, op.output_key(r),
+                                 metadata=op.output_metadata(r, n_total))
+            # max_inflight >= fanout, or the backpressure semaphore would
+            # silently cap concurrent part uploads below the fan-out
+            # width.
+            uploader = staging.AsyncWriter(
+                max(plan.max_inflight_writes, plan.part_upload_fanout),
+                max_workers=plan.part_upload_fanout)
+            sink = op.open(r, n_total)
+            # A sink that only knows its output size at the end
+            # (aggregation) reserves part 0 for the deferred header and
+            # streams body parts from index 1 — the out-of-order
+            # multipart contract (parts are assembled by index at
+            # complete()) is what makes this legal.
+            first_part = 1 if sink.deferred_part0 else 0
+            next_part = first_part
+            outbuf = bytearray(sink.begin())
+            while cursors:
+                if shared.control.cancel.is_set():
+                    raise SiblingFailed()
+                if registered:
+                    # Adaptive governor: soak up budget freed by retired
+                    # reducers — the per-run chunk can only grow.
+                    grown = governor.grow(r) // rb
+                    if grown != chunk_records:
+                        chunk_records = grown
+                        for c in cursors:
+                            c.set_chunk(grown)
+                need = [c for c in cursors
+                        if c.k64.size == 0 and c.has_more_remote]
+                if need:
+                    t = time.perf_counter()
+                    if len(need) == 1:
+                        need[0].refill()
+                    else:  # concurrent ranged GETs: one RTT per cycle
+                        list(refill_pool.map(RunCursor.refill, need))
+                    timeline.add("reduce.fetch", t, worker=tag)
+                shared.peak.update(r, sum(c.buffered_bytes for c in cursors))
+                t = time.perf_counter()
+                # Safe emit bound: the smallest last-buffered key among
+                # runs that still have un-fetched records — nothing
+                # later can sort below it. When no run has remote data
+                # left, everything buffered is emittable (and this is
+                # guaranteed to be the final cycle: any cursor with
+                # remote data would survive the exhausted filter).
+                remote_tails = [c.k64[-1] for c in cursors
+                                if c.has_more_remote]
+                bound = min(remote_tails) if remote_tails else None
+                frags = [c.take_upto(bound) for c in cursors]
+                cursors = [c for c in cursors if not c.exhausted]
+                body = sink.consume(frags, final=bound is None)
+                if body:
+                    outbuf += body
+                timeline.add("reduce.merge", t, worker=tag)
+                while len(outbuf) >= part_bytes:
+                    submit_part(bytes(outbuf[:part_bytes]))
+                    del outbuf[:part_bytes]
+            tail, part0 = sink.finalize()
+            if tail:
+                outbuf += tail
+                while len(outbuf) >= part_bytes:
+                    submit_part(bytes(outbuf[:part_bytes]))
+                    del outbuf[:part_bytes]
+            # >= 1 part always: a partition with no body bytes still
+            # uploads its header (inline for header-first sinks, as the
+            # deferred part 0 below otherwise).
+            if outbuf or (next_part == first_part and part0 is None):
+                submit_part(bytes(outbuf))
+            if part0 is not None:
+                t = time.perf_counter()
+                uploader.submit(timed_part, timeline, tag, mp, 0, part0)
+                timeline.add("reduce.upload_wait", t, worker=tag)
+        except BaseException:
+            # Setup, merge, or upload died mid-session: let in-flight
+            # parts settle, then discard the session — never commit it.
+            try:
+                if uploader is not None:
+                    uploader.drain()
+            except BaseException:
+                pass
+            try:
+                if mp is not None:
+                    mp.abort()
+            except BaseException:
+                pass  # a dead worker's abort fails too; parts are orphaned
+            finally:
+                shared.peak.clear(r)
+                if registered:
+                    governor.retire(r, completed=False)
+                if uploader is not None:
+                    uploader.close()
+            raise
+        # Success: hand drain + complete to the finisher queue so this
+        # scheduler slot frees while the tail parts still upload —
+        # finishers.submit blocks once max(max_inflight_writes, width)
+        # sessions await completion (cross-partition upload backpressure).
+        shared.peak.clear(r)
+        if registered:
+            governor.retire(r)
+        confirm = None if on_done is None else (lambda: on_done(r))
+        finishers.submit(finalize_session, timeline, tag, uploader, mp,
+                         confirm)
+
+
+def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
+                  pop_next: Callable[[], int | None], *, plan,
+                  timeline: PhaseTimeline, control: JobControl,
+                  tag_prefix: str = "",
+                  on_done: Callable[[int], None] | None = None) -> None:
+    """The staged map loop, shared by the single-host path and every
+    cluster worker: claim tasks from `pop_next`, keep `prefetch_depth`
+    split loads in flight ahead of processing (retry-aware against
+    transient store stalls), and spill through one bounded write-behind
+    queue.
+
+    With `on_done` set (cluster mode), each task's spills are drained
+    before it is confirmed — a worker that dies with spills in flight
+    leaves the task unconfirmed (and re-executed) rather than
+    half-spilled. Without it (single-host), the spill queue drains once
+    at loop exit, so spill waits never serialize the wave pipeline.
+    """
+    popped: collections.deque[int] = collections.deque()
+
+    def loads():
+        # Pulled from inside the prefetch pipeline on the caller's
+        # thread budget: each pull claims the next task (up to
+        # prefetch_depth ahead of processing). A claimed-but-unconfirmed
+        # task at death is simply re-executed by the driver's next round.
+        while not control.cancel.is_set():
+            g = pop_next()
+            if g is None:
+                return
+            popped.append(g)
+            yield lambda g=g: map_op.load(store, bucket, g)
+
+    with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
+        task_iter = iter(staging.prefetch(
+            loads(), depth=plan.prefetch_depth,
+            retries=plan.io_retries, retry_on=(RetryableError,)))
+        while True:
+            t_wait = time.perf_counter()
+            try:
+                data = next(task_iter)
+            except StopIteration:
+                return
+            g = popped.popleft()
+            tag = f"{tag_prefix}g{g}"
+            timeline.add("map.wait", t_wait, worker=tag)
+            map_op.process(store, bucket, g, data, spiller=spiller,
+                           timeline=timeline, tag=tag)
+            if on_done is not None:
+                spiller.drain()
+                on_done(g)
+
+
+__all__ = [
+    "AdaptiveBudgetGovernor",
+    "JobControl",
+    "PeakTracker",
+    "PhaseTimeline",
+    "ReduceScheduler",
+    "ReduceShared",
+    "RunCursor",
+    "SiblingFailed",
+    "Span",
+    "finalize_session",
+    "merge_fragments",
+    "reduce_chunking",
+    "run_map_tasks",
+    "timed_part",
+    "timed_put",
+]

@@ -1,0 +1,142 @@
+"""CloudSort as a ShuffleJob: the sort, re-expressed as one instantiation.
+
+The paper's 100 TB sort is, in library terms, nothing special: a MapOp
+that loads a wave of input objects and mesh-sorts it into range-
+partitioned spill runs (wrapping core/external_sort.WaveSorter — the
+device kernels, zero-copy load, and spill layout are unchanged), and a
+ReduceOp whose PartitionReducer is a pure streaming k-way merge (the
+identical runtime.merge_fragments body the monolithic driver used).
+Output bytes are byte- and etag-identical to the pre-refactor drivers at
+any parallelism, worker count, and under worker kills — asserted by
+tests/test_cluster.py and tests/test_shuffle.py.
+
+The partitioner is the order-preserving RangePartitioner whose equal
+boundaries reproduce core/keyspace.KeySpace's reducer boundaries
+bit-for-bit; the actual map-side routing runs on the device inside
+streaming_sort, and the test suite pins the two constructions together
+so they can never drift.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.io import records as rec
+from repro.io.backends import StoreBackend
+
+from repro.shuffle.api import MapOp, PartitionReducer, ReduceOp
+from repro.shuffle.job import ShuffleJob
+from repro.shuffle.partition import RangePartitioner
+from repro.shuffle.runtime import merge_fragments
+
+
+class SortMapOp(MapOp):
+    """Map side of CloudSort: load one wave zero-copy, sort it across
+    the device mesh, spill one range-partitioned run per mesh worker
+    (with per-reducer offsets in the spill metadata)."""
+
+    def __init__(self, plan, mesh, axis_names):
+        from repro.core import external_sort as xs
+
+        self.plan = plan
+        self.sorter = xs.WaveSorter(plan, mesh, axis_names)
+        self.num_mesh_workers = self.sorter.w
+        self.spill_objects_per_task = self.sorter.w
+        self.spill_offsets: dict[tuple[int, int], np.ndarray] = {}
+        self.waves: list = []
+
+    def plan_tasks(self, store: StoreBackend, bucket: str) -> int:
+        from repro.core import external_sort as xs
+
+        plan = self.plan
+        inputs = store.list_objects(bucket, plan.input_prefix)
+        if not inputs:
+            raise ValueError(
+                f"input_prefix={plan.input_prefix!r}: no input objects")
+        counts = [(m.size - rec.HEADER_BYTES) // plan.record_bytes
+                  for m in inputs]
+        self.waves = xs._group_waves(inputs, counts, plan.records_per_wave)
+        self.total_records = sum(counts)
+        self.working_set_records = plan.records_per_wave
+        return len(self.waves)
+
+    def load(self, store: StoreBackend, bucket: str, task: int):
+        return self.sorter.load_wave(store, bucket, self.waves[task])
+
+    def process(self, store: StoreBackend, bucket: str, task: int, data, *,
+                spiller, timeline, tag) -> None:
+        keys, ids, payload = data
+        self.sorter.compute_and_spill(
+            store, bucket, task, keys, ids, payload, spiller=spiller,
+            timeline=timeline, tag=tag, offsets_out=self.spill_offsets)
+
+
+class _SortMergeSink(PartitionReducer):
+    """Streaming k-way merge: the record count is known up front (sum of
+    run-slice lengths), so the header streams first and sorted body
+    chunks follow — exactly the monolithic reduce body, hence exactly
+    its bytes."""
+
+    deferred_part0 = False
+
+    def __init__(self, n_total: int, payload_words: int):
+        self._n = int(n_total)
+        self._pw = int(payload_words)
+
+    def begin(self) -> bytes:
+        return rec.encode_header(self._n, self._pw)
+
+    def consume(self, frags, *, final: bool) -> bytes:
+        mk, mi, mp = merge_fragments(frags, self._pw)
+        return rec.encode_body(mk, mi, mp) if mk.size else b""
+
+
+class MergeReduceOp(ReduceOp):
+    """Reduce side of CloudSort: partition r streams its slice of every
+    spilled run (located by the offsets the map side recorded) through
+    a k-way merge into a multipart-uploaded output partition."""
+
+    def __init__(self, plan, map_op: SortMapOp):
+        self.plan = plan
+        self.map_op = map_op
+        self.payload_words = plan.payload_words
+
+    def sources(self, r: int) -> tuple[list[tuple[str, int, int]], int]:
+        from repro.core import external_sort as xs
+
+        plan, map_op = self.plan, self.map_op
+        wid, j = divmod(r, map_op.sorter.r1)
+        slices, n_total = [], 0
+        for g in range(len(map_op.waves)):
+            offs = map_op.spill_offsets[(g, wid)]
+            lo, hi = int(offs[j]), int(offs[j + 1])
+            if hi > lo:
+                slices.append((xs._spill_key(plan, g, wid), lo, hi))
+                n_total += hi - lo
+        return slices, n_total
+
+    def output_key(self, r: int) -> str:
+        from repro.core import external_sort as xs
+
+        return xs._output_key(self.plan, r)
+
+    def output_metadata(self, r: int, n_total: int) -> dict:
+        return {"records": n_total, "reducer": r}
+
+    def open(self, r: int, n_total: int) -> PartitionReducer:
+        return _SortMergeSink(n_total, self.payload_words)
+
+
+def sort_shuffle_job(store: StoreBackend, bucket: str, *, mesh, axis_names,
+                     plan) -> ShuffleJob:
+    """Build the CloudSort ShuffleJob: SortMapOp + MergeReduceOp over an
+    order-preserving range partitioner. `plan` is a
+    core/external_sort.ExternalSortPlan; run with
+    `job.run(workers=N[, cluster=ClusterPlan(...)])`."""
+    map_op = SortMapOp(plan, mesh, axis_names)
+    reduce_op = MergeReduceOp(plan, map_op)
+    partitioner = RangePartitioner(map_op.sorter.w * map_op.sorter.r1)
+    return ShuffleJob(store, bucket, plan=plan, map_op=map_op,
+                      reduce_op=reduce_op, partitioner=partitioner)
+
+
+__all__ = ["MergeReduceOp", "SortMapOp", "sort_shuffle_job"]

@@ -1,0 +1,471 @@
+"""The shuffle library: partitioner contracts, plan validation, the
+ShuffleJob sort path, and the group-by workload.
+
+The ISSUE-5 acceptance contract: CloudSort through the new ShuffleJob
+API must be byte- and etag-identical to the pre-refactor drivers at
+W in {1, 4} and under a worker kill (the deprecated shims' own tests in
+test_external_sort.py / test_cluster.py pin the shim side); any
+Partitioner implementation must yield exhaustive, non-overlapping
+ranges; skewed key distributions must still sort byte-identically at
+any schedule; and the group-by workload must run end-to-end on the
+throttled+latency tiered store with no sort-specific code in its
+operators.
+"""
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+
+
+# ---------------------------------------------------------------------------
+# Partitioner properties (pure numpy — no devices needed)
+# ---------------------------------------------------------------------------
+
+
+def _all_partitioners():
+    from repro.shuffle.partition import HashPartitioner, RangePartitioner
+
+    parts = []
+    for p in (1, 2, 3, 7, 16, 1000):
+        parts.append(RangePartitioner(p))
+        parts.append(HashPartitioner(p))
+    # Sampled (explicit, deliberately lopsided) boundaries, duplicates
+    # included — degenerate empty ranges are legal, overlap is not.
+    parts.append(RangePartitioner(
+        5, boundaries=np.array([10, 10, 1 << 20, 1 << 31], np.uint32)))
+    return parts
+
+
+def _probe_keys(rng):
+    """Adversarial key sample: dense sweep + uniform draw + boundary
+    neighbourhoods get appended per-partitioner by the caller."""
+    dense = np.linspace(0, (1 << 32) - 1, 4096).astype(np.uint32)
+    uniform = rng.integers(0, 1 << 32, size=4096, dtype=np.uint64)
+    edges = np.array([0, 1, (1 << 32) - 1], np.uint64)
+    return np.concatenate([dense.astype(np.uint64), uniform, edges])
+
+
+def test_partitioner_ranges_exhaustive_and_non_overlapping():
+    # The property, for EVERY implementation: boundaries are ascending
+    # (non-overlap), every routed key lands in exactly one partition id
+    # within range (exhaustive), and partition_of agrees with the
+    # boundary definition b[j-1] <= route(k) < b[j] on keys sitting
+    # directly on and around every boundary.
+    rng = np.random.default_rng(7)
+    for part in _all_partitioners():
+        bounds = np.asarray(part.boundaries(), np.uint64)
+        assert bounds.shape == (part.num_partitions - 1,), part
+        assert bool(np.all(bounds[1:] >= bounds[:-1])), (part, bounds)
+
+        keys = _probe_keys(rng)
+        if bounds.size:  # boundary neighbourhoods, clipped to u32
+            near = np.concatenate([bounds - 1, bounds, bounds + 1])
+            keys = np.concatenate([keys, near & 0xFFFFFFFF])
+        keys = keys.astype(np.uint32)
+        got = part.partition_of(keys)
+        assert got.min() >= 0 and got.max() < part.num_partitions, part
+        # exactly the searchsorted contract over the routed domain
+        want = np.searchsorted(bounds.astype(np.uint32),
+                               part.route(keys), side="right")
+        assert np.array_equal(got, want), part
+        # monotone in the routed domain (ranges, not interleaving)
+        routed = part.route(keys)
+        order = np.argsort(routed, kind="stable")
+        assert bool(np.all(np.diff(got[order]) >= 0)), part
+
+
+def test_equal_range_partitioner_covers_every_partition():
+    from repro.shuffle.partition import RangePartitioner
+
+    # Equal split: a dense sweep must populate every partition (no empty
+    # range can hide in an equal split of a dense domain).
+    for p in (2, 3, 16, 255):
+        part = RangePartitioner(p)
+        keys = np.linspace(0, (1 << 32) - 1, 64 * p).astype(np.uint32)
+        assert len(np.unique(part.partition_of(keys))) == p
+
+
+def test_range_partitioner_matches_device_keyspace():
+    # The host-side RangePartitioner and the device-side KeySpace must
+    # route identically, or map (device) and reduce (host) would
+    # disagree about partition ownership.
+    from repro.core.keyspace import KeySpace
+    from repro.shuffle.partition import RangePartitioner
+
+    for r, w in ((16, 8), (24, 8), (625, 5)):
+        ks = KeySpace(num_reducers=r, num_workers=w)
+        part = RangePartitioner(r)
+        assert np.array_equal(np.asarray(ks.reducer_boundaries()),
+                              part.boundaries()), (r, w)
+        rng = np.random.default_rng(r)
+        keys = rng.integers(0, 1 << 32, size=2048, dtype=np.uint64)
+        keys = keys.astype(np.uint32)
+        assert np.array_equal(np.asarray(ks.reducer_of_key(keys)),
+                              part.partition_of(keys)), (r, w)
+
+
+def test_partitioner_validation_errors_name_knob_and_value():
+    from repro.shuffle.partition import HashPartitioner, RangePartitioner
+
+    with pytest.raises(ValueError, match="num_partitions=0"):
+        RangePartitioner(0)
+    with pytest.raises(ValueError, match="num_partitions=-3"):
+        HashPartitioner(-3)
+    with pytest.raises(ValueError, match="boundaries"):
+        RangePartitioner(3, boundaries=np.array([5], np.uint32))
+    with pytest.raises(ValueError, match="ascending"):
+        RangePartitioner(3, boundaries=np.array([9, 4], np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# Unified plan validation: ValueError with knob name + value everywhere
+# ---------------------------------------------------------------------------
+
+
+def test_shuffle_plan_validation_names_knob_and_value():
+    import dataclasses
+
+    from repro.shuffle.api import ShufflePlan
+
+    ShufflePlan().validate()  # defaults are feasible
+    bad = {
+        "parallel_reducers": 0,
+        "part_upload_fanout": 0,
+        "prefetch_depth": 0,
+        "max_inflight_writes": 0,
+        "io_retries": -1,
+        "output_part_records": 0,
+        "store_chunk_bytes": 0,
+        "merge_chunk_bytes": 3,  # < one record
+        "reduce_memory_budget_bytes": -1,
+        "input_prefix": "",
+    }
+    for knob, value in bad.items():
+        plan = dataclasses.replace(ShufflePlan(), **{knob: value})
+        with pytest.raises(ValueError, match=f"{knob}={value!r}"):
+            plan.validate()
+    # spill/output prefix collision is a layout error, not a typo
+    with pytest.raises(ValueError, match="spill_prefix"):
+        dataclasses.replace(ShufflePlan(), spill_prefix="out/",
+                            output_prefix="out/").validate()
+    # and ANY overlap with input_prefix must fail validation: session
+    # preflight deletes spill/output prefixes, so an overlap would
+    # destroy the input before the map phase runs
+    for knob in ("spill_prefix", "output_prefix"):
+        for value in ("input/", "in", "input/sub/"):
+            with pytest.raises(ValueError, match="overlaps"):
+                dataclasses.replace(
+                    ShufflePlan(), **{knob: value}).validate()
+
+
+def test_overlapping_prefixes_rejected_before_any_delete():
+    # The destructive case end-to-end: a spill prefix shadowing the
+    # input prefix must fail in preflight with the input intact.
+    from repro.io.backends import MemoryBackend
+    from repro.shuffle.api import ShufflePlan
+    from repro.shuffle.groupby import groupby_job, write_groupby_input
+
+    store = MemoryBackend()
+    store.create_bucket("b")
+    plan = ShufflePlan(payload_words=1, spill_prefix="input/")
+    write_groupby_input(store, "b", "input/", 1 << 10, 1 << 9,
+                        num_groups=16)
+    with pytest.raises(ValueError, match="spill_prefix='input/'"):
+        groupby_job(store, "b", plan=plan, num_partitions=4).run()
+    assert len(store.list_objects("b", "input/")) == 2, (
+        "preflight must not have deleted the input")
+
+
+def test_external_sort_and_cluster_plan_validation():
+    import dataclasses
+
+    from repro.core.cluster import ClusterPlan
+    from repro.core.external_sort import ExternalSortPlan
+
+    ExternalSortPlan(records_per_wave=1 << 12).validate()
+    for knob, value in (("records_per_wave", 0), ("num_rounds", 0),
+                        ("reducers_per_worker", 0),
+                        ("capacity_factor", 0.0),
+                        ("parallel_reducers", 0)):
+        plan = dataclasses.replace(
+            ExternalSortPlan(records_per_wave=1 << 12), **{knob: value})
+        with pytest.raises(ValueError, match=f"{knob}="):
+            plan.validate()
+
+    with pytest.raises(ValueError, match="num_workers=0"):
+        ClusterPlan(num_workers=0)
+    with pytest.raises(ValueError, match="fail_after_tasks"):
+        ClusterPlan(num_workers=2, fail_after_tasks={5: 1})
+    with pytest.raises(ValueError, match="fail_after_requests"):
+        ClusterPlan(num_workers=2, fail_after_requests={0: -1})
+
+
+def test_budget_feasibility_raises_before_any_request():
+    # An infeasible budget must fail in session preflight — before any
+    # input byte is fetched (and billed).
+    from repro.io.backends import MemoryBackend
+    from repro.io.middleware import MetricsMiddleware
+    from repro.shuffle.api import ShufflePlan
+    from repro.shuffle.groupby import groupby_job, write_groupby_input
+
+    store = MetricsMiddleware(MemoryBackend())
+    store.create_bucket("b")
+    plan = ShufflePlan(payload_words=1, merge_chunk_bytes=1 << 10,
+                       parallel_reducers=4,
+                       reduce_memory_budget_bytes=64)  # < 1 record/run
+    write_groupby_input(store, "b", plan.input_prefix, 1 << 10, 1 << 9,
+                        num_groups=32)
+    base = store.stats_snapshot()
+    with pytest.raises(ValueError, match="reduce_memory_budget_bytes=64"):
+        groupby_job(store, "b", plan=plan, num_partitions=4).run()
+    delta = store.stats_snapshot() - base
+    assert delta.get_requests == 0 and delta.put_requests == 0
+
+
+# ---------------------------------------------------------------------------
+# Group-by: the second workload, end-to-end on the faulty tiered store
+# ---------------------------------------------------------------------------
+
+
+def test_groupby_end_to_end_on_throttled_tiered_store():
+    # The generality acceptance gate: keyed aggregation with a map-side
+    # combiner on the same latency+throttle+retry tiered stack the sort
+    # uses, reusing staging / budget governor / fault recovery — and
+    # byte-identical output across combiner on/off, worker counts, and
+    # an injected worker death.
+    import tempfile
+
+    from repro.io.middleware import FaultProfile, RetryPolicy
+    from repro.io.tiered import tiered_cloudsort_store
+    from repro.shuffle.api import ShufflePlan
+    from repro.shuffle.executor import ClusterPlan
+    from repro.shuffle.groupby import (groupby_job, validate_groupby_from_store,
+                                       write_groupby_input)
+
+    plan = ShufflePlan(payload_words=1, store_chunk_bytes=8 << 10,
+                       merge_chunk_bytes=2 << 10, output_part_records=1 << 9,
+                       parallel_reducers=3,
+                       reduce_memory_budget_bytes=64 << 10)
+    store = tiered_cloudsort_store(
+        tempfile.mkdtemp(prefix="groupby-faulty-"),
+        spill_prefixes=(plan.spill_prefix,),
+        faults=FaultProfile(latency_s=0.001, bandwidth_bps=400e6,
+                            get_rate=80.0, put_rate=50.0, burst=8.0),
+        retry=RetryPolicy(max_attempts=12, base_delay_s=0.01,
+                          max_delay_s=0.25),
+    )
+    store.create_bucket("agg")
+    N = 1 << 14
+    expected_counts, expected_sums = write_groupby_input(
+        store, "agg", plan.input_prefix, N, 1 << 11,
+        num_groups=700, skew=2.5)  # word-frequency-shaped skew
+
+    job = groupby_job(store, "agg", plan=plan, num_partitions=8)
+    rep = job.run()
+    assert rep.total_records == N and rep.num_map_tasks == 8
+    assert rep.num_partitions == 8 and rep.output_objects == 8
+    # the library machinery really engaged: budget held, spans recorded
+    assert 0 < rep.reduce_peak_merge_bytes <= plan.reduce_memory_budget_bytes
+    assert rep.phase_seconds.get("map.compute", 0) > 0
+    assert rep.phase_seconds.get("reduce.merge", 0) > 0
+    # faults were really injected and absorbed
+    assert rep.stats.retries > 0 and rep.stats.throttled > 0
+    # spill traffic routed to the (free) ssd tier
+    assert rep.tier_stats["ssd"].put_requests == rep.spill_objects
+    assert rep.tier_stats["durable"].bytes_written > 0
+
+    val = validate_groupby_from_store(
+        store, "agg", plan.output_prefix, job.partitioner,
+        expected_counts, expected_sums)
+    assert val.ok and val.total_groups == 700, val
+
+    def layout():
+        return [(m.key, m.etag, m.size, m.parts)
+                for m in store.list_objects("agg", plan.output_prefix)]
+
+    want = layout()
+
+    # combiner off: more spilled bytes, identical output bytes
+    rep_raw = groupby_job(store, "agg", plan=plan, num_partitions=8,
+                          combine=False).run()
+    assert layout() == want, "combiner changed output bytes"
+    assert rep_raw.tier_stats["ssd"].bytes_written > \
+        rep.tier_stats["ssd"].bytes_written, "combiner did not shrink spill"
+
+    # cluster mode with one injected death: recovered, byte-identical
+    crep = groupby_job(store, "agg", plan=plan, num_partitions=8).run(
+        cluster=ClusterPlan(num_workers=4, fail_after_tasks={1: 2}))
+    assert layout() == want, "worker failure changed output bytes"
+    assert crep.failed_workers == ["w1"] and crep.reexecuted_tasks >= 1
+    val = validate_groupby_from_store(
+        store, "agg", plan.output_prefix, job.partitioner,
+        expected_counts, expected_sums)
+    assert val.ok, val
+
+
+def test_groupby_deferred_header_and_carry_at_tiny_chunks():
+    # merge_chunk_bytes at the one-record floor forces maximal emit
+    # cycles (every group straddles windows -> the carry path), and a
+    # partition count above the group count forces empty partitions
+    # (header-only part-0 objects).
+    from repro.io.backends import MemoryBackend
+    from repro.shuffle.api import ShufflePlan
+    from repro.shuffle.groupby import (groupby_job, validate_groupby_from_store,
+                                       write_groupby_input)
+
+    plan = ShufflePlan(payload_words=1, merge_chunk_bytes=12,  # one record
+                       output_part_records=4, parallel_reducers=2)
+    store = MemoryBackend()
+    store.create_bucket("b")
+    expected_counts, expected_sums = write_groupby_input(
+        store, "b", plan.input_prefix, 1 << 10, 1 << 8, num_groups=5,
+        skew=3.0)
+    job = groupby_job(store, "b", plan=plan, num_partitions=16)
+    job.run()
+    val = validate_groupby_from_store(
+        store, "b", plan.output_prefix, job.partitioner,
+        expected_counts, expected_sums)
+    assert val.ok and val.total_groups == 5, val
+    metas = store.list_objects("b", plan.output_prefix)
+    assert len(metas) == 16
+    assert any(m.size == 16 for m in metas), "expected empty partitions"
+
+
+# ---------------------------------------------------------------------------
+# The sort through the ShuffleJob API (subprocess: needs 8 host devices)
+# ---------------------------------------------------------------------------
+
+SORT_SETUP = """
+import dataclasses
+import tempfile
+import numpy as np
+import jax
+from repro.core.external_sort import ExternalSortPlan, external_sort
+from repro.core.compat import make_mesh
+from repro.data import gensort, valsort
+from repro.io.object_store import ObjectStore
+from repro.shuffle.executor import ClusterPlan
+from repro.shuffle.sort import sort_shuffle_job
+
+mesh = make_mesh((8,), ("w",))
+plan = ExternalSortPlan(
+    records_per_wave=1 << 13,
+    num_rounds=2,
+    reducers_per_worker=2,
+    payload_words=2,
+    impl="ref",
+    input_records_per_partition=1 << 12,
+    output_part_records=1 << 11,
+    store_chunk_bytes=16 << 10,
+    parallel_reducers=2,
+    reduce_memory_budget_bytes=64 << 10,
+)
+N = 1 << 15
+store = ObjectStore(tempfile.mkdtemp(prefix="shuffle-sort-test-"))
+store.create_bucket("sort")
+
+def layout():
+    return [(m.key, m.etag, m.size, m.parts)
+            for m in store.list_objects("sort", plan.output_prefix)]
+
+def job():
+    return sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
+                            plan=plan)
+"""
+
+
+def test_shuffle_job_sort_identical_to_deprecated_shims():
+    # The acceptance gate: CloudSort through ShuffleJob.run must be
+    # byte- and etag-identical to the deprecated external_sort() driver
+    # at W in {1, 4} and under a worker kill — and still valsort-clean.
+    run_with_devices(SORT_SETUP + """
+import warnings
+in_ck, nparts = gensort.write_to_store(
+    store, "sort", plan.input_prefix, N,
+    plan.input_records_per_partition, plan.payload_words)
+
+with warnings.catch_warnings(record=True) as caught:
+    warnings.simplefilter("always")
+    rep0 = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan)
+assert any(issubclass(w.category, DeprecationWarning) for w in caught), (
+    "the shim must announce its deprecation")
+want = layout()
+assert len(want) == 16
+
+rep = job().run(workers=0)
+assert layout() == want, "ShuffleJob single-host changed output bytes"
+assert rep.total_records == N and rep.num_map_tasks == 4
+assert rep.num_partitions == 16
+
+for W in (1, 4):
+    crep = job().run(workers=W)
+    assert layout() == want, f"ShuffleJob W={W} changed output bytes"
+    assert crep.num_cluster_workers == W and not crep.failed_workers
+
+crep = job().run(cluster=ClusterPlan(num_workers=4,
+                                     fail_after_tasks={1: 2}))
+assert layout() == want, "ShuffleJob worker kill changed output bytes"
+assert crep.failed_workers == ["w1"] and crep.reexecuted_tasks >= 1
+
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok and val.total_records == N, val
+print("OK")
+""", timeout=900)
+
+
+def test_skewed_keys_sort_byte_identical_across_schedules():
+    # Satellite gate: a skewed (non-uniform) key distribution — most
+    # keys crammed into a narrow low band, plus heavy duplicates — must
+    # produce byte-identical sorted output at every parallelism and
+    # worker count, even though partition sizes are wildly unbalanced.
+    run_with_devices(SORT_SETUP + """
+from repro.io import records as rec
+
+# Equal key ranges + heavy skew means one mesh worker absorbs most of
+# every wave: capacity_factor is exactly the knob that buys that slack
+# (the Daytona-style alternative is sampled boundaries — see
+# shuffle/partition.RangePartitioner(boundaries=...)).
+plan = dataclasses.replace(plan, capacity_factor=8.0)
+
+def job():
+    return sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
+                            plan=plan)
+
+rpp = plan.input_records_per_partition
+ids = np.arange(N, dtype=np.uint32)
+u = np.asarray(gensort.splitmix32(ids))
+# 7/8 of keys land in [0, 2^24); the rest spread uniformly; every 5th
+# key is a duplicate of a fixed hot key (ties broken by id).
+keys = np.where(u % 8 < 7, u >> np.uint32(8), u).astype(np.uint32)
+keys[::5] = 12345
+in_ck = (0, 0)
+for p in range(N // rpp):
+    sl = slice(p * rpp, (p + 1) * rpp)
+    payload = np.asarray(gensort.gen_payload(ids[sl], plan.payload_words))
+    ck = gensort.checksum(keys[sl], ids[sl], payload)
+    in_ck = gensort.combine_checksums(in_ck, (int(ck[0]), int(ck[1])))
+    store.put("sort", f"{plan.input_prefix}part-{p:05d}",
+              rec.encode_records(keys[sl], ids[sl], payload),
+              metadata={"records": rpp})
+
+rep0 = job().run(workers=0)
+want = layout()
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok and val.total_records == N, val
+# skew is real: partition sizes differ by >= 8x
+sizes = [m.size for m in store.list_objects("sort", plan.output_prefix)]
+assert max(sizes) >= 8 * min(sizes), sizes
+
+for par in (1, 4):
+    p2 = dataclasses.replace(plan, parallel_reducers=par,
+                             capacity_factor=8.0)
+    sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
+                     plan=p2).run(workers=0)
+    assert layout() == want, f"parallel_reducers={par} changed skewed bytes"
+for W in (1, 2):
+    job().run(workers=W)
+    assert layout() == want, f"W={W} changed skewed bytes"
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok, val
+print("OK", max(sizes), min(sizes))
+""", timeout=900)

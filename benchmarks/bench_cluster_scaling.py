@@ -37,6 +37,17 @@ from __future__ import annotations
 
 import time
 
+#: Regression gates for tools/bench_diff.py. The single-host reference
+#: run's request counts are deterministic (memory backend, no retries);
+#: the failover re-execution count and throughputs depend on timing and
+#: runner load, so they stay informational.
+GATES = {
+    "cluster_scaling/ref_get_requests": {"tolerance": 0.25,
+                                         "direction": "lower"},
+    "cluster_scaling/ref_put_requests": {"tolerance": 0.25,
+                                         "direction": "lower"},
+}
+
 
 def _build_store(latency_s: float, bandwidth_bps: float):
     # Deterministic stall injection (no jitter/throttle randomness): the
@@ -98,6 +109,12 @@ def run(full: bool = False):
     assert val.ok, val
 
     rows, rates = [], {}
+    # The reference run's store traffic: deterministic on the memory
+    # backend, so these two rows are the gated regression canaries.
+    rows.append(("cluster_scaling/ref_get_requests", 0.0,
+                 float(ref.stats.get_requests)))
+    rows.append(("cluster_scaling/ref_put_requests", 0.0,
+                 float(ref.stats.put_requests)))
     for workers in (1, 2, 4):
         t0 = time.perf_counter()
         crep = ClusterExecutor(

@@ -12,33 +12,130 @@
                           aggregation with a map-side combiner
   roofline              — §Roofline rows from the dry-run artifacts
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV, then a ``#``-prefixed summary
+that distinguishes *skipped* benches (environment can't run them — raise
+SkipBench, or an ImportError for an optional dependency) from *failed*
+ones (the bench ran and broke). Only failures exit non-zero.
+
+With ``--artifact DIR`` each bench also writes ``DIR/BENCH_<name>.json``:
+the rows keyed by name, the bench's gate declarations (its module-level
+``GATES`` dict, if any), and the ok/skip/fail status. The artifacts are
+the persisted benchmark trajectory — tools/bench_diff.py compares a run's
+artifacts against the committed baselines under benchmarks/baselines/
+and fails CI on gated regressions. ``--only a,b`` restricts the run to
+the named benches (short names, without the ``bench_`` prefix).
 """
 from __future__ import annotations
 
+import argparse
+import importlib
+import json
+import os
 import sys
 import traceback
 
+# Runnable as `python benchmarks/run.py` from anywhere: the bench
+# modules import as `benchmarks.<name>`, which needs the repo root (this
+# file's parent's parent) on sys.path.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
 
-def main() -> None:
-    from benchmarks import (bench_cluster_scaling, bench_cost_model,
-                            bench_external_sort, bench_groupby,
-                            bench_kernels, bench_pipeline_overlap,
-                            bench_reduce_scaling, bench_sort_stages,
-                            bench_store_faults, roofline)
+#: (short name, module) in execution order. Short names are what --only,
+#: artifact filenames (BENCH_<short>.json), and the summary use.
+BENCHES = [
+    ("cost_model", "benchmarks.bench_cost_model"),
+    ("sort_stages", "benchmarks.bench_sort_stages"),
+    ("pipeline_overlap", "benchmarks.bench_pipeline_overlap"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("external_sort", "benchmarks.bench_external_sort"),
+    ("store_faults", "benchmarks.bench_store_faults"),
+    ("reduce_scaling", "benchmarks.bench_reduce_scaling"),
+    ("cluster_scaling", "benchmarks.bench_cluster_scaling"),
+    ("groupby", "benchmarks.bench_groupby"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+class SkipBench(Exception):
+    """Raised by a bench that cannot run in this environment (missing
+    accelerator, optional dependency, too few devices). A skip is not a
+    failure: the summary reports it separately and the exit code stays 0."""
+
+
+def run_one(short: str, module: str):
+    """Execute one bench; returns (status, rows, gates, error_text)."""
+    try:
+        mod = importlib.import_module(module)
+        rows = list(mod.run())
+        return "ok", rows, dict(getattr(mod, "GATES", {})), None
+    except SkipBench as e:
+        return "skip", [], {}, str(e)
+    except ImportError as e:  # optional dependency absent → environment
+        return "skip", [], {}, f"import failed: {e}"
+    except Exception as e:  # noqa: BLE001 — keep the harness running
+        traceback.print_exc()
+        return "fail", [], {}, f"{type(e).__name__}: {e}"
+
+
+def write_artifact(outdir: str, short: str, status: str, rows, gates,
+                   error: str | None) -> str:
+    payload = {
+        "schema": 1,
+        "bench": short,
+        "status": status,
+        "rows": {name: {"us": us, "derived": derived}
+                 for name, us, derived in rows},
+        "gates": gates,
+        "error": error,
+    }
+    path = os.path.join(outdir, f"BENCH_{short}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--only", default="",
+                    help="comma-separated short bench names to run "
+                         "(default: all)")
+    ap.add_argument("--artifact", metavar="DIR", default=None,
+                    help="write one BENCH_<name>.json per bench into DIR")
+    args = ap.parse_args(argv)
+
+    selected = [s for s in (p.strip() for p in args.only.split(",")) if s]
+    known = {short for short, _ in BENCHES}
+    unknown = [s for s in selected if s not in known]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; known: {sorted(known)}")
+    todo = [(s, m) for s, m in BENCHES if not selected or s in selected]
+
+    if args.artifact:
+        os.makedirs(args.artifact, exist_ok=True)
 
     print("name,us_per_call,derived")
-    for mod in (bench_cost_model, bench_sort_stages, bench_pipeline_overlap,
-                bench_kernels, bench_external_sort, bench_store_faults,
-                bench_reduce_scaling, bench_cluster_scaling, bench_groupby,
-                roofline):
-        try:
-            for name, us, derived in mod.run():
-                print(f"{name},{us:.3f},{derived:.6g}")
-        except Exception:  # noqa: BLE001 — keep the harness running
-            print(f"{mod.__name__},error,0", file=sys.stderr)
-            traceback.print_exc()
+    summary: list[tuple[str, str, str]] = []  # (short, status, note)
+    for short, module in todo:
+        status, rows, gates, error = run_one(short, module)
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived:.6g}")
+        if args.artifact:
+            write_artifact(args.artifact, short, status, rows, gates, error)
+        summary.append((short, status, error or f"{len(rows)} rows"))
+
+    # Summary: '#'-prefixed so CSV consumers keep parsing the stream.
+    counts = {"ok": 0, "skip": 0, "fail": 0}
+    print("#")
+    print("# bench summary:")
+    for short, status, note in summary:
+        counts[status] += 1
+        print(f"#   {status:<4} {short:<18} {note}")
+    print(f"# {counts['ok']} ok, {counts['skip']} skipped, "
+          f"{counts['fail']} failed")
+    return 1 if counts["fail"] else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

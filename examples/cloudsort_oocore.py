@@ -48,6 +48,7 @@ from repro.core.external_sort import external_sort
 from repro.data import gensort, valsort
 from repro.io.middleware import RetryPolicy
 from repro.io.tiered import tiered_cloudsort_store
+from repro.obs import Tracer, render_report, write_chrome_trace
 
 
 def main():
@@ -67,6 +68,9 @@ def main():
                     help="emulated cluster workers (0 = single-host driver)")
     ap.add_argument("--kill-worker", default=None, metavar="I:K",
                     help="with --workers: worker I dies after K tasks")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in chrome://tracing or ui.perfetto.dev)")
     args = ap.parse_args()
 
     w = len(jax.devices())
@@ -96,9 +100,13 @@ def main():
             faults = dataclasses.replace(faults, get_rate=args.get_rate)
 
     root = args.store or tempfile.mkdtemp(prefix="cloudsort-store-")
+    # One tracer shared by the job and the store stack: store request
+    # attempts become tier-tagged child events of the issuing task.
+    tracer = Tracer(job="cloudsort")
     store = tiered_cloudsort_store(
         root, spill_prefixes=(plan.spill_prefix,), faults=faults,
         retry=RetryPolicy(max_attempts=10, base_delay_s=0.01, max_delay_s=0.5),
+        tracer=tracer,
     )
     store.create_bucket("cloudsort")
     data_bytes = args.records * plan.record_bytes
@@ -133,7 +141,7 @@ def main():
                 cplan, fail_after_tasks={int(idx): int(k or 1)})
         crep = ClusterExecutor(
             store, "cloudsort", mesh=mesh, axis_names="w", plan=plan,
-            cluster=cplan,
+            cluster=cplan, tracer=tracer,
         ).sort()
         rep = crep.sort
         print(f"[cluster] {crep.num_cluster_workers} workers, "
@@ -146,7 +154,7 @@ def main():
                   "re-executed on survivors")
     else:
         rep = external_sort(store, "cloudsort", mesh=mesh, axis_names="w",
-                            plan=plan)
+                            plan=plan, tracer=tracer)
     sort_s = rep.map_seconds + rep.reduce_seconds
     print(f"[sort] {rep.total_records} records in {sort_s:.2f}s "
           f"({rep.total_records/sort_s:,.0f} rec/s) — {rep.num_waves} waves, "
@@ -176,18 +184,9 @@ def main():
               f"{rep.reduce_chunk_bytes_max/1e3:.1f} KB as reducers "
               "retired (budget re-apportioned to the tail)")
 
-    # --- span timeline: the overlap, measured not asserted --------------
-    ph = rep.phase_seconds
-    print("[spans] " + "  ".join(
-        f"{name}={ph.get(name, 0.0):.2f}s" for name in (
-            "map.wait", "map.compute", "map.spill",
-            "reduce.fetch", "reduce.merge", "reduce.upload")))
-    reduce_busy = sum(ph.get(k, 0.0) for k in
-                      ("reduce.fetch", "reduce.merge", "reduce.upload"))
-    if rep.reduce_seconds > 0:
-        print(f"[spans] reduce concurrency: {reduce_busy:.2f}s of phase work "
-              f"in {rep.reduce_seconds:.2f}s wall = "
-              f"{reduce_busy/rep.reduce_seconds:.2f}x overlap")
+    # --- spans / per-tier traffic / requests: the obs renderer ----------
+    for line in render_report(rep):
+        print(line)
 
     # --- validate from the store (paper §3.2, valsort over S3 output) ---
     val = valsort.validate_from_store(
@@ -195,16 +194,6 @@ def main():
     print(f"[valsort] within={val.sorted_within} across={val.sorted_across} "
           f"checksum={val.checksum_match} records={val.total_records}")
     assert val.ok and val.total_records == args.records
-
-    # --- per-tier traffic + faults absorbed -----------------------------
-    for tier, s in (rep.tier_stats or {}).items():
-        print(f"[{tier:>7s}] GET={s.get_requests} PUT={s.put_requests} "
-              f"DEL={s.delete_requests} read={s.bytes_read/1e6:.1f}MB "
-              f"written={s.bytes_written/1e6:.1f}MB throttled={s.throttled} "
-              f"retries={s.retries} stall={s.stall_seconds:.2f}s")
-    print(f"[requests] total GET={rep.stats.get_requests} "
-          f"PUT={rep.stats.put_requests} retries={rep.stats.retries} "
-          f"throttled={rep.stats.throttled}")
 
     # --- cost (paper §3.3.2): measured requests, not Table-1 constants ---
     paper = cloudsort_tco()
@@ -224,6 +213,11 @@ def main():
           f"{data_bytes/1e12:.6f} TB; ssd spill free):")
     for name, val_ in measured.rows():
         print(f"         {name:<24s} ${val_:.6f}")
+
+    if args.trace_out:
+        tr = write_chrome_trace(args.trace_out, tracer)
+        print(f"[trace] {len(tr['traceEvents'])} events -> {args.trace_out} "
+              "(open in chrome://tracing or ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ def main():
     from repro.configs.groupby import SMOKE, groupby_smoke_plan
     from repro.io.middleware import RetryPolicy
     from repro.io.tiered import tiered_cloudsort_store
+    from repro.obs import Tracer, render_report, write_chrome_trace
     from repro.shuffle.executor import ClusterPlan
     from repro.shuffle.groupby import (groupby_job,
                                        validate_groupby_from_store,
@@ -52,15 +53,20 @@ def main():
                     help="emulated cluster workers (0 = single-host)")
     ap.add_argument("--kill-worker", default=None, metavar="I:K",
                     help="with --workers: worker I dies after K tasks")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in chrome://tracing or ui.perfetto.dev)")
     args = ap.parse_args()
 
     plan = groupby_smoke_plan()
     faults = None if args.no_faults else smoke_fault_profile()
     root = args.store or tempfile.mkdtemp(prefix="groupby-store-")
+    tracer = Tracer(job="groupby")
     store = tiered_cloudsort_store(
         root, spill_prefixes=(plan.spill_prefix,), faults=faults,
         retry=RetryPolicy(max_attempts=10, base_delay_s=0.01,
                           max_delay_s=0.5),
+        tracer=tracer,
     )
     store.create_bucket("agg")
     mode = "clean" if faults is None else (
@@ -80,7 +86,7 @@ def main():
 
     job = groupby_job(store, "agg", plan=plan,
                       num_partitions=args.partitions,
-                      combine=not args.no_combine)
+                      combine=not args.no_combine, tracer=tracer)
     if args.workers > 0:
         cplan = ClusterPlan(num_workers=args.workers)
         if args.kill_worker:
@@ -111,11 +117,8 @@ def main():
           f"{rep.reduce_memory_bound_bytes/1e3:.1f} KB")
     assert rep.reduce_peak_merge_bytes <= rep.reduce_memory_bound_bytes
 
-    ph = rep.phase_seconds
-    print("[spans] " + "  ".join(
-        f"{name}={ph.get(name, 0.0):.2f}s" for name in (
-            "map.wait", "map.compute", "map.spill",
-            "reduce.fetch", "reduce.merge", "reduce.upload")))
+    for line in render_report(rep):
+        print(line)
 
     val = validate_groupby_from_store(
         store, "agg", plan.output_prefix, job.partitioner,
@@ -125,16 +128,16 @@ def main():
           f"sorted={val.keys_sorted_unique} routing={val.routing_ok}")
     assert val.ok, val
 
-    for tier, s in (rep.tier_stats or {}).items():
-        print(f"[{tier:>7s}] GET={s.get_requests} PUT={s.put_requests} "
-              f"read={s.bytes_read/1e6:.1f}MB "
-              f"written={s.bytes_written/1e6:.1f}MB "
-              f"throttled={s.throttled} retries={s.retries}")
     spill = (rep.tier_stats or {}).get("ssd")
     if spill is not None:
         print(f"[combine] shuffled {spill.bytes_written/1e6:.2f} MB of "
               f"spill for {rep.total_records * plan.record_bytes/1e6:.2f} MB "
               "of input (re-run with --no-combine to compare)")
+
+    if args.trace_out:
+        tr = write_chrome_trace(args.trace_out, tracer)
+        print(f"[trace] {len(tr['traceEvents'])} events -> {args.trace_out} "
+              "(open in chrome://tracing or ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

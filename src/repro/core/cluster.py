@@ -63,7 +63,8 @@ class ClusterExecutor:
                  mesh: jax.sharding.Mesh, axis_names: Sequence[str] | str,
                  plan: xs.ExternalSortPlan,
                  cluster: ClusterPlan = ClusterPlan(),
-                 workers: Sequence[Worker] | None = None):
+                 workers: Sequence[Worker] | None = None,
+                 tracer=None):
         warnings.warn(
             "ClusterExecutor is a deprecated shim; use "
             "repro.shuffle.sort.sort_shuffle_job(...).run(workers=N) or "
@@ -77,12 +78,14 @@ class ClusterExecutor:
         self.cluster = cluster
         self.workers = (list(workers) if workers is not None
                         else build_workers(store, cluster))
+        self.tracer = tracer
 
     def sort(self) -> ClusterSortReport:
         from repro.shuffle.sort import sort_shuffle_job
 
         job = sort_shuffle_job(self.store, self.bucket, mesh=self.mesh,
-                               axis_names=self.axis_names, plan=self.plan)
+                               axis_names=self.axis_names, plan=self.plan,
+                               tracer=self.tracer)
         return job.run(worker_list=self.workers)
 
 
@@ -95,6 +98,7 @@ def cluster_external_sort(
     plan: xs.ExternalSortPlan,
     cluster: ClusterPlan = ClusterPlan(),
     workers: Sequence[Worker] | None = None,
+    tracer=None,
 ) -> ClusterSortReport:
     """DEPRECATED shim: build a ClusterExecutor and run the sort. Use
     `repro.shuffle.sort.sort_shuffle_job(...).run(cluster=...)`."""
@@ -105,7 +109,7 @@ def cluster_external_sort(
         DeprecationWarning, stacklevel=2)
     return ClusterExecutor(
         store, bucket, mesh=mesh, axis_names=axis_names, plan=plan,
-        cluster=cluster, workers=workers,
+        cluster=cluster, workers=workers, tracer=tracer,
     ).sort()
 
 

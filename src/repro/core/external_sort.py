@@ -398,6 +398,7 @@ def external_sort(
     mesh: jax.sharding.Mesh,
     axis_names: Sequence[str] | str,
     plan: ExternalSortPlan,
+    tracer=None,
 ) -> ExternalSortReport:
     """Sort every record under plan.input_prefix into plan.output_prefix.
 
@@ -422,4 +423,4 @@ def external_sort(
     from repro.shuffle.sort import sort_shuffle_job
 
     return sort_shuffle_job(store, bucket, mesh=mesh, axis_names=axis_names,
-                            plan=plan).run(workers=0)
+                            plan=plan, tracer=tracer).run(workers=0)

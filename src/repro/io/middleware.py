@@ -17,7 +17,9 @@ Ordering matters and the stack above is the intended one: Metrics sits
 *outside* the fault injectors so a throttled attempt is still an issued
 (and billed) request, and *inside* Retry so every re-issue is counted —
 which is exactly the retry-inflated request count the cost model's access
-legs should price (core/cost_model.py).
+legs should price (core/cost_model.py). TracingMiddleware (the obs
+layer's per-task request attribution) takes the same position, so its
+per-attempt events and counters agree with the billed counts exactly.
 
 Every middleware delegates the seven primitives through one `_call`
 hook, and wraps multipart sessions so streamed part uploads flow through
@@ -58,6 +60,8 @@ from typing import Callable
 
 from repro.io.backends import (MultipartUpload, ObjectMeta, RetryableError,
                                SlowDown, StoreBackend, StoreStats)
+from repro.obs.context import current_context
+from repro.obs.events import Tracer
 
 
 class StoreMiddleware(StoreBackend):
@@ -171,6 +175,69 @@ class MetricsMiddleware(StoreMiddleware):
     def stats_snapshot(self) -> StoreStats:
         """Consistent copy of the counters (for before/after deltas)."""
         return self.stats.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# Tracing: per-attempt attribution to the issuing task (obs layer)
+# ---------------------------------------------------------------------------
+
+
+class TracingMiddleware(StoreMiddleware):
+    """Attributes every request attempt to the task that issued it.
+
+    The observability twin of MetricsMiddleware, and it sits at the same
+    stack position (inside RetryMiddleware, outside the fault injectors)
+    so its counts are retry-inflated bit-for-bit like the billed ones:
+    every attempt — throttled, failed, or served — becomes one child
+    span of the current TraceContext (obs/context.py) in the tracer's
+    event log, and one `store.requests{kind,outcome[,tier]}` counter
+    increment in its registry. Successful reads/writes also add to the
+    phase-labeled `store.bytes_read` / `store.bytes_written` counters —
+    the per-phase bytes/s the report's metrics derive from.
+
+    Outcomes: "ok", "slowdown" (a 503 the retry layer will re-issue),
+    "error" (anything else, e.g. a dead worker's severed store view).
+    """
+
+    def __init__(self, inner: StoreBackend, tracer: Tracer, *,
+                 tier: str = ""):
+        super().__init__(inner)
+        self.tracer = tracer
+        self.tier = tier
+
+    def _record(self, kind: str, t0: float, outcome: str, nbytes: int,
+                *, read: bool = False) -> None:
+        reg = self.tracer.registry
+        labels = {"kind": kind, "outcome": outcome}
+        if self.tier:
+            labels["tier"] = self.tier
+        reg.counter("store.requests", 1, **labels)
+        if outcome == "ok" and nbytes:
+            ctx = current_context()
+            blabels = {"phase": ctx.phase if ctx else ""}
+            if self.tier:
+                blabels["tier"] = self.tier
+            reg.counter("store.bytes_read" if read else "store.bytes_written",
+                        nbytes, **blabels)
+        self.tracer.event(f"store.{kind}", t0, time.perf_counter(),
+                          outcome=outcome, nbytes=nbytes,
+                          tier=self.tier or None)
+
+    def _call(self, kind, issue, *, read=False, nbytes=0):
+        if kind == "bucket":  # not a billed request; Metrics skips it too
+            return issue()
+        t0 = time.perf_counter()
+        try:
+            result = issue()
+        except SlowDown:
+            self._record(kind, t0, "slowdown", 0)
+            raise
+        except BaseException:
+            self._record(kind, t0, "error", 0)
+            raise
+        n = len(result) if read else nbytes
+        self._record(kind, t0, "ok", n, read=read)
+        return result
 
 
 # ---------------------------------------------------------------------------
@@ -376,13 +443,15 @@ class RetryMiddleware(StoreMiddleware):
 
     def __init__(self, inner: StoreBackend, policy: RetryPolicy = RetryPolicy(),
                  *, stats: StoreStats | None = None, seed: int = 0,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 tracer: Tracer | None = None):
         super().__init__(inner)
         self.policy = policy
         self.stats = stats if stats is not None else StoreStats()
         self._sleep = sleep
         self._rng = random.Random(seed)
         self._rng_lock = threading.Lock()
+        self.tracer = tracer
 
     def _call(self, kind, issue, *, read=False, nbytes=0):
         attempt = 0
@@ -397,17 +466,28 @@ class RetryMiddleware(StoreMiddleware):
                     delay = self.policy.delay(attempt - 1, self._rng)
                 self.stats.add("retries", 1)
                 self.stats.add("stall_seconds", delay)
+                if self.tracer is not None:
+                    self.tracer.registry.counter("store.retries", 1, kind=kind)
+                    self.tracer.registry.observe("store.retry_delay_s", delay,
+                                                 kind=kind)
+                    self.tracer.instant("store.retry", kind=kind,
+                                        attempt=attempt, delay_s=delay)
                 self._sleep(delay)
 
 
 def fault_injected(backend: StoreBackend, *, profile: FaultProfile,
                    retry: RetryPolicy | None = RetryPolicy(),
-                   seed: int = 0) -> StoreBackend:
+                   seed: int = 0, tracer: Tracer | None = None,
+                   tier: str = "") -> StoreBackend:
     """Compose the canonical stack around `backend` with one shared
-    StoreStats: Retry(Metrics(Throttle(Latency(backend)))).
+    StoreStats: Retry(Tracing?(Metrics(Throttle(Latency(backend))))).
 
     Pass `retry=None` to expose raw SlowDowns to the caller (tests, or a
-    client that does its own backoff). The returned store duck-types the
+    client that does its own backoff). With a `tracer`, a
+    TracingMiddleware rides at the MetricsMiddleware position (inside
+    Retry, outside the fault injectors) so per-task attribution counts
+    the same retry-inflated attempts the bill does; `tier` labels its
+    events (e.g. "durable" / "ssd"). The returned store duck-types the
     PR-1 ObjectStore: `.stats` / `.stats_snapshot()` reach the shared
     counters via attribute delegation.
     """
@@ -416,6 +496,9 @@ def fault_injected(backend: StoreBackend, *, profile: FaultProfile,
         backend, profile, stats=stats, seed=seed)
     store = ThrottlingMiddleware(store, profile)
     store = MetricsMiddleware(store, stats=stats)
+    if tracer is not None:
+        store = TracingMiddleware(store, tracer, tier=tier)
     if retry is not None:
-        store = RetryMiddleware(store, retry, stats=stats, seed=seed + 1)
+        store = RetryMiddleware(store, retry, stats=stats, seed=seed + 1,
+                                tracer=tracer)
     return store

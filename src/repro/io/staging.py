@@ -37,6 +37,8 @@ import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Iterable, Iterator, Type, TypeVar
 
+from repro.obs.context import current_context, use_context
+
 T = TypeVar("T")
 
 
@@ -119,10 +121,15 @@ class AsyncWriter:
         """Queue fn(*args); blocks while `max_inflight` writes are pending
         (backpressure — the merge-controller ack analogue)."""
         self._slots.acquire()
+        # TraceContexts don't cross thread pools on their own: capture the
+        # submitter's context here so the write's store requests are
+        # attributed to the task that queued them, not the pool thread.
+        ctx = current_context()
 
         def run():
             try:
-                return fn(*args, **kwargs)
+                with use_context(ctx):
+                    return fn(*args, **kwargs)
             except BaseException as e:
                 # Record the *chronologically first* failure: with several
                 # writer threads, the future list's order is submission

@@ -43,7 +43,8 @@ from typing import Iterable, Sequence
 from repro.io.backends import (FilesystemBackend, MultipartUpload, ObjectMeta,
                                StoreBackend, StoreStats)
 from repro.io.middleware import (FaultProfile, MetricsMiddleware, RetryPolicy,
-                                 fault_injected)
+                                 TracingMiddleware, fault_injected)
+from repro.obs.events import Tracer
 
 
 class TieredStore(StoreBackend):
@@ -128,6 +129,7 @@ def tiered_cloudsort_store(
     retry: RetryPolicy | None = None,
     chunk_size: int = 4 << 20,
     seed: int = 0,
+    tracer: Tracer | None = None,
 ) -> TieredStore:
     """The paper's storage layout on one machine: a fault-injected durable
     tier at `root`/durable and a raw fast tier at `root`/ssd.
@@ -136,7 +138,11 @@ def tiered_cloudsort_store(
     baseline for overlap benchmarks); otherwise it gets the full
     Retry(Metrics(Throttle(Latency(fs)))) stack (`retry` defaults to
     RetryPolicy() when faults are injected). The SSD tier is always
-    metrics-only — local NVMe has neither request fees nor 503s.
+    metrics-only — local NVMe has neither request fees nor 503s. With a
+    `tracer` (obs/events.Tracer) each tier also carries a
+    TracingMiddleware, tier-labelled "durable" / "ssd", so every request
+    attempt lands on the issuing task's trace as a tier-tagged child
+    span.
     """
     import os
 
@@ -144,10 +150,15 @@ def tiered_cloudsort_store(
                                    chunk_size=chunk_size)
     if faults is None:
         durable: StoreBackend = MetricsMiddleware(durable_fs)
+        if tracer is not None:
+            durable = TracingMiddleware(durable, tracer, tier="durable")
     else:
         durable = fault_injected(
             durable_fs, profile=faults,
-            retry=RetryPolicy() if retry is None else retry, seed=seed)
-    ssd = MetricsMiddleware(
+            retry=RetryPolicy() if retry is None else retry, seed=seed,
+            tracer=tracer, tier="durable")
+    ssd: StoreBackend = MetricsMiddleware(
         FilesystemBackend(os.path.join(root, "ssd"), chunk_size=chunk_size))
+    if tracer is not None:
+        ssd = TracingMiddleware(ssd, tracer, tier="ssd")
     return TieredStore(durable, ssd, ssd_prefixes=tuple(spill_prefixes))

@@ -310,6 +310,7 @@ class ShuffleReport:
     spans: list["Span"] = dataclasses.field(default_factory=list)
     spans_dropped: int = 0  # spans beyond the recorder cap (totals stay exact)
     phase_seconds: dict[str, float] = dataclasses.field(default_factory=dict)
+    metrics: dict = dataclasses.field(default_factory=dict)  # MetricsRegistry.snapshot()
 
     # -- generic aliases over the legacy sort-flavoured names ------------
 
@@ -373,6 +374,17 @@ class ClusterShuffleReport:
     @property
     def reexecuted_tasks(self) -> int:
         return self.reexecuted_map_tasks + self.reexecuted_reduce_tasks
+
+    @property
+    def spans_dropped(self) -> int:
+        """Spans beyond the recorder cap (see runtime.PhaseTimeline
+        `max_spans`); phase totals stay exact regardless."""
+        return self.report.spans_dropped
+
+    @property
+    def metrics(self) -> dict:
+        """The run's MetricsRegistry snapshot (see obs/metrics.py)."""
+        return self.report.metrics
 
     @property
     def records_per_second(self) -> float:

@@ -21,6 +21,7 @@ from typing import Callable, Mapping, Sequence
 
 from repro.io.backends import StoreBackend
 from repro.io.middleware import KillSwitchMiddleware, MetricsMiddleware
+from repro.obs.context import TraceContext, use_context
 
 from repro.shuffle import runtime as rt
 from repro.shuffle.api import MapOp, require
@@ -248,8 +249,9 @@ class PhaseDriver:
     exception anywhere cancels the job and re-raises.
     """
 
-    def __init__(self, workers: Sequence[Worker]):
+    def __init__(self, workers: Sequence[Worker], *, tracer=None):
         self.workers = list(workers)
+        self.tracer = tracer  # obs Tracer: rounds, deaths, re-executions
         self._lock = threading.Lock()
         self._dead: set[str] = set()
         self.failed_workers: list[str] = []
@@ -257,13 +259,26 @@ class PhaseDriver:
 
     def _drive(self, worker: Worker, entry: Callable[[Worker], None],
                control: rt.JobControl) -> None:
+        # Worker threads start context-free (ContextVars don't cross
+        # threads): seed the job/worker identity so task contexts built
+        # inside the phase bodies inherit the right job name.
+        ctx = None
+        if self.tracer is not None:
+            ctx = TraceContext(job=self.tracer.job, worker=worker.name)
         try:
-            entry(worker)
+            with use_context(ctx):
+                entry(worker)
         except WorkerFailure:
             with self._lock:
                 if worker.name not in self._dead:
                     self._dead.add(worker.name)
                     self.failed_workers.append(worker.name)
+                    if self.tracer is not None:
+                        self.tracer.instant(
+                            "cluster.worker_dead",
+                            ctx=TraceContext(job=self.tracer.job,
+                                             worker=worker.name))
+                        self.tracer.registry.counter("cluster.workers_dead")
         except BaseException as e:
             control.fail(e)
 
@@ -286,6 +301,14 @@ class PhaseDriver:
                     f"phase with {len(pending)} tasks unfinished")
             if not first_round:
                 reexecuted += len(pending)
+                if self.tracer is not None:
+                    self.tracer.registry.counter(
+                        "cluster.tasks_reexecuted", len(pending), phase=phase)
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "cluster.round", phase=phase,
+                    first=first_round, pending=len(pending),
+                    alive=len(alive))
             first_round = False
             pool = TaskPool(pending, [wk.name for wk in alive])
 

@@ -267,15 +267,17 @@ class GroupByReduceOp(ReduceOp):
 
 
 def groupby_job(store: StoreBackend, bucket: str, *, plan: ShufflePlan,
-                num_partitions: int, combine: bool = True) -> ShuffleJob:
+                num_partitions: int, combine: bool = True,
+                tracer=None) -> ShuffleJob:
     """Build the group-by ShuffleJob: hash-routed keyed aggregation with
-    an optional map-side combiner."""
+    an optional map-side combiner. `tracer` as in sort_shuffle_job."""
     partitioner = HashPartitioner(num_partitions)
     map_op = GroupByMapOp(plan, partitioner,
                           combiner=SumCombineOp() if combine else None)
     reduce_op = GroupByReduceOp(plan, map_op)
     return ShuffleJob(store, bucket, plan=plan, map_op=map_op,
-                      reduce_op=reduce_op, partitioner=partitioner)
+                      reduce_op=reduce_op, partitioner=partitioner,
+                      tracer=tracer)
 
 
 # ---------------------------------------------------------------------------

@@ -28,6 +28,8 @@ import time
 from typing import Sequence
 
 from repro.io.backends import StoreBackend, StoreStats
+from repro.obs.context import use_context
+from repro.obs.events import Tracer
 
 from repro.shuffle import executor as ex
 from repro.shuffle import runtime as rt
@@ -59,6 +61,11 @@ class ShuffleSession:
         # every scheduler (one per worker) draws on one global budget.
         self.slots = min(max(int(schedulers), 1) * plan.parallel_reducers,
                          self.num_partitions)
+        # One Tracer per run unless the job brought its own (examples
+        # pass the same tracer to the store stack so request attempts
+        # land on the same timeline as the spans).
+        self.tracer = (job.tracer if job.tracer is not None
+                       else Tracer(job="shuffle"))
         # Budget feasibility is pure plan validation (each partition
         # streams at most one run per map task).
         _, self.chunk_bytes = rt.reduce_chunking(
@@ -69,6 +76,7 @@ class ShuffleSession:
             record_bytes=plan.record_bytes,
             slots=self.slots,
             partitions=self.num_partitions,
+            tracer=self.tracer,
         )
         # Overwrite semantics: clear stale spill/output objects from any
         # prior run so the reduce pass and downstream validation see only
@@ -83,8 +91,12 @@ class ShuffleSession:
                            else StoreStats())
         self.tier_base = (store.per_tier_stats()
                           if hasattr(store, "per_tier_stats") else None)
-        # Run-scoped execution state.
-        self.timeline = rt.PhaseTimeline(origin=time.perf_counter())
+        # Run-scoped execution state. The timeline mirrors every span
+        # into the tracer (absolute times; the tracer normalises to its
+        # own origin), so the Chrome trace sees exactly what the report
+        # sees.
+        self.timeline = rt.PhaseTimeline(origin=time.perf_counter(),
+                                         sink=self.tracer.timeline_sink())
         self.control = rt.JobControl()
         self.peak = rt.PeakTracker()
         self.shared = rt.ReduceShared(
@@ -108,8 +120,9 @@ class ShuffleSession:
             with pop_lock:
                 return pending.popleft() if pending else None
 
-        rt.run_map_tasks(store, bucket, job.map_op, pop_task, plan=plan,
-                         timeline=self.timeline, control=self.control)
+        with use_context(self.tracer.root):
+            rt.run_map_tasks(store, bucket, job.map_op, pop_task, plan=plan,
+                             timeline=self.timeline, control=self.control)
         map_seconds = time.perf_counter() - t0
 
         parts = collections.deque(range(self.num_partitions))
@@ -119,8 +132,9 @@ class ShuffleSession:
                 return parts.popleft() if parts else None
 
         t0 = time.perf_counter()
-        rt.ReduceScheduler(store, self.shared, width=self.slots,
-                           runs_hint=self.num_tasks).run(pop_partition)
+        with use_context(self.tracer.root):
+            rt.ReduceScheduler(store, self.shared, width=self.slots,
+                               runs_hint=self.num_tasks).run(pop_partition)
         self.control.raise_first()
         reduce_seconds = time.perf_counter() - t0
         return self.build_report(map_seconds=map_seconds,
@@ -137,7 +151,7 @@ class ShuffleSession:
             reduce_shared=self.shared, timeline=self.timeline,
             control=self.control, num_map_tasks=self.num_tasks,
         )
-        driver = ex.PhaseDriver(workers)
+        driver = ex.PhaseDriver(workers, tracer=self.tracer)
 
         t_origin = time.perf_counter()
         reexec_map = driver.run_phase(
@@ -180,6 +194,20 @@ class ShuffleSession:
             tier_now = store.per_tier_stats()
             tier_stats = {name: tier_now[name] - self.tier_base[name]
                           for name in tier_now}
+        reg = self.tracer.registry
+        reg.gauge("phase.seconds", map_seconds, phase="map")
+        reg.gauge("phase.seconds", reduce_seconds, phase="reduce")
+        # Derive bytes/s gauges from the phase-labelled byte counters the
+        # TracingMiddleware maintains (zero counters = no tracing store
+        # wired in; skip rather than emit misleading zero rates).
+        for phase, seconds, metric in (
+                ("map", map_seconds, "store.bytes_read"),
+                ("map", map_seconds, "store.bytes_written"),
+                ("reduce", reduce_seconds, "store.bytes_read"),
+                ("reduce", reduce_seconds, "store.bytes_written")):
+            nbytes = reg.total(metric, phase=phase)
+            if nbytes and seconds > 0:
+                reg.gauge(metric + "_per_s", nbytes / seconds, phase=phase)
         return ShuffleReport(
             total_records=map_op.total_records,
             num_waves=self.num_tasks,
@@ -203,6 +231,7 @@ class ShuffleSession:
             spans=self.timeline.spans(),
             spans_dropped=self.timeline.dropped,
             phase_seconds=self.timeline.totals(),
+            metrics=reg.snapshot(),
         )
 
 
@@ -218,13 +247,14 @@ class ShuffleJob:
 
     def __init__(self, store: StoreBackend, bucket: str, *, plan,
                  map_op: MapOp, reduce_op: ReduceOp,
-                 partitioner: Partitioner):
+                 partitioner: Partitioner, tracer: Tracer | None = None):
         self.store = store
         self.bucket = bucket
         self.plan = plan
         self.map_op = map_op
         self.reduce_op = reduce_op
         self.partitioner = partitioner
+        self.tracer = tracer
 
     def prepare(self, *, schedulers: int = 1) -> ShuffleSession:
         """Preflight one run (validation, task enumeration, governor,

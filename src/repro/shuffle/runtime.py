@@ -17,6 +17,17 @@ chunks are granted by the AdaptiveBudgetGovernor out of the plan's
 global `reduce_memory_budget_bytes` — see the governor docstring for
 the provable bound. Encoded output parts being sliced/uploaded sit on
 top (~(1 + max_inflight_writes) x part bytes per active reducer).
+
+Observability: PhaseTimeline's raw span list is capped at `max_spans`
+(default 4096, a constructor knob) — per-phase totals stay exact past
+the cap and the report's `spans_dropped` (surfaced by ShuffleReport and
+ClusterShuffleReport alike) counts the overflow, so a huge run degrades
+to aggregates instead of hoarding memory. Wire a `sink` (usually
+obs/events.Tracer.timeline_sink()) to forward every span into the
+unified event log as it is recorded; task execution binds an
+obs TraceContext (phase/task/worker) around each map task and reduce
+partition so store requests issued on behalf of a task — including
+writes handed to staging pools — are attributed to it.
 """
 from __future__ import annotations
 
@@ -33,8 +44,18 @@ import numpy as np
 from repro.io import records as rec
 from repro.io import staging
 from repro.io.backends import RetryableError, StoreBackend
+from repro.obs.context import (TraceContext, bind_context, current_context,
+                               use_context)
 
 from repro.shuffle.api import MapOp, ReduceOp, require
+
+
+def _task_context(phase: str, task, tag_prefix: str) -> TraceContext:
+    """The TraceContext for one task: narrows the ambient context (the
+    cluster driver binds job/worker) or starts fresh on the single host."""
+    base = current_context() or TraceContext(job="job")
+    worker = tag_prefix.rstrip("/") or base.worker or "host"
+    return base.with_phase(phase).with_task(task).with_worker(worker)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,12 +82,14 @@ class PhaseTimeline:
     stage's wall time is *measured overlap*, which is the point.
     """
 
-    def __init__(self, origin: float, *, max_spans: int = 4096):
+    def __init__(self, origin: float, *, max_spans: int = 4096,
+                 sink=None):
         self._origin = origin
         self._lock = threading.Lock()
         self._totals: dict[str, float] = {}
         self._spans: list[Span] = []
         self._max = int(max_spans)
+        self._sink = sink  # callable(phase, abs_start, abs_end, worker_tag)
         self.dropped = 0
 
     def add(self, phase: str, start: float, end: float | None = None,
@@ -79,6 +102,10 @@ class PhaseTimeline:
                 self._spans.append(span)
             else:
                 self.dropped += 1
+        if self._sink is not None:
+            # Outside the lock: the sink (obs Tracer) has its own, and
+            # it receives ABSOLUTE times — its clock origin may differ.
+            self._sink(phase, start, end, worker)
 
     @contextlib.contextmanager
     def span(self, phase: str, worker: str = ""):
@@ -177,7 +204,8 @@ class AdaptiveBudgetGovernor:
     """
 
     def __init__(self, *, budget: int, chunk_cap: int, record_bytes: int,
-                 slots: int, partitions: int):
+                 slots: int, partitions: int, tracer=None):
+        self.tracer = tracer  # obs Tracer: governor.grant_bytes histogram
         self.budget = int(budget)
         self.chunk_cap = int(chunk_cap)
         self.record_bytes = int(record_bytes)
@@ -220,7 +248,10 @@ class AdaptiveBudgetGovernor:
             self._free -= grant
             chunk = self._chunk_of(runs, grant)
             self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
-            return chunk
+        if self.tracer is not None:
+            self.tracer.registry.observe("governor.grant_bytes", grant,
+                                         event="register")
+        return chunk
 
     def chunk_bytes(self, rid: int) -> int:
         if not self.budget:
@@ -234,6 +265,7 @@ class AdaptiveBudgetGovernor:
         returns the current per-run chunk in bytes."""
         if not self.budget:
             return self.chunk_cap
+        grew = 0
         with self._cond:
             runs, grant = self._live[rid]
             target = runs * self.chunk_cap
@@ -251,9 +283,13 @@ class AdaptiveBudgetGovernor:
                     grant += extra
                     self._live[rid] = (runs, grant)
                     self._free -= extra
+                    grew = extra
             chunk = self._chunk_of(runs, grant)
             self.max_chunk_bytes = max(self.max_chunk_bytes, chunk)
-            return chunk
+        if grew and self.tracer is not None:
+            self.tracer.registry.observe("governor.grant_bytes", grant,
+                                         event="grow")
+        return chunk
 
     def retire(self, rid: int, *, completed: bool = True) -> None:
         """Release the grant back to the free pool (waking any waiting
@@ -557,6 +593,15 @@ class ReduceScheduler:
 
     def _reduce_one(self, r: int, refill_pool, finishers,
                     on_done: Callable[[int], None] | None) -> None:
+        # The whole partition body runs under its TraceContext: the
+        # ranged GETs (inline or via the refill pool), part uploads and
+        # the finisher commit (captured by AsyncWriter.submit) are all
+        # attributed to reduce task r on this worker.
+        with use_context(_task_context("reduce", f"r{r}", self.tag_prefix)):
+            self._reduce_one_inner(r, refill_pool, finishers, on_done)
+
+    def _reduce_one_inner(self, r: int, refill_pool, finishers,
+                          on_done: Callable[[int], None] | None) -> None:
         shared = self.shared
         plan = shared.plan
         op = shared.reduce_op
@@ -632,7 +677,10 @@ class ReduceScheduler:
                     if len(need) == 1:
                         need[0].refill()
                     else:  # concurrent ranged GETs: one RTT per cycle
-                        list(refill_pool.map(RunCursor.refill, need))
+                        # bind_context: the shared refill pool's threads
+                        # must issue these GETs as THIS partition's.
+                        list(refill_pool.map(bind_context(RunCursor.refill),
+                                             need))
                     timeline.add("reduce.fetch", t, worker=tag)
                 shared.peak.update(r, sum(c.buffered_bytes for c in cursors))
                 t = time.perf_counter()
@@ -725,12 +773,16 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
         # thread budget: each pull claims the next task (up to
         # prefetch_depth ahead of processing). A claimed-but-unconfirmed
         # task at death is simply re-executed by the driver's next round.
+        # Each load is bound to ITS task's TraceContext at claim time:
+        # task g+1's prefetched GETs must not be attributed to task g,
+        # which is what the processing thread's ambient context says.
         while not control.cancel.is_set():
             g = pop_next()
             if g is None:
                 return
             popped.append(g)
-            yield lambda g=g: map_op.load(store, bucket, g)
+            yield bind_context(lambda g=g: map_op.load(store, bucket, g),
+                               _task_context("map", f"g{g}", tag_prefix))
 
     with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
         task_iter = iter(staging.prefetch(
@@ -745,8 +797,11 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
             g = popped.popleft()
             tag = f"{tag_prefix}g{g}"
             timeline.add("map.wait", t_wait, worker=tag)
-            map_op.process(store, bucket, g, data, spiller=spiller,
-                           timeline=timeline, tag=tag)
+            # Processing runs under the task's TraceContext so spill puts
+            # (captured by the spiller at submit) carry the attribution.
+            with use_context(_task_context("map", f"g{g}", tag_prefix)):
+                map_op.process(store, bucket, g, data, spiller=spiller,
+                               timeline=timeline, tag=tag)
             if on_done is not None:
                 spiller.drain()
                 on_done(g)

@@ -127,16 +127,19 @@ class MergeReduceOp(ReduceOp):
 
 
 def sort_shuffle_job(store: StoreBackend, bucket: str, *, mesh, axis_names,
-                     plan) -> ShuffleJob:
+                     plan, tracer=None) -> ShuffleJob:
     """Build the CloudSort ShuffleJob: SortMapOp + MergeReduceOp over an
     order-preserving range partitioner. `plan` is a
     core/external_sort.ExternalSortPlan; run with
-    `job.run(workers=N[, cluster=ClusterPlan(...)])`."""
+    `job.run(workers=N[, cluster=ClusterPlan(...)])`. `tracer` is an
+    optional obs/events.Tracer the run records into (share it with the
+    store stack to get request-level child spans)."""
     map_op = SortMapOp(plan, mesh, axis_names)
     reduce_op = MergeReduceOp(plan, map_op)
     partitioner = RangePartitioner(map_op.sorter.w * map_op.sorter.r1)
     return ShuffleJob(store, bucket, plan=plan, map_op=map_op,
-                      reduce_op=reduce_op, partitioner=partitioner)
+                      reduce_op=reduce_op, partitioner=partitioner,
+                      tracer=tracer)
 
 
 __all__ = ["MergeReduceOp", "SortMapOp", "sort_shuffle_job"]

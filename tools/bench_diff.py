@@ -1,0 +1,129 @@
+"""Diff benchmark artifacts against committed baselines (the CI gate).
+
+Usage:
+    python tools/bench_diff.py --baseline benchmarks/baselines \\
+                               --current bench-out [--tolerance 0.25]
+
+Both directories hold ``BENCH_<name>.json`` artifacts written by
+``benchmarks/run.py --artifact`` (schema 1: rows keyed by name with
+us/derived, plus the bench module's ``GATES`` declarations). For every
+artifact present in *both* directories, each gated row's ``derived``
+value is compared:
+
+  * direction "lower" (the default): current may exceed baseline by at
+    most ``tolerance`` (relative) before it's a regression;
+  * direction "higher": current may fall below baseline by at most
+    ``tolerance``.
+
+Only gated rows are compared — timings and throughputs are recorded in
+the artifacts for trend inspection but never gated, because CI runners
+are noisy; the gated rows (request counts, TCO) are deterministic
+functions of the plan. A bench whose current status is "skip" passes (an
+environment that can't run the bench is not a regression); a current
+"fail" status fails the diff. Missing baselines warn and pass, so the
+gate bootstraps cleanly when a new bench lands before its baseline.
+
+Exit code: 0 = no gated regressions, 1 = at least one.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_artifacts(directory: str) -> dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(directory, "BENCH_*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        out[art.get("bench", os.path.basename(path))] = art
+    return out
+
+
+def relative_change(base: float, cur: float) -> float:
+    """(cur - base) / |base|; an exact-zero baseline compares exactly."""
+    if base == 0:
+        return 0.0 if cur == 0 else float("inf")
+    return (cur - base) / abs(base)
+
+
+def diff_bench(name: str, base: dict, cur: dict,
+               default_tolerance: float) -> list[str]:
+    """Returns regression messages for one bench (empty = pass)."""
+    if cur.get("status") == "skip":
+        print(f"  {name}: skipped in current run ({cur.get('error')}) — ok")
+        return []
+    if cur.get("status") == "fail":
+        return [f"{name}: bench FAILED in current run: {cur.get('error')}"]
+    if base.get("status") != "ok":
+        print(f"  {name}: baseline status {base.get('status')!r} — "
+              "nothing to compare")
+        return []
+
+    regressions = []
+    gates = cur.get("gates") or base.get("gates") or {}
+    for row, gate in sorted(gates.items()):
+        tol = float(gate.get("tolerance", default_tolerance))
+        direction = gate.get("direction", "lower")
+        b = base.get("rows", {}).get(row)
+        c = cur.get("rows", {}).get(row)
+        if b is None or c is None:
+            missing = "baseline" if b is None else "current"
+            regressions.append(f"{name}/{row}: gated row missing from "
+                               f"{missing} artifact")
+            continue
+        change = relative_change(b["derived"], c["derived"])
+        worse = change > tol if direction == "lower" else change < -tol
+        arrow = f"{b['derived']:.6g} -> {c['derived']:.6g} ({change:+.1%})"
+        if worse:
+            regressions.append(
+                f"{name}/{row}: {arrow} exceeds {tol:.0%} tolerance "
+                f"(direction: {direction} is better)")
+        else:
+            better = change < 0 if direction == "lower" else change > 0
+            tag = "improved" if better else "ok"
+            print(f"  {name}/{row}: {arrow} {tag}")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--current", required=True,
+                    help="directory of this run's BENCH_*.json artifacts")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="default relative tolerance for gates that don't "
+                         "declare one (default: 0.25)")
+    args = ap.parse_args(argv)
+
+    baselines = load_artifacts(args.baseline)
+    currents = load_artifacts(args.current)
+    if not currents:
+        print(f"error: no BENCH_*.json artifacts under {args.current}",
+              file=sys.stderr)
+        return 1
+
+    regressions: list[str] = []
+    for name, cur in sorted(currents.items()):
+        base = baselines.get(name)
+        if base is None:
+            print(f"  {name}: no baseline yet — record one by committing "
+                  f"this artifact to {args.baseline}/")
+            continue
+        regressions += diff_bench(name, base, cur, args.tolerance)
+
+    if regressions:
+        print("\nGATED REGRESSIONS:", file=sys.stderr)
+        for msg in regressions:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print("\nbench diff: all gates green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,11 @@
 """Kernel microbenchmarks: the paper's C++ sort/merge component (§2.6)
 re-benchmarked as Pallas kernels (interpret on CPU; Mosaic on real TPU)
-against the XLA-native reference path."""
+against the XLA-native reference path.
+
+Standalone: PYTHONPATH=src python benchmarks/bench_kernels.py [--smoke]
+(the CI kernels-smoke job runs this; same rows as the benchmarks/run.py
+entry — the flag only documents intent, the bench has one scale).
+"""
 from __future__ import annotations
 
 import time
@@ -45,3 +50,22 @@ def run():
                   sk, bounds)
         rows.append((f"partition_{impl}", t * 1e6, sk.size / t))
     return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="single-scale run (the only scale; for CI symmetry "
+                         "with the other benches)")
+    ap.parse_args()
+    t0 = time.perf_counter()
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived:.6g}")
+    print(f"# total {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

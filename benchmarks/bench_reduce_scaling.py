@@ -20,8 +20,10 @@ chunking. Rows (name, us = reduce-phase wall time, derived):
 
   reduce_scaling/p{P}_f{F}        — derived = reduce-phase records/s
   reduce_scaling/speedup_p4_vs_p1 — derived = records/s ratio (>= 1.5 is
-                                    the acceptance bar)
+                                    the acceptance bar; gated)
   reduce_scaling/peak_over_budget — derived = measured peak / budget (<= 1)
+  reduce_scaling/get_requests     — derived = GETs per sort (gated,
+                                    deterministic, identical across cases)
 
 Standalone: PYTHONPATH=src python benchmarks/bench_reduce_scaling.py [--smoke|--full]
 `run()` (the benchmarks/run.py entry) always uses smoke scale.
@@ -29,6 +31,16 @@ Standalone: PYTHONPATH=src python benchmarks/bench_reduce_scaling.py [--smoke|--
 from __future__ import annotations
 
 import time
+
+#: CI gate declarations (tools/bench_diff.py). get_requests is a pure
+#: function of the plan; the scheduling speedup is timing-derived and
+#: gets a wide band — the gate catches parallelism collapsing, not
+#: runner noise.
+GATES = {
+    "reduce_scaling/speedup_p4_vs_p1": {"direction": "higher",
+                                        "tolerance": 0.4},
+    "reduce_scaling/get_requests": {"direction": "lower", "tolerance": 0.02},
+}
 
 
 def _build_store(latency_s: float, bandwidth_bps: float):
@@ -85,10 +97,13 @@ def run(full: bool = False):
         plan.input_records_per_partition, plan.payload_words)
 
     rows, rates, layouts, worst_peak_frac = [], {}, {}, 0.0
+    gets = {}
     for par, fanout in cases:
         p = dataclasses.replace(plan, parallel_reducers=par,
                                 part_upload_fanout=fanout)
+        gets0 = store.stats.get_requests
         rep = external_sort(store, "bench", mesh=mesh, axis_names="w", plan=p)
+        gets[(par, fanout)] = store.stats.get_requests - gets0
         val = valsort.validate_from_store(
             store, "bench", p.output_prefix, in_ck)
         assert val.ok, ((par, fanout), val)
@@ -119,6 +134,12 @@ def run(full: bool = False):
         f"reduce (bar: {bar}x)")
     rows.append(("reduce_scaling/speedup_p4_vs_p1", 0.0, speedup))
     rows.append(("reduce_scaling/peak_over_budget", 0.0, worst_peak_frac))
+    # The identical-GET-sequence contract, as a gated row: validation
+    # reads vary with valsort sampling, but the sort's own request count
+    # is a pure function of the plan — any drift is a chunking change.
+    want_gets = gets[cases[0]]
+    assert all(g == want_gets for g in gets.values()), gets
+    rows.append(("reduce_scaling/get_requests", 0.0, float(want_gets)))
     return rows
 
 

@@ -81,6 +81,32 @@ def load(path: str = "results/dryrun.jsonl", tag: str | None = None):
     return rows
 
 
+def shuffle_phase_rows(metrics: dict, *, store_bw_bps: float,
+                       prefix: str = "roofline"):
+    """Achieved store bytes/s per shuffle phase vs a bandwidth roof.
+
+    `metrics` is a ShuffleReport.metrics snapshot (obs/metrics.py): the
+    job derives `store.bytes_read_per_s{phase=...}` /
+    `store.bytes_written_per_s{phase=...}` gauges when a
+    TracingMiddleware shares the job's tracer. Each gauge becomes one
+    row whose derived value is the achieved fraction of `store_bw_bps`
+    (the injected store's bandwidth, or a real NIC/S3 roof) — 1.0 means
+    that phase's transfer leg runs at the roofline, which is the
+    Exoshuffle end state: compute hidden, I/O bound. Phases with no
+    traffic (or no tracing store wired in) produce no row.
+    """
+    gauges = (metrics or {}).get("gauges", {})
+    rows = []
+    for phase in ("map", "reduce"):
+        for metric, short in (("store.bytes_read_per_s", "read"),
+                              ("store.bytes_written_per_s", "write")):
+            v = gauges.get(f"{metric}{{phase={phase}}}", 0.0)
+            if v:
+                rows.append((f"{prefix}/{phase}_{short}_of_roof", 0.0,
+                             v / store_bw_bps))
+    return rows
+
+
 def run():
     """benchmarks.run hook: one CSV row per dry-run cell."""
     rows = []

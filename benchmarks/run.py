@@ -7,6 +7,8 @@
   bench_external_sort   — §2.3–2.5 out-of-core sort via the object store
   bench_store_faults    — §2.5 overlap efficiency under injected S3 faults
   bench_reduce_scaling  — §2.4 parallel-reduce scheduler x part fan-out
+  bench_device_merge    — §2.4–2.5 device-resident merge sink + pipelined
+                          map: critical-path merge rate vs numpy
   bench_cluster_scaling — §2.6 cluster executor: worker count x failures
   bench_groupby         — shuffle-as-a-library generality: group-by
                           aggregation with a map-side combiner
@@ -51,6 +53,7 @@ BENCHES = [
     ("external_sort", "benchmarks.bench_external_sort"),
     ("store_faults", "benchmarks.bench_store_faults"),
     ("reduce_scaling", "benchmarks.bench_reduce_scaling"),
+    ("device_merge", "benchmarks.bench_device_merge"),
     ("cluster_scaling", "benchmarks.bench_cluster_scaling"),
     ("groupby", "benchmarks.bench_groupby"),
     ("roofline", "benchmarks.roofline"),

@@ -148,6 +148,19 @@ class ExternalSortPlan:
     *buffers*; each active reducer additionally holds up to ~one encoded
     output part being sliced plus max_inflight_writes parts awaiting
     upload.)
+
+    map_pipeline overlaps each wave's host decode, device sort, and
+    spill encode across tasks (shuffle/runtime's staged map executor);
+    spill bytes and offsets are identical either way — the knob only
+    changes wall-clock concurrency. reduce_merge_impl selects the
+    emit-window merge backend: "numpy" is the reference host argsort
+    merge; "device" runs the kernels/kway_merge bitonic tournament on a
+    one-thread merge stage, double-buffered so window i's merge+encode
+    overlaps window i+1's ranged-GET fetches (byte/etag-identical
+    output, one extra in-flight window of decoded fragments on top of
+    the governor's accounting). The device merge's kernel lowering
+    follows `impl` ("pallas" = the Pallas network, jit-compiled on CPU;
+    "ref" = the lax.sort oracle).
     """
 
     records_per_wave: int  # device working set (records, across the mesh)
@@ -169,6 +182,8 @@ class ExternalSortPlan:
     parallel_reducers: int = 4  # concurrent streaming merges (reduce pool)
     reduce_memory_budget_bytes: int = 0  # global merge budget; 0 = uncapped
     part_upload_fanout: int = 2  # out-of-order part uploads per partition
+    map_pipeline: bool = True  # overlap decode/device-sort/encode across waves
+    reduce_merge_impl: str = "numpy"  # emit-window merge ("numpy" | "device")
 
     @property
     def record_bytes(self) -> int:
@@ -191,6 +206,10 @@ class ExternalSortPlan:
                 self.input_records_per_partition, "must be >= 1")
         require(self.capacity_factor > 0, "capacity_factor",
                 self.capacity_factor, "must be > 0")
+        require(self.reduce_merge_impl in ("numpy", "device"),
+                "reduce_merge_impl", self.reduce_merge_impl,
+                'must be "numpy" (host argsort merge) or "device" '
+                "(kernels/kway_merge tournament, double-buffered)")
 
 
 def _spill_key(plan: ExternalSortPlan, wave: int, worker: int) -> str:
@@ -324,19 +343,17 @@ class WaveSorter:
             at += dec.finish()
         return rec.split_rows(rows)
 
-    def compute_and_spill(self, store: StoreBackend, bucket: str, g: int,
-                          keys, ids, payload, *, spiller: staging.AsyncWriter,
-                          timeline: PhaseTimeline, tag: str,
-                          offsets_out: dict) -> None:
-        """Sort wave g on the mesh and spill each mesh-worker's run.
+    def device_sort(self, keys, ids, *, timeline: PhaseTimeline | None = None,
+                    tag: str = ""):
+        """Stage 1 of the map body: the mesh sort (serialized on the
+        device lock), returned as host copies (sk, si, vcounts).
 
-        Writes per-reducer offsets for every spilled run into
-        `offsets_out[(g, wid)]` (they are also persisted in the spill
-        object's manifest metadata, so a process-backed worker could
-        recover them from the store alone).
+        With a timeline, the interval is recorded under BOTH
+        map.device_sort (the per-stage span, docs/OBSERVABILITY.md) and
+        map.compute (the long-standing device-time total every report
+        and test reads).
         """
-        plan, w, pw = self.plan, self.w, self.pw
-        t_comp = time.perf_counter()
+        t = time.perf_counter()
         with self._device_lock:
             sk, si, vcounts, ovf = self._sort(jnp.asarray(keys),
                                               jnp.asarray(ids))
@@ -346,6 +363,29 @@ class WaveSorter:
             raise RuntimeError(
                 "shuffle block overflow — raise capacity_factor"
             )
+        if timeline is not None:
+            timeline.add("map.device_sort", t, worker=tag)
+            timeline.add("map.compute", t, worker=tag)
+        return sk, si, vcounts
+
+    def encode_and_spill(self, store: StoreBackend, bucket: str, g: int,
+                         sk, si, vcounts, ids, payload, *,
+                         spiller: staging.AsyncWriter,
+                         timeline: PhaseTimeline, tag: str,
+                         offsets_out: dict, span: str = "map.encode",
+                         t0: float | None = None) -> None:
+        """Stage 2 of the map body: slice each mesh worker's run out of
+        the sorted wave, gather payload rows, encode, and spill.
+
+        Writes per-reducer offsets for every spilled run into
+        `offsets_out[(g, wid)]` (they are also persisted in the spill
+        object's manifest metadata, so a process-backed worker could
+        recover them from the store alone). `span` names the recorded
+        compute segments — "map.encode" as a pipeline stage,
+        "map.compute" from the monolithic compute_and_spill.
+        """
+        plan, w, pw = self.plan, self.w, self.pw
+        t_comp = time.perf_counter() if t0 is None else t0
         # id -> wave row for gathering payload of shuffled records:
         # O(1) offset arithmetic when the wave's ids are contiguous
         # (the gensort layout), argsort gather otherwise.
@@ -377,7 +417,7 @@ class WaveSorter:
             # Submit each encoded run immediately: the AsyncWriter
             # backpressure bound (at most max_inflight encoded runs
             # in host memory) only holds if we never batch them.
-            timeline.add("map.compute", t_comp, worker=tag)
+            timeline.add(span, t_comp, worker=tag)
             t_spill = time.perf_counter()
             spiller.submit(_timed_spill, timeline, tag, store, bucket,
                            _spill_key(plan, g, wid), data, {
@@ -388,7 +428,22 @@ class WaveSorter:
                            })
             timeline.add("map.spill_wait", t_spill, worker=tag)
             t_comp = time.perf_counter()
-        timeline.add("map.compute", t_comp, worker=tag)
+        timeline.add(span, t_comp, worker=tag)
+
+    def compute_and_spill(self, store: StoreBackend, bucket: str, g: int,
+                          keys, ids, payload, *, spiller: staging.AsyncWriter,
+                          timeline: PhaseTimeline, tag: str,
+                          offsets_out: dict) -> None:
+        """Sort wave g on the mesh and spill each mesh-worker's run —
+        the monolithic (non-pipelined) map body: device_sort +
+        encode_and_spill back to back on the calling thread, with the
+        original map.compute/map.spill_wait span structure."""
+        t_comp = time.perf_counter()
+        sk, si, vcounts = self.device_sort(keys, ids)
+        self.encode_and_spill(store, bucket, g, sk, si, vcounts, ids,
+                              payload, spiller=spiller, timeline=timeline,
+                              tag=tag, offsets_out=offsets_out,
+                              span="map.compute", t0=t_comp)
 
 
 def external_sort(

@@ -41,6 +41,33 @@ def merge_kv_ref(
     return sort_kv_ref(keys, vals)
 
 
+def sort_kvi_ref(
+    keys: jax.Array, vals: jax.Array, idx: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Lexicographic sort of (key, val, idx) triples along the last axis.
+
+    keys, vals: uint32; idx: int32 ordinal (all num_keys=3, so ties in
+    (key, val) resolve by ordinal — the stable-merge order the indexed
+    merge kernel (kernels/kway_merge.py) reproduces).
+    """
+    return jax.lax.sort((keys, vals, idx), dimension=-1, num_keys=3)
+
+
+def merge_kvi_ref(
+    a_keys: jax.Array, a_vals: jax.Array, a_idx: jax.Array,
+    b_keys: jax.Array, b_vals: jax.Array, b_idx: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge two triple-lex-sorted indexed runs along the last axis.
+
+    a_*, b_*: (..., n). Returns the (..., 2n) merged sorted run — the
+    oracle for kway_merge.merge_sorted_pairs_indexed.
+    """
+    keys = jnp.concatenate([a_keys, b_keys], axis=-1)
+    vals = jnp.concatenate([a_vals, b_vals], axis=-1)
+    idx = jnp.concatenate([a_idx, b_idx], axis=-1)
+    return sort_kvi_ref(keys, vals, idx)
+
+
 def partition_offsets_ref(sorted_keys: jax.Array, boundaries: jax.Array) -> jax.Array:
     """For each boundary b, the number of keys strictly below b.
 

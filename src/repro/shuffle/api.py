@@ -205,6 +205,31 @@ class MapOp(abc.ABC):
         """Partition + spill split `task` (loaded as `data`), submitting
         run puts through `spiller` and recording map.* spans."""
 
+    # -- optional staged interface (pipelined map executor) --------------
+    #
+    # An op may additionally split `process` at the device boundary by
+    # defining BOTH:
+    #
+    #   device_step(task, data, *, timeline, tag) -> staged
+    #       The device-bound portion (sort/compute). Runs on a dedicated
+    #       single-thread stage; must not touch the store. Records
+    #       map.device_sort (and map.compute, for phase-total
+    #       compatibility) spans.
+    #
+    #   encode_step(store, bucket, task, staged, *, spiller, timeline,
+    #               tag) -> None
+    #       The host-bound encode + spill portion. Runs on a second
+    #       single-thread stage; receives `staged` from device_step and
+    #       records map.encode / map.spill_wait spans.
+    #
+    # When the plan sets `map_pipeline` (see ExternalSortPlan) and both
+    # methods exist, runtime.run_map_tasks software-pipelines the waves:
+    # wave N's host decode (`load`) overlaps wave N-1's device_step and
+    # wave N-2's encode_step. The two stages are each single-threaded
+    # and consumed in task order, so spill bytes — and therefore the
+    # whole shuffle output — are unchanged from the monolithic path.
+    # Ops that only define `process` always run monolithically.
+
 
 class CombineOp(abc.ABC):
     """Map-side pre-aggregation over a partition-and-key-sorted span.
@@ -233,6 +258,19 @@ class PartitionReducer(abc.ABC):
     #: then indexed from 1 and `finalize` must return the part-0 bytes —
     #: the out-of-order multipart contract makes the upload order legal.
     deferred_part0: bool = False
+
+    # -- optional execution-context hook ---------------------------------
+    #
+    # A reducer may define
+    #
+    #   bind_exec(*, timeline, tag) -> None
+    #
+    # and the scheduler calls it once, right after ReduceOp.open(),
+    # before `begin`. It hands the sink the run's PhaseTimeline and this
+    # partition's worker tag so sinks that do work off the scheduler
+    # thread (e.g. the device merge's staged encode) can attribute their
+    # spans. Purely observational: sinks without the hook behave
+    # identically.
 
     @abc.abstractmethod
     def begin(self) -> bytes:

@@ -421,6 +421,19 @@ def merge_fragments(frags, payload_words: int):
     if len(frags) == 1:
         k, i, p, _ = frags[0]
         return k, i, p
+    # Fast path: the live fragments do not interleave (each ends at or
+    # below the next one's start) — common at the tail of skewed
+    # partitions, where a single run is left emitting. Concatenation IS
+    # the stable merge: a boundary tie keeps fragment order, exactly
+    # what the stable argsort below would produce, so the bytes are
+    # identical and the O(n log n) re-sort is skipped.
+    if all(frags[i][3][-1] <= frags[i + 1][3][0]
+           for i in range(len(frags) - 1)):
+        keys = np.concatenate([f[0] for f in frags])
+        ids = np.concatenate([f[1] for f in frags])
+        payload = (np.concatenate([f[2] for f in frags])
+                   if payload_words else None)
+        return keys, ids, payload
     k64 = np.concatenate([f[3] for f in frags])
     order = np.argsort(k64, kind="stable")
     keys = np.concatenate([f[0] for f in frags])[order]
@@ -651,6 +664,12 @@ class ReduceScheduler:
                 max(plan.max_inflight_writes, plan.part_upload_fanout),
                 max_workers=plan.part_upload_fanout)
             sink = op.open(r, n_total)
+            # Optional sink protocol extension: a sink that runs its own
+            # execution stage (shuffle/sort._DeviceMergeSink's async
+            # device merge) gets the timeline and this partition's tag
+            # so its off-thread work records spans like everything else.
+            if hasattr(sink, "bind_exec"):
+                sink.bind_exec(timeline=timeline, tag=tag)
             # A sink that only knows its output size at the end
             # (aggregation) reserves part 0 for the deferred header and
             # streams body parts from index 1 — the out-of-order
@@ -702,7 +721,12 @@ class ReduceScheduler:
                 while len(outbuf) >= part_bytes:
                     submit_part(bytes(outbuf[:part_bytes]))
                     del outbuf[:part_bytes]
+            # finalize can block on real merge work (the device sink's
+            # in-flight window) — record it under reduce.merge so the
+            # span is the COMPLETE scheduler-visible merge cost.
+            t = time.perf_counter()
             tail, part0 = sink.finalize()
+            timeline.add("reduce.merge", t, worker=tag)
             if tail:
                 outbuf += tail
                 while len(outbuf) >= part_bytes:
@@ -765,8 +789,23 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
     leaves the task unconfirmed (and re-executed) rather than
     half-spilled. Without it (single-host), the spill queue drains once
     at loop exit, so spill waits never serialize the wave pipeline.
+
+    Pipelined mode (plan.map_pipeline true AND the MapOp implements the
+    staged `device_step`/`encode_step` split, see shuffle/api.MapOp):
+    instead of calling the monolithic `process`, each task's device
+    stage and encode stage run on two single-thread stage executors with
+    a two-deep in-flight window, so wave N's host decode (the prefetch
+    threads, recorded as map.decode) overlaps wave N-1's device sort
+    (map.device_sort) and wave N-2's spill encode (map.encode) — the
+    paper's §2.4-§2.5 compute/transfer overlap applied WITHIN the map
+    leg. Spill bytes, offsets, and confirmation order are identical to
+    the monolithic path; only wall-clock concurrency (and the per-stage
+    span names) change.
     """
     popped: collections.deque[int] = collections.deque()
+    pipelined = (bool(getattr(plan, "map_pipeline", False))
+                 and hasattr(map_op, "device_step")
+                 and hasattr(map_op, "encode_step"))
 
     def loads():
         # Pulled from inside the prefetch pipeline on the caller's
@@ -781,13 +820,27 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
             if g is None:
                 return
             popped.append(g)
-            yield bind_context(lambda g=g: map_op.load(store, bucket, g),
-                               _task_context("map", f"g{g}", tag_prefix))
+            ctx = _task_context("map", f"g{g}", tag_prefix)
+            if pipelined:
+                def load_one(g=g):
+                    t = time.perf_counter()
+                    data = map_op.load(store, bucket, g)
+                    timeline.add("map.decode", t, worker=f"{tag_prefix}g{g}")
+                    return data
+                yield bind_context(load_one, ctx)
+            else:
+                yield bind_context(
+                    lambda g=g: map_op.load(store, bucket, g), ctx)
 
     with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
         task_iter = iter(staging.prefetch(
             loads(), depth=plan.prefetch_depth,
             retries=plan.io_retries, retry_on=(RetryableError,)))
+        if pipelined:
+            _run_map_pipelined(store, bucket, map_op, task_iter, popped,
+                               timeline=timeline, tag_prefix=tag_prefix,
+                               spiller=spiller, on_done=on_done)
+            return
         while True:
             t_wait = time.perf_counter()
             try:
@@ -805,6 +858,65 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
             if on_done is not None:
                 spiller.drain()
                 on_done(g)
+
+
+def _run_map_pipelined(store, bucket, map_op, task_iter, popped, *,
+                       timeline: PhaseTimeline, tag_prefix: str, spiller,
+                       on_done: Callable[[int], None] | None) -> None:
+    """The double-buffered stage executor behind run_map_tasks.
+
+    Two single-thread pools — one per stage — keep stage order FIFO per
+    stage while letting stages of different tasks overlap: the encode
+    job for task N blocks on task N's device future, the single device
+    thread runs task N+1's sort meanwhile, and the prefetch threads
+    decode task N+2. The in-flight window is two tasks deep (claim task
+    N only after task N-2's encode finished), bounding host memory at
+    ~two waves of sorted output beyond what the monolithic loop holds.
+
+    Failure semantics match the monolithic loop: the first stage
+    exception (including a cluster WorkerFailure from a spill) re-raises
+    here in task order, and `on_done` confirmation still happens only
+    after THAT task's encode completed and its spills drained.
+    """
+    sort_pool = ThreadPoolExecutor(max_workers=1,
+                                   thread_name_prefix="map-sort")
+    enc_pool = ThreadPoolExecutor(max_workers=1,
+                                  thread_name_prefix="map-encode")
+    inflight: collections.deque = collections.deque()
+
+    def finish_one() -> None:
+        g, fut = inflight.popleft()
+        fut.result()  # re-raises the task's first stage failure
+        if on_done is not None:
+            spiller.drain()
+            on_done(g)
+
+    try:
+        while True:
+            t_wait = time.perf_counter()
+            try:
+                data = next(task_iter)
+            except StopIteration:
+                break
+            g = popped.popleft()
+            tag = f"{tag_prefix}g{g}"
+            timeline.add("map.wait", t_wait, worker=tag)
+            ctx = _task_context("map", f"g{g}", tag_prefix)
+            sort_fut = sort_pool.submit(bind_context(
+                lambda g=g, d=data, tag=tag: map_op.device_step(
+                    g, d, timeline=timeline, tag=tag), ctx))
+            enc_fut = enc_pool.submit(bind_context(
+                lambda g=g, sf=sort_fut, tag=tag: map_op.encode_step(
+                    store, bucket, g, sf.result(), spiller=spiller,
+                    timeline=timeline, tag=tag), ctx))
+            inflight.append((g, enc_fut))
+            while len(inflight) >= 2:
+                finish_one()
+        while inflight:
+            finish_one()
+    finally:
+        sort_pool.shutdown(wait=True)
+        enc_pool.shutdown(wait=True)
 
 
 __all__ = [

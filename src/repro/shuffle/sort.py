@@ -18,6 +18,9 @@ so they can never drift.
 """
 from __future__ import annotations
 
+import time
+from concurrent.futures import ThreadPoolExecutor
+
 import numpy as np
 
 from repro.io import records as rec
@@ -69,6 +72,22 @@ class SortMapOp(MapOp):
             store, bucket, task, keys, ids, payload, spiller=spiller,
             timeline=timeline, tag=tag, offsets_out=self.spill_offsets)
 
+    # Staged map interface (shuffle/runtime's pipelined executor, active
+    # when plan.map_pipeline is true): the same body as process(), split
+    # at the device boundary so wave N's sort overlaps wave N-1's encode.
+    def device_step(self, task: int, data, *, timeline, tag):
+        keys, ids, payload = data
+        return data, self.sorter.device_sort(keys, ids, timeline=timeline,
+                                             tag=tag)
+
+    def encode_step(self, store: StoreBackend, bucket: str, task: int,
+                    staged, *, spiller, timeline, tag) -> None:
+        (keys, ids, payload), (sk, si, vcounts) = staged
+        self.sorter.encode_and_spill(
+            store, bucket, task, sk, si, vcounts, ids, payload,
+            spiller=spiller, timeline=timeline, tag=tag,
+            offsets_out=self.spill_offsets)
+
 
 class _SortMergeSink(PartitionReducer):
     """Streaming k-way merge: the record count is known up front (sum of
@@ -88,6 +107,83 @@ class _SortMergeSink(PartitionReducer):
     def consume(self, frags, *, final: bool) -> bytes:
         mk, mi, mp = merge_fragments(frags, self._pw)
         return rec.encode_body(mk, mi, mp) if mk.size else b""
+
+
+class _DeviceMergeSink(PartitionReducer):
+    """Device-resident k-way merge, double-buffered.
+
+    Same byte STREAM as _SortMergeSink, shifted one cycle: consume()
+    hands the emit window to a one-thread merge+encode stage
+    (kernels/kway_merge.merge_fragments_device — bit-identical to the
+    numpy merge, see that module's docstring) and returns the PREVIOUS
+    window's encoded bytes, so window i's merge overlaps window i+1's
+    ranged-GET fetches; finalize() flushes the last window. Because the
+    scheduler slices parts from the concatenated stream at fixed record
+    boundaries, parts and etags are identical to the numpy backend at
+    any parallelism — pinned by tests/test_device_merge.py.
+
+    Memory: one extra in-flight window (<= runs x chunk decoded bytes)
+    rides on top of the budget governor's per-reducer accounting while
+    the stage thread drains it.
+
+    A merge failure surfaces on the next consume()/finalize() — the
+    scheduler's normal error path (abort the multipart session, retire
+    the grant). The stage pool is shut down on finalize and on the first
+    error; a reducer abandoned mid-stream (worker death elsewhere)
+    releases its idle thread when the sink is collected.
+    """
+
+    deferred_part0 = False
+
+    def __init__(self, n_total: int, payload_words: int, *,
+                 impl: str = "pallas"):
+        self._n = int(n_total)
+        self._pw = int(payload_words)
+        self._impl = impl
+        self._timeline = None
+        self._tag = ""
+        self._pool = ThreadPoolExecutor(max_workers=1,
+                                        thread_name_prefix="device-merge")
+        self._pending = None
+
+    def bind_exec(self, *, timeline, tag: str) -> None:
+        # Optional sink hook the ReduceScheduler calls right after
+        # open(): stage-thread work records reduce.device_merge spans
+        # with this partition's tag.
+        self._timeline = timeline
+        self._tag = tag
+
+    def begin(self) -> bytes:
+        return rec.encode_header(self._n, self._pw)
+
+    def _merge_encode(self, frags) -> bytes:
+        from repro.kernels.kway_merge import merge_fragments_device
+
+        t = time.perf_counter()
+        mk, mi, mp = merge_fragments_device(frags, self._pw,
+                                            impl=self._impl)
+        body = rec.encode_body(mk, mi, mp) if mk.size else b""
+        if self._timeline is not None:
+            self._timeline.add("reduce.device_merge", t, worker=self._tag)
+        return body
+
+    def consume(self, frags, *, final: bool) -> bytes:
+        job = self._pool.submit(self._merge_encode, frags)
+        prev, self._pending = self._pending, job
+        if prev is None:
+            return b""
+        try:
+            return prev.result()
+        except BaseException:
+            self._pool.shutdown(wait=False)
+            raise
+
+    def finalize(self):
+        try:
+            tail = b"" if self._pending is None else self._pending.result()
+        finally:
+            self._pool.shutdown(wait=True)
+        return tail, None
 
 
 class MergeReduceOp(ReduceOp):
@@ -126,20 +222,45 @@ class MergeReduceOp(ReduceOp):
         return _SortMergeSink(n_total, self.payload_words)
 
 
+class DeviceMergeReduceOp(MergeReduceOp):
+    """MergeReduceOp with the device-resident, double-buffered merge
+    sink (_DeviceMergeSink) — selected by
+    ExternalSortPlan.reduce_merge_impl="device". Sources, output keys,
+    chunk sizing (the AdaptiveBudgetGovernor), and output bytes are all
+    identical to the numpy backend; only where (and when) the window
+    merge runs changes.
+
+    Lowering: plan.impl="ref" selects the CPU reference MAP sorter, but
+    for the merge stage the lax.sort oracle it would pick is ~5x slower
+    than the tournament network — so "ref" maps to the kernel's "pallas"
+    auto-lowering (pallas_call on accelerators, the jit'd network on
+    CPU; all three are pinned bit-identical in tests/test_kernels.py).
+    An explicit pallas/network plan.impl is honored as-is."""
+
+    def open(self, r: int, n_total: int) -> PartitionReducer:
+        impl = "pallas" if self.plan.impl == "ref" else self.plan.impl
+        return _DeviceMergeSink(n_total, self.payload_words, impl=impl)
+
+
 def sort_shuffle_job(store: StoreBackend, bucket: str, *, mesh, axis_names,
                      plan, tracer=None) -> ShuffleJob:
-    """Build the CloudSort ShuffleJob: SortMapOp + MergeReduceOp over an
+    """Build the CloudSort ShuffleJob: SortMapOp + MergeReduceOp (or
+    DeviceMergeReduceOp, per plan.reduce_merge_impl) over an
     order-preserving range partitioner. `plan` is a
     core/external_sort.ExternalSortPlan; run with
     `job.run(workers=N[, cluster=ClusterPlan(...)])`. `tracer` is an
     optional obs/events.Tracer the run records into (share it with the
     store stack to get request-level child spans)."""
     map_op = SortMapOp(plan, mesh, axis_names)
-    reduce_op = MergeReduceOp(plan, map_op)
+    if getattr(plan, "reduce_merge_impl", "numpy") == "device":
+        reduce_op: MergeReduceOp = DeviceMergeReduceOp(plan, map_op)
+    else:
+        reduce_op = MergeReduceOp(plan, map_op)
     partitioner = RangePartitioner(map_op.sorter.w * map_op.sorter.r1)
     return ShuffleJob(store, bucket, plan=plan, map_op=map_op,
                       reduce_op=reduce_op, partitioner=partitioner,
                       tracer=tracer)
 
 
-__all__ = ["MergeReduceOp", "SortMapOp", "sort_shuffle_job"]
+__all__ = ["DeviceMergeReduceOp", "MergeReduceOp", "SortMapOp",
+           "sort_shuffle_job"]

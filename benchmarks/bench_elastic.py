@@ -1,0 +1,240 @@
+"""Elastic fleet: process parallelism, recovery cost, speculation win.
+
+The thread fleet shares one JAX runtime — one device mesh, one GIL — so
+its scaling win is I/O overlap only. The elastic driver's ProcessWorker
+gives each worker its own interpreter and runtime, which is the paper's
+actual deployment shape (§2.6: one worker process per node). This bench
+measures the three claims the elastic layer makes:
+
+  * process parallelism: the same dataset sorted by a thread fleet and
+    a PROCESS fleet, each at W in {1, 4} (workers pre-spawned and
+    warmed — child runtime up, mesh built — before the clock starts).
+    The acceptance bar compares SPEEDUPS, not absolute times: at --full
+    the process fleet's W=4-over-W=1 speedup must beat the thread
+    fleet's — four interpreters scale where four threads time-slice one
+    GIL. (Absolute process time carries per-child IPC + protocol cost
+    that says nothing about scaling.) The bar is enforced only when
+    os.cpu_count() >= 4: a single-core host time-slices BOTH fleets on
+    one core, so neither can scale and the ratio measures IPC overhead
+    only (elastic/speedup_gate_enforced records which mode ran). Smoke
+    only reports the ratios;
+  * recovery: a W=4 process run with 25% of the fleet killed mid-job
+    (die_after_tasks, then spill-tier loss + lineage re-execution) must
+    complete byte-identical; derived = recovery overhead ratio vs the
+    clean process run;
+  * speculation: one straggler worker (latency-injected store view),
+    speculation off vs on; at --full speculation must win >= 1.2x
+    end-to-end (smoke: must not lose by more than noise, reported).
+
+Invariants on every case: output byte/etag-identical to the single-host
+reference, valsort-clean.
+
+Rows (name, us = end-to-end wall time, derived):
+
+  elastic/thread_w{W}             — derived = end-to-end records/s
+  elastic/process_w{W}            — derived = end-to-end records/s
+  elastic/speedup_thread_w4       — derived = thread W=1 / W=4 wall ratio
+  elastic/speedup_process_w4      — derived = process W=1 / W=4 wall ratio
+  elastic/speedup_process_vs_thread_w4 — derived = speedup ratio
+  elastic/speedup_gate_enforced   — derived = 1 iff the host had >= 4 cores
+  elastic/recovery_kill25pct      — derived = overhead ratio vs clean
+  elastic/speculation_off|on      — derived = end-to-end records/s
+  elastic/speculation_speedup     — derived = off/on wall-time ratio
+
+All rows are timing-dependent — no GATES; the asserts below are the
+acceptance contract.
+
+Standalone: PYTHONPATH=src python benchmarks/bench_elastic.py [--smoke|--full]
+`run()` (the benchmarks/run.py entry) always uses smoke scale.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+
+def run(full: bool = False):
+    import jax
+
+    from repro.core.compat import make_mesh
+    from repro.core.external_sort import ExternalSortPlan
+    from repro.data import gensort, valsort
+    from repro.io.middleware import FaultProfile, LatencyBandwidthMiddleware
+    from repro.io.object_store import ObjectStore
+    from repro.shuffle.elastic import FleetPlan
+    from repro.shuffle.executor import ThreadWorker
+    from repro.shuffle.procworker import ProcessWorker
+    from repro.shuffle.sort import sort_shuffle_job
+
+    w = len(jax.devices())
+    mesh = make_mesh((w,), ("w",))
+    plan = ExternalSortPlan(
+        records_per_wave=(1 << (13 if full else 12)) * w,
+        num_rounds=2,
+        reducers_per_worker=8,  # >= 8 partitions even on one device
+        payload_words=2,
+        impl="ref",
+        input_records_per_partition=(1 << (12 if full else 11)) * w,
+        output_part_records=1 << 10,
+        store_chunk_bytes=16 << 10,
+        parallel_reducers=2,
+        reduce_memory_budget_bytes=256 << 10,
+    )
+    total = plan.records_per_wave * 8  # 8 map waves at any device count
+    # Process workers need a store both sides can open: filesystem plane.
+    root = tempfile.mkdtemp(prefix="bench-elastic-")
+    store = ObjectStore(root)
+    store.create_bucket("bench")
+    in_ck, _ = gensort.write_to_store(
+        store, "bench", plan.input_prefix, total,
+        plan.input_records_per_partition, plan.payload_words)
+
+    def layout():
+        return [(m.key, m.etag, m.size, m.parts)
+                for m in store.list_objects("bench", plan.output_prefix)]
+
+    def job(st=None):
+        return sort_shuffle_job(st or store, "bench", mesh=mesh,
+                                axis_names="w", plan=plan)
+
+    job().run(workers=0)  # single-host reference layout
+    want = layout()
+
+    def check(tag):
+        assert layout() == want, f"{tag} changed output bytes"
+        val = valsort.validate_from_store(store, "bench", plan.output_prefix,
+                                          in_ck)
+        assert val.ok and val.total_records == total, (tag, val)
+
+    rows = []
+
+    # -- thread fleet: the shared-runtime baseline -------------------------
+    thread_secs = {}
+    for W in (1, 4):
+        crew = [ThreadWorker(f"w{i}", store) for i in range(W)]
+        t0 = time.perf_counter()
+        crep = job().run(worker_list=crew, fleet=FleetPlan())
+        thread_secs[W] = time.perf_counter() - t0
+        check(f"thread W={W}")
+        assert not crep.failed_workers
+        rows.append((f"elastic/thread_w{W}", thread_secs[W] * 1e6,
+                     total / thread_secs[W]))
+
+    # -- process fleet: own runtimes, spawned + warmed before timing ------
+    def pworkers(n, **kw_by_name):
+        # mesh_devices=w: the children must build the SAME partition
+        # geometry as the parent's reference run.
+        return [ProcessWorker(f"p{i}", store=store, bucket="bench",
+                              plan=plan, mesh_devices=w,
+                              **kw_by_name.get(f"p{i}", {}))
+                for i in range(n)]
+
+    proc_secs = {}
+    for W in (1, 4):
+        crew = pworkers(W)
+        try:
+            t0 = time.perf_counter()
+            crep = job().run(worker_list=crew, fleet=FleetPlan())
+            proc_secs[W] = time.perf_counter() - t0
+        finally:
+            for wk in crew:
+                wk.close()
+        check(f"process W={W}")
+        assert not crep.failed_workers
+        rows.append((f"elastic/process_w{W}", proc_secs[W] * 1e6,
+                     total / proc_secs[W]))
+    thread_speedup = thread_secs[1] / thread_secs[4]
+    proc_speedup = proc_secs[1] / proc_secs[4]
+    ratio = proc_speedup / thread_speedup
+    # The scaling bar is physical: four interpreters can only beat four
+    # threads time-slicing one GIL when the host HAS cores to scale
+    # onto. On a single-core runner both fleets time-slice the same
+    # core (thread speedup pins to ~1.0) and the ratio measures pure
+    # IPC overhead, so enforcing it there gates noise, not scaling.
+    cores = os.cpu_count() or 1
+    if full and cores >= 4:
+        # The acceptance bar: four interpreters must SCALE better than
+        # four threads time-slicing one GIL-bound runtime.
+        assert ratio > 1.0, (
+            f"process W=4 speedup {proc_speedup:.2f}x <= thread W=4 "
+            f"speedup {thread_speedup:.2f}x at --full ({cores} cores)")
+    rows.append(("elastic/speedup_thread_w4", 0.0, thread_speedup))
+    rows.append(("elastic/speedup_process_w4", 0.0, proc_speedup))
+    rows.append(("elastic/speedup_process_vs_thread_w4", 0.0, ratio))
+    rows.append(("elastic/speedup_gate_enforced", 0.0,
+                 1.0 if cores >= 4 else 0.0))
+
+    # -- recovery: kill 25% of the process fleet mid-job ------------------
+    crew = pworkers(4, p0={"die_after_tasks": 3})
+    try:
+        t0 = time.perf_counter()
+        crep = job().run(worker_list=crew, fleet=FleetPlan())
+        kill_secs = time.perf_counter() - t0
+    finally:
+        for wk in crew:
+            wk.close()
+    check("process W=4 kill 25%")
+    assert crep.failed_workers == ["p0"], crep.failed_workers
+    assert crep.reexecuted_tasks >= 1, crep
+    rows.append(("elastic/recovery_kill25pct", kill_secs * 1e6,
+                 kill_secs / proc_secs[4]))
+
+    # -- speculation: one straggler host, off vs on -----------------------
+    slow = LatencyBandwidthMiddleware(store,
+                                      FaultProfile(latency_s=0.25))
+
+    def straggler_crew():
+        return [ThreadWorker("w0", store), ThreadWorker("w1", store),
+                ThreadWorker("slow", slow)]
+
+    spec_secs = {}
+    for mode, fleet in (
+            ("off", FleetPlan()),
+            ("on", FleetPlan(speculation=True, speculation_min_samples=3,
+                             speculation_quantile=0.5,
+                             speculation_factor=2.0,
+                             speculation_min_s=0.1))):
+        t0 = time.perf_counter()
+        crep = job().run(worker_list=straggler_crew(), fleet=fleet)
+        spec_secs[mode] = time.perf_counter() - t0
+        check(f"speculation {mode}")
+        assert not crep.failed_workers
+        if mode == "on":
+            assert crep.speculated_tasks >= 1, crep
+        rows.append((f"elastic/speculation_{mode}", spec_secs[mode] * 1e6,
+                     total / spec_secs[mode]))
+    spec_ratio = spec_secs["off"] / spec_secs["on"]
+    if full:
+        assert spec_ratio >= 1.2, (
+            f"speculation won only {spec_ratio:.2f}x at --full (bar: 1.2x)")
+    rows.append(("elastic/speculation_speedup", 0.0, spec_ratio))
+    return rows
+
+
+def main():
+    import argparse
+
+    # Standalone runs get the 8-device host mesh (must precede the first
+    # jax import); under benchmarks/run.py the ambient device count wins.
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=8")
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="small dataset, ratios reported not gated "
+                           "(the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="larger dataset; enforce process > thread and "
+                           "speculation >= 1.2x")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(full=args.full):
+        print(f"{name},{us:.3f},{derived:.6g}")
+    print(f"# total {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -50,6 +50,11 @@ import json
 import os
 import threading
 import zlib
+
+try:  # POSIX advisory locks guard cross-process manifest updates.
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX fallback
+    fcntl = None
 from typing import Iterable, Iterator
 
 
@@ -281,6 +286,14 @@ class FilesystemBackend(StoreBackend):
 
     The manifest persists so a store can be reopened (the S3 namespace
     survives process death, unlike worker memory).
+
+    Safe for concurrent writers in SEPARATE PROCESSES sharing one root:
+    every manifest mutation is a read-modify-write of the on-disk JSON
+    under an `fcntl` file lock, so two processes committing into the
+    same bucket never lose each other's entries. The in-memory manifest
+    is a cache of the disk state; reads reload it on a miss (an object
+    another process put) and treat a vanished object file as a
+    concurrent delete (`ObjectNotFound`) rather than a crash.
     """
 
     def __init__(self, root: str, *, chunk_size: int = 4 << 20):
@@ -304,27 +317,75 @@ class FilesystemBackend(StoreBackend):
         with self._lock:
             self._manifests.setdefault(bucket, {})
             self._flush_locks.setdefault(bucket, threading.Lock())
-        self._flush_manifest(bucket)
+        # Merge-with-disk no-op: registers the bucket without clobbering
+        # a manifest another process already populated.
+        self._mutate_manifest(bucket, lambda manifest: None)
 
     def _object_path(self, bucket: str, key: str) -> str:
         return os.path.join(self.root, bucket, _OBJECTS, *_check_key(key).split("/"))
 
-    def _flush_manifest(self, bucket: str) -> None:
-        """Persist the bucket manifest. The JSON dump happens OUTSIDE the
-        store-wide lock so concurrent staging writers only contend on the
-        cheap dict update, not the file I/O; a per-bucket flush lock keeps
-        file writes ordered, and the snapshot is re-taken under the main
-        lock so the last flusher always persists the newest state."""
+    def _bucket_known(self, bucket: str) -> bool:
+        """True if the bucket exists here or was created by another
+        process against the same root (registers it locally if so)."""
+        if bucket in self._manifests:
+            return True
+        if not os.path.isdir(os.path.join(self.root, bucket, _OBJECTS)):
+            return False
+        with self._lock:
+            self._manifests.setdefault(bucket, {})
+            self._flush_locks.setdefault(bucket, threading.Lock())
+        self._reload_manifest(bucket)
+        return True
+
+    def _mutate_manifest(self, bucket: str, fn) -> None:
+        """Cross-process read-modify-write of the bucket manifest.
+
+        The on-disk JSON is the source of truth: under an exclusive
+        `fcntl` lock we load it, apply `fn(manifest)`, dump atomically,
+        and refresh the in-memory cache. A per-bucket thread lock keeps
+        same-process mutators from contending on the file lock."""
+        mpath = os.path.join(self.root, bucket, _MANIFEST)
+        lockpath = mpath + ".lock"
         with self._flush_locks[bucket]:
-            with self._lock:
-                snapshot = dict(self._manifests[bucket])
-            mpath = os.path.join(self.root, bucket, _MANIFEST)
-            tmp = f"{mpath}.{threading.get_ident()}.tmp"
-            with open(tmp, "w") as f:
-                json.dump(snapshot, f)
-            os.replace(tmp, mpath)
+            with open(lockpath, "a") as lockf:
+                if fcntl is not None:
+                    fcntl.flock(lockf, fcntl.LOCK_EX)
+                try:
+                    try:
+                        with open(mpath) as f:
+                            manifest = json.load(f)
+                    except (FileNotFoundError, json.JSONDecodeError):
+                        manifest = {}
+                    fn(manifest)
+                    tmp = f"{mpath}.{os.getpid()}-{threading.get_ident()}.tmp"
+                    with open(tmp, "w") as f:
+                        json.dump(manifest, f)
+                    os.replace(tmp, mpath)
+                    with self._lock:
+                        self._manifests[bucket] = manifest
+                finally:
+                    if fcntl is not None:
+                        fcntl.flock(lockf, fcntl.LOCK_UN)
+
+    def _reload_manifest(self, bucket: str) -> None:
+        """Refresh the cached manifest from disk (another process may
+        have committed since we last looked). Atomic `os.replace` on the
+        writer side means we read a consistent snapshot or nothing."""
+        mpath = os.path.join(self.root, bucket, _MANIFEST)
+        try:
+            with open(mpath) as f:
+                fresh = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return
+        with self._lock:
+            self._manifests[bucket] = fresh
 
     def _entry(self, bucket: str, key: str) -> dict:
+        try:
+            return self._manifests[bucket][key]
+        except KeyError:
+            pass
+        self._reload_manifest(bucket)
         try:
             return self._manifests[bucket][key]
         except KeyError:
@@ -339,33 +400,50 @@ class FilesystemBackend(StoreBackend):
 
     def multipart(self, bucket: str, key: str,
                   metadata: dict | None = None) -> "_FsMultipart":
-        if bucket not in self._manifests:
+        if not self._bucket_known(bucket):
             raise ObjectNotFound(bucket)
         return _FsMultipart(self, bucket, key, metadata)
 
     def _commit(self, bucket: str, key: str, entry: dict) -> ObjectMeta:
-        with self._lock:
-            self._manifests[bucket][key] = entry
-        self._flush_manifest(bucket)
+        self._mutate_manifest(bucket,
+                              lambda manifest: manifest.__setitem__(key, entry))
         return self._meta(key, entry)
 
     # -- reads -------------------------------------------------------------
 
+    def _read_object(self, bucket: str, key: str, entry: dict, reader):
+        """Run `reader(open file, entry)` surviving a concurrent
+        cross-process delete: a vanished file means the cached entry was
+        stale — reload, then either retry against the re-created object
+        or report it gone."""
+        path = self._object_path(bucket, key)
+        try:
+            with open(path, "rb") as f:
+                return reader(f, entry)
+        except FileNotFoundError:
+            self._reload_manifest(bucket)
+            fresh = self._manifests.get(bucket, {}).get(key)
+            if fresh is None:
+                raise ObjectNotFound(f"{bucket}/{key}") from None
+            try:
+                with open(path, "rb") as f:
+                    return reader(f, fresh)
+            except FileNotFoundError:
+                raise ObjectNotFound(f"{bucket}/{key}") from None
+
     def get(self, bucket: str, key: str) -> bytes:
         """S3 GetObject (whole object), CRC-etag verified end to end."""
-        e = self._entry(bucket, key)
-        with open(self._object_path(bucket, key), "rb") as f:
-            data = f.read()
-        return _verify_integrity(f"{bucket}/{key}", data, e)
+        def whole(f, e):
+            return _verify_integrity(f"{bucket}/{key}", f.read(), e)
+        return self._read_object(bucket, key, self._entry(bucket, key), whole)
 
     def get_range(self, bucket: str, key: str, start: int, length: int) -> bytes:
         """S3 ranged GET; truncates at object end like S3."""
-        e = self._entry(bucket, key)
-        start = max(int(start), 0)
-        length = min(int(length), max(e["size"] - start, 0))
-        with open(self._object_path(bucket, key), "rb") as f:
-            f.seek(start)
-            return f.read(length)
+        def ranged(f, e):
+            lo = max(int(start), 0)
+            f.seek(lo)
+            return f.read(min(int(length), max(e["size"] - lo, 0)))
+        return self._read_object(bucket, key, self._entry(bucket, key), ranged)
 
     # -- metadata ----------------------------------------------------------
 
@@ -373,22 +451,38 @@ class FilesystemBackend(StoreBackend):
         return self._meta(key, self._entry(bucket, key))
 
     def list_objects(self, bucket: str, prefix: str = "") -> list[ObjectMeta]:
-        if bucket not in self._manifests:
+        if not self._bucket_known(bucket):
             raise ObjectNotFound(bucket)
+        self._reload_manifest(bucket)  # see cross-process writes
         with self._lock:
             items = sorted(self._manifests[bucket].items())
         return [self._meta(k, e) for k, e in items if k.startswith(prefix)]
 
     def delete(self, bucket: str, key: str) -> None:
         self._entry(bucket, key)
-        os.remove(self._object_path(bucket, key))
-        with self._lock:
-            del self._manifests[bucket][key]
-        self._flush_manifest(bucket)
+        removed = []
+
+        def drop(manifest):
+            if manifest.pop(key, None) is not None:
+                removed.append(key)
+
+        # Manifest entry first, object file second: a reader holding a
+        # stale cache either still finds the bytes (valid data) or hits
+        # FileNotFoundError and resolves it via `_read_object`.
+        self._mutate_manifest(bucket, drop)
+        if not removed:
+            raise ObjectNotFound(f"{bucket}/{key}")
+        try:
+            os.remove(self._object_path(bucket, key))
+        except FileNotFoundError:
+            pass
 
 
 # Session nonces keep concurrent sessions for the same key from sharing
 # tmp paths (the old thread-id scheme collided for same-thread sessions).
+# The pid qualifier extends that to concurrent sessions in different
+# processes — e.g. a speculative duplicate of a reduce task racing the
+# original on the same output key.
 _MP_NONCE = itertools.count()
 
 
@@ -407,7 +501,7 @@ class _FsMultipart(MultipartUpload):
         path = backend._object_path(bucket, key)
         os.makedirs(os.path.dirname(path), exist_ok=True)
         self._path = path
-        self._tmp = f"{path}.{next(_MP_NONCE)}.mp"
+        self._tmp = f"{path}.{os.getpid()}-{next(_MP_NONCE)}.mp"
         self._lock = threading.Lock()
         # index -> (part tmp file, size, crc32): size/crc are computed at
         # upload time so a single-part complete() never re-reads the data.

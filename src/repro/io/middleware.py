@@ -111,6 +111,15 @@ class StoreMiddleware(StoreBackend):
                   metadata: dict | None = None) -> MultipartUpload:
         return _WrappedMultipart(self, self.inner.multipart(bucket, key, metadata))
 
+    def _commit_allowed(self) -> None:
+        """Hook consulted by `_WrappedMultipart.complete()` before the
+        (otherwise free) commit is issued. Raises to refuse. Chained down
+        the stack so a kill switch anywhere below fences commits issued
+        through sessions opened above it."""
+        inner = getattr(self.inner, "_commit_allowed", None)
+        if inner is not None:
+            inner()
+
 
 class _WrappedMultipart(MultipartUpload):
     """Routes part uploads of an inner session through the middleware.
@@ -130,6 +139,11 @@ class _WrappedMultipart(MultipartUpload):
                        nbytes=len(data))
 
     def complete(self) -> ObjectMeta:  # free, like S3 CompleteMultipartUpload
+        # Not billed/throttled, but still refused once the owning view is
+        # dead: a commit that BEGINS after a kill switch trips can never
+        # land, which makes request-budget kills pre-commit-deterministic
+        # (abort still works — cleanup outlives the host).
+        self._mw._commit_allowed()
         return self._inner.complete()
 
     def abort(self) -> None:
@@ -409,6 +423,15 @@ class KillSwitchMiddleware(StoreMiddleware):
             if self._tripped.is_set():
                 raise self._exc_factory()
         return issue()
+
+    def _commit_allowed(self) -> None:
+        # Serialized with the budget decrement so a multipart complete
+        # and the request that trips the switch are strictly ordered: a
+        # commit starting after the trip is refused, never durable.
+        with self._lock:
+            if self._tripped.is_set():
+                raise self._exc_factory()
+        super()._commit_allowed()
 
 
 # ---------------------------------------------------------------------------

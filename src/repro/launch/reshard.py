@@ -1,4 +1,4 @@
-"""Elastic restart: resume a checkpoint onto a different mesh.
+"""Checkpoint resharding: resume a training checkpoint onto a new mesh.
 
 The checkpoint stores full (unsharded) arrays + a manifest; restoring onto
 a new mesh is a `device_put` with the new mesh's NamedShardings, derived
@@ -6,7 +6,11 @@ from the same sharding rules that built the original run
 (launch/sharding.py). Shrinking DP, growing DP across pods, or moving from
 the 16x16 to the 2x16x16 mesh are all the same operation.
 
-  PYTHONPATH=src python -m repro.launch.elastic --arch tinyllama-1.1b \
+This is the TRAINING stack's elastic-restart primitive (formerly
+launch/elastic.py — renamed: the shuffle stack's elastic worker fleet
+lives in shuffle/elastic.py and is a different machine entirely).
+
+  PYTHONPATH=src python -m repro.launch.reshard --arch tinyllama-1.1b \
       --ckpt-dir /tmp/ck --verify
 """
 from __future__ import annotations

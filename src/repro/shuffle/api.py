@@ -205,6 +205,16 @@ class MapOp(abc.ABC):
         """Partition + spill split `task` (loaded as `data`), submitting
         run puts through `spiller` and recording map.* spans."""
 
+    def spill_keys(self, task: int) -> list[str]:
+        """Lineage: every spill-run key `process(task)` writes. The
+        elastic driver (shuffle/elastic.py) uses this to model correlated
+        spill-tier loss — deleting a dead worker's runs and re-executing
+        exactly the map tasks that produced them. Ops that don't support
+        elastic spill loss may keep the default."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose spill lineage "
+            "(required for FleetPlan.lose_spill_on_death)")
+
     # -- optional staged interface (pipelined map executor) --------------
     #
     # An op may additionally split `process` at the device boundary by
@@ -402,6 +412,16 @@ class ClusterShuffleReport:
     reduce_tasks: int
     per_worker_stats: dict[str, StoreStats]
     per_worker_tasks: dict[str, int]
+    # Elastic-fleet extras (shuffle/elastic.py); zero under the static
+    # PhaseDriver so existing constructor call sites stay valid.
+    speculated_tasks: int = 0  # duplicate attempts launched
+    speculation_wins: int = 0  # duplicates that committed first
+    heartbeat_misses: int = 0  # workers declared dead by silence
+    spill_lost_map_tasks: int = 0  # map tasks re-run for lost spill runs
+    requeued_reduce_tasks: int = 0  # reduce attempts parked on lost input
+    workers_admitted: int = 0  # joined mid-job
+    workers_retired: int = 0  # gracefully drained mid-job
+    recovery_rounds: int = 0  # map-recovery passes after spill loss
 
     @property
     def sort(self) -> ShuffleReport:

@@ -75,6 +75,21 @@ class WorkerContext:
     timeline: rt.PhaseTimeline
     control: rt.JobControl
     num_map_tasks: int = 0  # refill-pool sizing hint (runs per partition)
+    # Elastic-driver hooks (shuffle/elastic.py); None/empty under the
+    # round-barriered PhaseDriver. All take the worker NAME first so one
+    # context serves the whole fleet. `commit_gate(worker, r)` is asked
+    # immediately before a reduce partition's multipart commit (the
+    # speculation loser-abort) and, for in-thread workers, polled
+    # between merge windows so a losing attempt abandons mid-merge;
+    # `map_commit_gate(worker, g)` is the map-phase analogue, polled
+    # per fetched chunk through the read-gated store view; `requeue_on`
+    # exception types mean a reduce input vanished (correlated spill
+    # loss) and are routed to `on_requeue(worker, r, exc) -> handled`
+    # instead of failing the job.
+    commit_gate: Callable[[str, int], bool] | None = None
+    map_commit_gate: Callable[[str, int], bool] | None = None
+    requeue_on: tuple = ()
+    on_requeue: Callable[[str, int, BaseException], bool] | None = None
 
 
 class Worker(abc.ABC):
@@ -101,6 +116,19 @@ class Worker(abc.ABC):
                          pop_next: Callable[[], int | None],
                          on_done: Callable[[int], None]) -> None: ...
 
+    # -- elastic-fleet extensions (optional; shuffle/elastic.py) ---------
+
+    def last_beat(self) -> float | None:
+        """Monotonic timestamp of the last sign of life, or None if this
+        worker kind has no out-of-band heartbeat (in-thread workers fail
+        synchronously, so the driver never needs to detect them)."""
+        return None
+
+    def fence(self) -> None:
+        """Sever the worker after it is declared dead: its store view
+        must refuse further requests so an in-flight laggard can never
+        durably commit after the driver re-planned its claims."""
+
 
 class ThreadWorker(Worker):
     """Thread-backed emulated worker with its own metrics-wrapped view of
@@ -119,20 +147,33 @@ class ThreadWorker(Worker):
     # staging.prefetch pipeline the single-host path uses).
 
     def run_map_phase(self, ctx, pop_next, on_done):
+        name = self.name
         rt.run_map_tasks(
             self.store, ctx.bucket, ctx.map_op, pop_next, plan=ctx.plan,
             timeline=ctx.timeline, control=ctx.control,
-            tag_prefix=f"{self.name}/", on_done=on_done)
+            tag_prefix=f"{name}/", on_done=on_done,
+            commit_gate=(None if ctx.map_commit_gate is None
+                         else (lambda g: ctx.map_commit_gate(name, g))))
 
     # -- reduce: the worker's own scheduler over its partition range -----
 
     def run_reduce_phase(self, ctx, pop_next, on_done):
+        name = self.name
         rt.ReduceScheduler(
             self.store, ctx.reduce_shared,
             width=ctx.plan.parallel_reducers,
             runs_hint=ctx.num_map_tasks,
             fatal=(WorkerFailure,),
-            tag_prefix=f"{self.name}/",
+            tag_prefix=f"{name}/",
+            requeue=ctx.requeue_on,
+            on_requeue=(None if ctx.on_requeue is None
+                        else (lambda r, e: ctx.on_requeue(name, r, e))),
+            commit_gate=(None if ctx.commit_gate is None
+                         else (lambda r: ctx.commit_gate(name, r))),
+            # In-thread gates are cheap predicates: poll them mid-merge
+            # so a speculation loser abandons instead of streaming its
+            # whole partition before losing at the final gate.
+            gate_poll=True,
         ).run(pop_next, on_done=on_done)
 
 
@@ -184,6 +225,12 @@ class FaultyWorker(Worker):
 
     def run_reduce_phase(self, ctx, pop_next, on_done):
         self.inner.run_reduce_phase(ctx, self._gated(pop_next), on_done)
+
+    def last_beat(self) -> float | None:
+        return self.inner.last_beat()
+
+    def fence(self) -> None:
+        self._kill.trip()
 
 
 def build_workers(store: StoreBackend,

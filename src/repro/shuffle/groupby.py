@@ -105,6 +105,9 @@ class GroupByMapOp(MapOp):
     def run_key(self, task: int) -> str:
         return f"{self.plan.spill_prefix}run-{task:05d}"
 
+    def spill_keys(self, task: int) -> list[str]:
+        return [self.run_key(task)]  # lineage for elastic spill loss
+
     def plan_tasks(self, store: StoreBackend, bucket: str) -> int:
         plan = self.plan
         inputs = store.list_objects(bucket, plan.input_prefix)

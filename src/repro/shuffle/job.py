@@ -180,6 +180,47 @@ class ShuffleSession:
             per_worker_tasks=dict(driver.per_worker_tasks),
         )
 
+    def run_elastic(self, workers: Sequence[ex.Worker],
+                    fleet) -> ClusterShuffleReport:
+        """The elastic driver: membership + heartbeats, in-phase claim
+        release, straggler speculation with loser-abort commits, and
+        correlated spill-tier loss with lineage-tracked map re-execution
+        (see shuffle/elastic.ElasticPhaseDriver). `fleet` is a
+        shuffle/elastic.FleetPlan. Returns the driver too — callers that
+        admit/retire workers mid-job grab it via `session.driver`."""
+        from repro.shuffle.elastic import ElasticPhaseDriver
+
+        job = self.job
+        ctx = ex.WorkerContext(
+            plan=job.plan, bucket=job.bucket, map_op=job.map_op,
+            reduce_shared=self.shared, timeline=self.timeline,
+            control=self.control, num_map_tasks=self.num_tasks,
+        )
+        driver = self.driver = ElasticPhaseDriver(
+            workers, fleet=fleet, store=job.store, bucket=job.bucket,
+            tracer=self.tracer)
+        driver.run_job(ctx, num_map_tasks=self.num_tasks,
+                       num_partitions=self.num_partitions)
+        self.control.raise_first()
+        counters = driver.pool_counters()
+        return ClusterShuffleReport(
+            report=self.build_report(map_seconds=driver.map_seconds,
+                                     reduce_seconds=driver.reduce_seconds),
+            num_cluster_workers=len(driver.workers),
+            failed_workers=list(driver.failed_workers),
+            map_tasks=self.num_tasks,
+            reduce_tasks=self.num_partitions,
+            per_worker_stats=driver.per_worker_stats(),
+            per_worker_tasks=dict(driver.per_worker_tasks),
+            heartbeat_misses=driver.heartbeat_misses,
+            spill_lost_map_tasks=driver.spill_lost_map_tasks,
+            requeued_reduce_tasks=driver.requeued_reduce_tasks,
+            workers_admitted=driver.workers_admitted,
+            workers_retired=driver.workers_retired,
+            recovery_rounds=driver.recovery_rounds,
+            **counters,
+        )
+
     # -- reporting ---------------------------------------------------------
 
     def build_report(self, *, map_seconds: float,
@@ -265,23 +306,32 @@ class ShuffleJob:
 
     def run(self, workers: int = 0, *,
             cluster: ex.ClusterPlan | None = None,
-            worker_list: Sequence[ex.Worker] | None = None):
+            worker_list: Sequence[ex.Worker] | None = None,
+            fleet=None):
         """Execute the job; returns a ShuffleReport (single-host) or a
-        ClusterShuffleReport (cluster mode)."""
+        ClusterShuffleReport (cluster mode). Passing `fleet` (a
+        shuffle/elastic.FleetPlan) with a `worker_list` selects the
+        elastic driver — heartbeats, speculation, spill-loss recovery —
+        instead of the round-barriered PhaseDriver."""
         if worker_list is not None:
-            fleet: Sequence[ex.Worker] | None = list(worker_list)
+            crew: Sequence[ex.Worker] | None = list(worker_list)
         elif cluster is not None:
-            fleet = ex.build_workers(self.store, cluster)
+            crew = ex.build_workers(self.store, cluster)
         elif workers >= 1:
-            fleet = ex.build_workers(self.store,
-                                     ex.ClusterPlan(num_workers=workers))
+            crew = ex.build_workers(self.store,
+                                    ex.ClusterPlan(num_workers=workers))
         else:
-            fleet = None
-        if fleet is None:
+            crew = None
+        if crew is None:
+            require(fleet is None, "fleet", fleet,
+                    "the elastic driver needs a worker_list")
             return self.prepare(schedulers=1).run_single_host()
-        require(len(fleet) >= 1, "worker_list", len(fleet),
+        require(len(crew) >= 1, "worker_list", len(crew),
                 "must supply >= 1 worker")
-        return self.prepare(schedulers=len(fleet)).run_cluster(fleet)
+        session = self.prepare(schedulers=len(crew))
+        if fleet is not None:
+            return session.run_elastic(crew, fleet)
+        return session.run_cluster(crew)
 
 
 __all__ = ["ShuffleJob", "ShuffleSession"]

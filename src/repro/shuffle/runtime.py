@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import contextlib
 import dataclasses
+import itertools
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
@@ -48,6 +49,11 @@ from repro.obs.context import (TraceContext, bind_context, current_context,
                                use_context)
 
 from repro.shuffle.api import MapOp, ReduceOp, require
+
+# Attempt-unique suffix for governor/peak accounting keys: speculative
+# duplicates of one partition run concurrently and must each hold their
+# own grant — keying by partition id alone would leak or double-free.
+_ATTEMPT_SEQ = itertools.count()
 
 
 def _task_context(phase: str, task, tag_prefix: str) -> TraceContext:
@@ -302,7 +308,10 @@ class AdaptiveBudgetGovernor:
             if entry is not None:
                 self._free += entry[1]
             if completed:
-                self._done_rids.add(rid)
+                # Attempt keys are (partition, attempt) tuples when the
+                # scheduler may run duplicate attempts (speculation);
+                # done-accounting is per PARTITION either way.
+                self._done_rids.add(rid[0] if isinstance(rid, tuple) else rid)
             self._cond.notify_all()
 
 
@@ -448,6 +457,57 @@ class SiblingFailed(Exception):
     """Internal: this reducer was cancelled because another one failed."""
 
 
+class AttemptLost(Exception):
+    """Internal: this attempt lost a speculative race — another attempt
+    of the same task already committed durably, so finishing this one is
+    pure wasted wall-clock (the phase join would wait for it). Raised
+    from the cooperative abandonment checks (the map read gate, the
+    reduce merge-window poll) and handled as a clean abort: the attempt
+    unwinds through the normal cleanup path (multipart abort, grant
+    retirement) and its scheduler keeps running."""
+
+
+class _AbandonGatedReads:
+    """Read-path store proxy for a speculative map attempt: every GET
+    (and every get_chunks chunk) first consults the commit gate, and
+    once another attempt of this task has durably committed the next
+    check raises AttemptLost — the loser stops fetching at the next
+    chunk boundary instead of dragging the phase join to its own finish
+    line. Write paths are deliberately NOT gated: map spill bytes are
+    deterministic functions of (task, plan, input), so a racing
+    duplicate write is byte-identical and harmless — it is the chunked
+    fetch loop that burns wall-clock on a straggler."""
+
+    def __init__(self, inner, may_commit: Callable[[], bool]):
+        self._inner = inner
+        self._may_commit = may_commit
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def _check(self) -> None:
+        if not self._may_commit():
+            raise AttemptLost()
+
+    def get(self, *args, **kwargs):
+        self._check()
+        return self._inner.get(*args, **kwargs)
+
+    def get_range(self, *args, **kwargs):
+        self._check()
+        return self._inner.get_range(*args, **kwargs)
+
+    def get_chunks(self, *args, **kwargs):
+        it = self._inner.get_chunks(*args, **kwargs)
+        while True:
+            self._check()
+            try:
+                chunk = next(it)
+            except StopIteration:
+                return
+            yield chunk
+
+
 def timed_part(timeline: PhaseTimeline, tag: str, mp, index: int,
                data: bytes) -> None:
     """Background part upload, recorded as a reduce.upload span."""
@@ -466,7 +526,8 @@ def timed_put(timeline: PhaseTimeline, tag: str, store, bucket: str,
 
 def finalize_session(timeline: PhaseTimeline, tag: str,
                      uploader: staging.AsyncWriter, mp,
-                     on_done: Callable[[], None] | None = None) -> None:
+                     on_done: Callable[[], None] | None = None, *,
+                     commit_gate: Callable[[], bool] | None = None) -> None:
     """Background session finisher: wait for the partition's in-flight
     parts, then commit — or abort on any failure (a truncated commit
     would carry a self-consistent CRC etag IntegrityError can't catch).
@@ -475,7 +536,12 @@ def finalize_session(timeline: PhaseTimeline, tag: str,
     overlap partition r+active's merge even at parallel_reducers=1).
     `on_done` fires only after the commit succeeds — the durability
     confirmation the cluster driver uses to decide what a dead worker
-    still owed."""
+    still owed.
+
+    `commit_gate` is the speculation loser-abort point: consulted after
+    all parts land and immediately before the commit, a False answer
+    (another attempt of this task already committed durably) aborts the
+    session instead — no double commit, no on_done."""
     t = time.perf_counter()
     try:
         uploader.close()  # waits all parts; re-raises the first failure
@@ -483,6 +549,9 @@ def finalize_session(timeline: PhaseTimeline, tag: str,
         mp.abort()
         raise
     try:
+        if commit_gate is not None and not commit_gate():
+            mp.abort()
+            return
         mp.complete()
     except BaseException:
         mp.abort()
@@ -533,13 +602,32 @@ class ReduceScheduler:
 
     def __init__(self, store: StoreBackend, shared: ReduceShared, *,
                  width: int, runs_hint: int = 2, fatal: tuple = (),
-                 tag_prefix: str = ""):
+                 tag_prefix: str = "", requeue: tuple = (),
+                 on_requeue: Callable[[int, BaseException], bool] | None = None,
+                 commit_gate: Callable[[int], bool] | None = None,
+                 gate_poll: bool = False):
         self.store = store
         self.shared = shared
         self.width = max(int(width), 1)
         self.runs_hint = max(int(runs_hint), 1)
         self.fatal = tuple(fatal)
         self.tag_prefix = tag_prefix
+        # Elastic-driver hooks. `requeue` exception types mean the
+        # partition's INPUT vanished under it (correlated spill loss):
+        # the attempt aborted cleanly, the scheduler stays alive, and
+        # `on_requeue(r, exc)` decides whether the driver can recover
+        # (True: hand the partition back for a later attempt) or the
+        # loss is unexplained (False: job failure). `commit_gate(r)` is
+        # threaded to finalize_session as the speculation loser-abort.
+        # With `gate_poll`, the gate is ALSO polled between merge
+        # windows so a losing attempt abandons mid-merge (AttemptLost)
+        # instead of streaming its whole partition first — only enable
+        # it when the gate is a cheap in-process predicate (the process
+        # worker's gate is a parent RPC and stays commit-time-only).
+        self.requeue = tuple(requeue)
+        self.on_requeue = on_requeue
+        self.commit_gate = commit_gate
+        self.gate_poll = gate_poll
 
     def run(self, pop_next: Callable[[], int | None],
             on_done: Callable[[int], None] | None = None) -> None:
@@ -572,11 +660,25 @@ class ReduceScheduler:
                     self._reduce_one(r, refill_pool, finishers, on_done)
                 except SiblingFailed:
                     pass  # aborted cleanly; the root cause is recorded
+                except AttemptLost:
+                    continue  # lost a speculative race; the winner committed
                 except self.fatal as e:  # worker death: stop this scheduler
                     with dead_lock:
                         dead.append(e)
                     dead_evt.set()
                     return
+                except self.requeue as e:  # input lost mid-merge
+                    handled = False
+                    if self.on_requeue is not None:
+                        try:
+                            handled = bool(self.on_requeue(r, e))
+                        except BaseException as e2:
+                            shared.control.fail(e2)
+                            return
+                    if not handled:
+                        shared.control.fail(e)
+                        return
+                    continue  # the attempt aborted; the driver re-plans
                 except BaseException as e:  # real failure: cancel the job
                     shared.control.fail(e)
                     return
@@ -628,9 +730,14 @@ class ReduceScheduler:
         slices, n_total = op.sources(r)
         registered = bool(slices)
         chunk_records = 0
+        # Grant/peak accounting keys by ATTEMPT, not partition: under
+        # speculation two attempts of one partition can merge at once,
+        # and each must hold (and release) its own budget grant for the
+        # governor's bound to stay provable.
+        akey = (r, next(_ATTEMPT_SEQ))
         if registered:
             chunk = governor.register(
-                r, len(slices), abort=shared.control.cancel.is_set)
+                akey, len(slices), abort=shared.control.cancel.is_set)
             if chunk is None:
                 raise SiblingFailed()
             chunk_records = chunk // rb
@@ -681,10 +788,13 @@ class ReduceScheduler:
             while cursors:
                 if shared.control.cancel.is_set():
                     raise SiblingFailed()
+                if (self.gate_poll and self.commit_gate is not None
+                        and not self.commit_gate(r)):
+                    raise AttemptLost()
                 if registered:
                     # Adaptive governor: soak up budget freed by retired
                     # reducers — the per-run chunk can only grow.
-                    grown = governor.grow(r) // rb
+                    grown = governor.grow(akey) // rb
                     if grown != chunk_records:
                         chunk_records = grown
                         for c in cursors:
@@ -701,7 +811,8 @@ class ReduceScheduler:
                         list(refill_pool.map(bind_context(RunCursor.refill),
                                              need))
                     timeline.add("reduce.fetch", t, worker=tag)
-                shared.peak.update(r, sum(c.buffered_bytes for c in cursors))
+                shared.peak.update(akey,
+                                   sum(c.buffered_bytes for c in cursors))
                 t = time.perf_counter()
                 # Safe emit bound: the smallest last-buffered key among
                 # runs that still have un-fetched records — nothing
@@ -755,9 +866,9 @@ class ReduceScheduler:
             except BaseException:
                 pass  # a dead worker's abort fails too; parts are orphaned
             finally:
-                shared.peak.clear(r)
+                shared.peak.clear(akey)
                 if registered:
-                    governor.retire(r, completed=False)
+                    governor.retire(akey, completed=False)
                 if uploader is not None:
                     uploader.close()
             raise
@@ -765,19 +876,28 @@ class ReduceScheduler:
         # scheduler slot frees while the tail parts still upload —
         # finishers.submit blocks once max(max_inflight_writes, width)
         # sessions await completion (cross-partition upload backpressure).
-        shared.peak.clear(r)
+        shared.peak.clear(akey)
         if registered:
-            governor.retire(r)
+            governor.retire(akey)
         confirm = None if on_done is None else (lambda: on_done(r))
+        gate = (None if self.commit_gate is None
+                else (lambda: self.commit_gate(r)))
         finishers.submit(finalize_session, timeline, tag, uploader, mp,
-                         confirm)
+                         confirm, commit_gate=gate)
+
+
+#: Sentinel yielded through the prefetch pipeline when a map load
+#: abandoned mid-fetch (AttemptLost): the consume loop skips the task —
+#: no processing, no spills, no confirmation — and moves on.
+_LOST = object()
 
 
 def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
                   pop_next: Callable[[], int | None], *, plan,
                   timeline: PhaseTimeline, control: JobControl,
                   tag_prefix: str = "",
-                  on_done: Callable[[int], None] | None = None) -> None:
+                  on_done: Callable[[int], None] | None = None,
+                  commit_gate: Callable[[int], bool] | None = None) -> None:
     """The staged map loop, shared by the single-host path and every
     cluster worker: claim tasks from `pop_next`, keep `prefetch_depth`
     split loads in flight ahead of processing (retry-aware against
@@ -801,6 +921,14 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
     leg. Spill bytes, offsets, and confirmation order are identical to
     the monolithic path; only wall-clock concurrency (and the per-stage
     span names) change.
+
+    `commit_gate(g)` (elastic speculation) is the loser-abort predicate:
+    each task's load runs against a read-gated store view that raises
+    AttemptLost once another attempt of that task has durably committed,
+    so a straggling duplicate abandons its chunked fetch at the next
+    chunk boundary instead of holding the phase open. The gate is also
+    re-checked between load and process, skipping the compute/spill leg
+    of an already-lost task outright.
     """
     popped: collections.deque[int] = collections.deque()
     pipelined = (bool(getattr(plan, "map_pipeline", False))
@@ -821,16 +949,29 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
                 return
             popped.append(g)
             ctx = _task_context("map", f"g{g}", tag_prefix)
+            # AttemptLost must be absorbed INSIDE the thunk: escaping
+            # the prefetch iterator would unwind the whole pipeline and
+            # take the worker's other in-flight claims down with it.
+            view = (store if commit_gate is None
+                    else _AbandonGatedReads(store,
+                                            lambda g=g: commit_gate(g)))
             if pipelined:
-                def load_one(g=g):
+                def load_one(g=g, view=view):
                     t = time.perf_counter()
-                    data = map_op.load(store, bucket, g)
+                    try:
+                        data = map_op.load(view, bucket, g)
+                    except AttemptLost:
+                        return _LOST
                     timeline.add("map.decode", t, worker=f"{tag_prefix}g{g}")
                     return data
                 yield bind_context(load_one, ctx)
             else:
-                yield bind_context(
-                    lambda g=g: map_op.load(store, bucket, g), ctx)
+                def load_one(g=g, view=view):
+                    try:
+                        return map_op.load(view, bucket, g)
+                    except AttemptLost:
+                        return _LOST
+                yield bind_context(load_one, ctx)
 
     with staging.AsyncWriter(plan.max_inflight_writes) as spiller:
         task_iter = iter(staging.prefetch(
@@ -839,7 +980,8 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
         if pipelined:
             _run_map_pipelined(store, bucket, map_op, task_iter, popped,
                                timeline=timeline, tag_prefix=tag_prefix,
-                               spiller=spiller, on_done=on_done)
+                               spiller=spiller, on_done=on_done,
+                               commit_gate=commit_gate)
             return
         while True:
             t_wait = time.perf_counter()
@@ -848,6 +990,9 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
             except StopIteration:
                 return
             g = popped.popleft()
+            if data is _LOST or (commit_gate is not None
+                                 and not commit_gate(g)):
+                continue  # another attempt already committed this task
             tag = f"{tag_prefix}g{g}"
             timeline.add("map.wait", t_wait, worker=tag)
             # Processing runs under the task's TraceContext so spill puts
@@ -862,7 +1007,9 @@ def run_map_tasks(store: StoreBackend, bucket: str, map_op: MapOp,
 
 def _run_map_pipelined(store, bucket, map_op, task_iter, popped, *,
                        timeline: PhaseTimeline, tag_prefix: str, spiller,
-                       on_done: Callable[[int], None] | None) -> None:
+                       on_done: Callable[[int], None] | None,
+                       commit_gate: Callable[[int], bool] | None = None
+                       ) -> None:
     """The double-buffered stage executor behind run_map_tasks.
 
     Two single-thread pools — one per stage — keep stage order FIFO per
@@ -899,6 +1046,9 @@ def _run_map_pipelined(store, bucket, map_op, task_iter, popped, *,
             except StopIteration:
                 break
             g = popped.popleft()
+            if data is _LOST or (commit_gate is not None
+                                 and not commit_gate(g)):
+                continue  # another attempt already committed this task
             tag = f"{tag_prefix}g{g}"
             timeline.add("map.wait", t_wait, worker=tag)
             ctx = _task_context("map", f"g{g}", tag_prefix)
@@ -921,6 +1071,7 @@ def _run_map_pipelined(store, bucket, map_op, task_iter, popped, *,
 
 __all__ = [
     "AdaptiveBudgetGovernor",
+    "AttemptLost",
     "JobControl",
     "PeakTracker",
     "PhaseTimeline",

@@ -65,6 +65,12 @@ class SortMapOp(MapOp):
     def load(self, store: StoreBackend, bucket: str, task: int):
         return self.sorter.load_wave(store, bucket, self.waves[task])
 
+    def spill_keys(self, task: int) -> list[str]:
+        from repro.core import external_sort as xs
+
+        return [xs._spill_key(self.plan, task, wid)
+                for wid in range(self.sorter.w)]
+
     def process(self, store: StoreBackend, bucket: str, task: int, data, *,
                 spiller, timeline, tag) -> None:
         keys, ids, payload = data

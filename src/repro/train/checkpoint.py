@@ -10,7 +10,7 @@ Mirrors the paper's manifest discipline (§3.2: input/output manifest files
 Writes are atomic (tmp dir + rename); a LATEST marker is updated last, so a
 crash mid-save never corrupts the restore point (checkpoint/restart
 recovery). `load` re-shards onto *any* mesh via NamedSharding device_put —
-this is the elastic-scaling path (launch/elastic.py): a checkpoint taken on
+this is the checkpoint-resharding path (launch/reshard.py): one taken on
 256 chips restores onto 512 or 8.
 
 At real 100TB/1000-node scale the arrays would be written shard-wise by

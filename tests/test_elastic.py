@@ -1,0 +1,373 @@
+"""Elastic fleet driver: claims, speculation, spill loss, membership.
+
+The ISSUE-8 acceptance contract: the elastic driver must keep output
+byte- and etag-identical to the single-host sort under every schedule it
+introduces — process-backed workers, mid-job admission/retirement,
+heartbeat deaths, straggler speculation with loser-abort commits, and
+correlated spill-tier loss recovered by lineage-tracked map
+re-execution. ClaimPool (the shared-claim scheduler underneath) is unit
+tested in-process with an injected clock; end-to-end schedules run in
+subprocesses with 8 host devices like the rest of the cluster suite.
+"""
+import pytest
+
+from helpers import run_with_devices
+from repro.shuffle.elastic import ClaimPool, FleetPlan
+from repro.shuffle.executor import WorkerFailure
+
+
+# ---------------------------------------------------------------------------
+# FleetPlan validation
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_plan_validates_knobs():
+    FleetPlan()  # defaults are valid
+    with pytest.raises(ValueError, match="heartbeat_timeout_s"):
+        FleetPlan(heartbeat_timeout_s=0)
+    with pytest.raises(ValueError, match="speculation_quantile"):
+        FleetPlan(speculation_quantile=1.5)
+    with pytest.raises(ValueError, match="speculation_factor"):
+        FleetPlan(speculation_factor=0.5)
+    with pytest.raises(ValueError, match="max_duplicates"):
+        FleetPlan(max_duplicates=1)
+
+
+# ---------------------------------------------------------------------------
+# ClaimPool: the shared-claim scheduler (injected clock, no devices)
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _pool(tasks=4, clock=None, **plan_kw):
+    return ClaimPool(range(tasks), plan=FleetPlan(**plan_kw), phase="map",
+                     clock=clock or _Clock())
+
+
+def test_claim_pool_lifecycle_and_dedup():
+    pool = _pool(2)
+    assert pool.pop("a") == 0 and pool.pop("b") == 1
+    assert pool.confirm(0, "a") and pool.confirm(1, "b")
+    assert pool.all_confirmed()
+    # terminal: further pops end the phase, duplicate confirms lose
+    assert pool.pop("a") is None
+    assert not pool.confirm(0, "b")
+    assert pool.confirmed_by("a") == [0]
+
+
+def test_claim_pool_release_worker_repends_unconfirmed():
+    pool = _pool(3)
+    assert pool.pop("a") == 0 and pool.pop("b") == 1
+    freed = pool.release_worker("a")
+    assert freed == [0]
+    # recovery work beats fresh work (front of the queue)...
+    assert pool.pop("b") == 0
+    # ...and the dead worker is fenced out of the pool entirely
+    with pytest.raises(WorkerFailure):
+        pool.pop("a")
+    assert pool.reexecutions == 1
+
+
+def test_claim_pool_retire_drains_gracefully():
+    pool = _pool(2)
+    assert pool.pop("a") == 0
+    pool.retire_worker("a")
+    assert pool.pop("a") is None  # handed nothing new
+    assert pool.confirm(0, "a")  # but its in-flight attempt still counts
+
+
+def test_claim_pool_yield_when_busy_never_blocks_inflight_worker():
+    pool = _pool(1)
+    assert pool.pop("a") == 0
+    # "a" holds an unconfirmed claim and the queue is empty: a blocking
+    # pop would deadlock the map pipeline's pull-ahead loop, so the
+    # yielding pop returns None for the caller to drain its own work.
+    assert pool.pop("a", yield_when_busy=True) is None
+
+
+def test_claim_pool_block_unblock_unconfirm_roundtrip():
+    pool = _pool(3)
+    for t, w in ((0, "a"), (1, "a")):
+        assert pool.pop(w) == t
+        assert pool.confirm(t, w)
+    # correlated loss: roll back a's outputs and park everything else
+    assert pool.block_unconfirmed() == 1  # task 2
+    assert pool.unconfirm([0, 1]) == [0, 1]
+    assert sorted(pool.unconfirmed()) == [0, 1, 2]
+    assert pool.blocked() == {2}
+    assert pool.unblock_all() == 1
+    assert not pool.blocked()
+
+
+def test_claim_pool_speculation_duplicates_laggard_and_first_commit_wins():
+    clock = _Clock()
+    pool = _pool(4, clock=clock, speculation=True, speculation_min_samples=2,
+                 speculation_quantile=0.5, speculation_factor=2.0,
+                 speculation_min_s=0.1)
+    # two confirmed 1s tasks seed the duration sample
+    assert pool.pop("fast") == 0
+    clock.t = 1.0
+    assert pool.confirm(0, "fast")
+    assert pool.pop("fast") == 1
+    clock.t = 2.0
+    assert pool.confirm(1, "fast")
+    # the straggler claims task 2; nothing is speculated before the
+    # deadline (2x the median = 2s)...
+    assert pool.pop("slow") == 2
+    assert pool.pop("fast") == 3
+    assert pool.confirm(3, "fast")
+    clock.t = 3.9
+    assert pool._claim_speculative("fast") is None
+    # ...and past it, an idle worker duplicates the in-flight laggard
+    clock.t = 4.1
+    assert pool.pop("fast") == 2
+    assert pool.speculated == 1
+    # first durable commit wins; the straggler's late commit is refused
+    assert pool.may_commit(2, "fast") and pool.may_commit(2, "slow")
+    assert pool.confirm(2, "fast")
+    assert not pool.may_commit(2, "slow")
+    assert not pool.confirm(2, "slow")
+    assert pool.spec_wins == 1 and pool.spec_losses == 1
+
+
+def test_claim_pool_speculation_respects_duplicate_cap():
+    clock = _Clock()
+    pool = _pool(2, clock=clock, speculation=True, speculation_min_samples=1,
+                 speculation_min_s=0.0, max_duplicates=2)
+    assert pool.pop("a") == 0
+    clock.t = 1.0
+    assert pool.confirm(0, "a")
+    assert pool.pop("slow") == 1
+    clock.t = 10.0
+    assert pool.pop("b") == 1  # duplicate 1 of the laggard
+    # cap reached: a third worker must not pile on, and a worker never
+    # duplicates its own claim
+    assert pool._claim_speculative("c") is None
+    assert pool._claim_speculative("slow") is None
+    assert pool.speculated == 1
+
+
+# ---------------------------------------------------------------------------
+# End-to-end schedules (subprocess: 8 host devices)
+# ---------------------------------------------------------------------------
+
+ELASTIC_SETUP = """
+import tempfile
+import threading
+import time
+import jax
+from repro.core.external_sort import ExternalSortPlan, external_sort
+from repro.core.compat import make_mesh
+from repro.data import gensort, valsort
+from repro.io.object_store import ObjectStore
+from repro.shuffle.elastic import FleetPlan
+from repro.shuffle.executor import (ClusterFailure, FaultyWorker,
+                                    ThreadWorker)
+from repro.shuffle.sort import sort_shuffle_job
+
+mesh = make_mesh((8,), ("w",))
+plan = ExternalSortPlan(
+    records_per_wave=1 << 13,
+    num_rounds=2,
+    reducers_per_worker=2,
+    payload_words=2,
+    impl="ref",
+    input_records_per_partition=1 << 12,
+    output_part_records=1 << 11,
+    store_chunk_bytes=16 << 10,
+    parallel_reducers=2,
+    reduce_memory_budget_bytes=64 << 10,
+)
+N = 1 << 15  # 4 map tasks; 16 output partitions
+root = tempfile.mkdtemp(prefix="elastic-test-")
+store = ObjectStore(root)
+store.create_bucket("sort")
+in_ck, nparts = gensort.write_to_store(
+    store, "sort", plan.input_prefix, N,
+    plan.input_records_per_partition, plan.payload_words)
+
+def layout():
+    return [(m.key, m.etag, m.size, m.parts)
+            for m in store.list_objects("sort", plan.output_prefix)]
+
+def job():
+    return sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
+                            plan=plan)
+
+rep0 = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan)
+want = layout()
+assert len(want) == 16
+
+def check_bytes(tag):
+    assert layout() == want, f"{tag} changed output bytes"
+    val = valsort.validate_from_store(store, "sort", plan.output_prefix,
+                                      in_ck)
+    assert val.ok and val.total_records == N, (tag, val)
+"""
+
+
+def test_elastic_thread_fleet_identity_and_membership():
+    # Clean elastic run: byte-identical, no failures — then a run where
+    # a worker joins mid-job and another is retired at the start, with
+    # the late joiner doing real confirmed work.
+    run_with_devices(ELASTIC_SETUP + """
+crew = [ThreadWorker(f"w{i}", store) for i in range(3)]
+crep = job().run(worker_list=crew, fleet=FleetPlan())
+check_bytes("elastic W=3")
+assert not crep.failed_workers and crep.recovery_rounds == 0
+assert crep.heartbeat_misses == 0 and crep.spill_lost_map_tasks == 0
+assert sum(crep.per_worker_tasks.values()) == 20
+assert sum(s.get_requests for s in crep.per_worker_stats.values()) > 0
+
+# membership: retire w1 up front, admit "late" as soon as the driver
+# exists — both take effect inside the running job
+jb = job()
+session = jb.prepare(schedulers=2)
+crew = [ThreadWorker(f"w{i}", store) for i in range(2)]
+late = ThreadWorker("late", store)
+
+def membership():
+    while getattr(session, "driver", None) is None:
+        time.sleep(0.005)
+    session.driver.retire("w1")
+    session.driver.admit(late)
+
+t = threading.Thread(target=membership, daemon=True)
+t.start()
+crep = session.run_elastic(crew, FleetPlan())
+t.join()
+check_bytes("elastic admit/retire")
+assert crep.workers_admitted == 1 and crep.workers_retired == 1
+assert crep.per_worker_tasks.get("late", 0) >= 1, crep.per_worker_tasks
+assert not crep.failed_workers
+print("OK")
+""", timeout=900)
+
+
+def test_elastic_spill_loss_reexecutes_map_lineage():
+    # w0 dies mid-job and takes its local spill tier with it: every map
+    # task it had confirmed must be rolled back and re-executed on the
+    # survivor (lineage via MapOp.spill_keys), parked reduce partitions
+    # resume after the recovery pass, and the output stays
+    # byte-identical. fail_after_tasks=6 places the death inside the
+    # reduce phase (4 map tasks + 16 partitions).
+    run_with_devices(ELASTIC_SETUP + """
+crew = [FaultyWorker(ThreadWorker("w0", store), fail_after_tasks=6),
+        ThreadWorker("w1", store)]
+crep = job().run(worker_list=crew, fleet=FleetPlan())
+check_bytes("spill-loss run")
+assert crep.failed_workers == ["w0"], crep.failed_workers
+# the dead worker had confirmed map work, so its spill loss forced a
+# lineage re-execution (spill_lost counts rolled-back map tasks)
+assert crep.spill_lost_map_tasks >= 1, crep
+assert crep.reexecuted_map_tasks >= crep.spill_lost_map_tasks
+assert sum(crep.per_worker_tasks.values()) >= 20
+print("OK", crep.spill_lost_map_tasks, crep.recovery_rounds,
+      crep.requeued_reduce_tasks)
+""", timeout=900)
+
+
+def test_elastic_speculation_beats_straggler():
+    # One worker's store view is latency-injected (a straggler host, not
+    # straggler data): with speculation on, idle fast workers duplicate
+    # its in-flight laggards past the quantile deadline and win the
+    # commit race — output unchanged, loser commits aborted.
+    run_with_devices(ELASTIC_SETUP + """
+from repro.io.middleware import FaultProfile, LatencyBandwidthMiddleware
+
+slow_view = LatencyBandwidthMiddleware(store, FaultProfile(latency_s=0.25))
+crew = [ThreadWorker("w0", store), ThreadWorker("w1", store),
+        ThreadWorker("slow", slow_view)]
+fleet = FleetPlan(speculation=True, speculation_min_samples=3,
+                  speculation_quantile=0.5, speculation_factor=2.0,
+                  speculation_min_s=0.1)
+crep = job().run(worker_list=crew, fleet=fleet)
+check_bytes("speculation run")
+assert not crep.failed_workers
+assert crep.speculated_tasks >= 1, crep
+assert crep.speculation_wins >= 1, crep
+# the straggler was outrun, not killed: it still confirmed its share
+assert "slow" in crep.per_worker_tasks or crep.speculation_wins >= 1
+print("OK", crep.speculated_tasks, crep.speculation_wins)
+""", timeout=900)
+
+
+def test_elastic_last_survivor_death_mid_reduce_fails_cleanly():
+    # Satellite: when the LAST surviving worker dies mid-reduce the job
+    # must raise ClusterFailure — and fail *cleanly*: every partition
+    # that did commit is byte-identical to the reference, and no
+    # in-flight multipart session leaves tmp parts behind (they are
+    # aborted, not leaked, when the store view dies).
+    run_with_devices(ELASTIC_SETUP + """
+import os
+
+crew = [FaultyWorker(ThreadWorker("w0", store), fail_after_tasks=2),
+        FaultyWorker(ThreadWorker("w1", store), fail_after_tasks=8)]
+try:
+    job().run(worker_list=crew, fleet=FleetPlan())
+except ClusterFailure as e:
+    assert "workers dead" in str(e), e
+else:
+    raise AssertionError("expected ClusterFailure when the whole fleet dies")
+
+# committed partitions are a byte-identical subset of the reference
+want_by_key = {k: (etag, size, parts) for k, etag, size, parts in want}
+got = layout()
+assert len(got) < 16, "a dead fleet cannot have finished the job"
+for k, etag, size, parts in got:
+    assert want_by_key[k] == (etag, size, parts), f"partial output {k} diverged"
+
+# no leaked multipart staging files anywhere under the store root
+stray = [os.path.join(d, f) for d, _, fs in os.walk(root)
+         for f in fs if ".mp" in f]
+assert not stray, f"leaked multipart tmp files: {stray}"
+print("OK", len(got))
+""", timeout=900)
+
+
+def test_elastic_process_fleet_identity_and_kill_recovery():
+    # ProcessWorkers: real subprocesses with their own JAX runtimes,
+    # talking the same Worker protocol over pipes. A clean W=2 run is
+    # byte-identical with per-PROCESS store attribution; a run where p0
+    # dies at its 5th task pop (os._exit, no goodbye) is detected by the
+    # reader/heartbeat path, loses p0's spill tier, re-executes the lost
+    # map lineage, and still lands byte-identical.
+    run_with_devices(ELASTIC_SETUP + """
+from repro.shuffle.procworker import ProcessWorker
+
+def pworker(name, **kw):
+    return ProcessWorker(name, store=store, bucket="sort", plan=plan, **kw)
+
+crew = [pworker("p0"), pworker("p1")]
+try:
+    crep = job().run(worker_list=crew, fleet=FleetPlan())
+finally:
+    for wk in crew:
+        wk.close()
+check_bytes("process W=2")
+assert not crep.failed_workers
+assert sum(crep.per_worker_tasks.values()) == 20
+for name in ("p0", "p1"):
+    assert crep.per_worker_stats[name].get_requests > 0, (
+        "per-process store attribution missing")
+
+crew = [pworker("p0", die_after_tasks=4), pworker("p1")]
+try:
+    crep = job().run(worker_list=crew, fleet=FleetPlan())
+finally:
+    for wk in crew:
+        wk.close()
+check_bytes("process kill")
+assert crep.failed_workers == ["p0"], crep.failed_workers
+assert crep.spill_lost_map_tasks >= 1, crep
+assert crep.recovery_rounds >= 1, crep
+assert crep.reexecuted_map_tasks >= 1, crep
+print("OK", crep.spill_lost_map_tasks, crep.recovery_rounds)
+""", timeout=900)

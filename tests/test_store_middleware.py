@@ -12,7 +12,8 @@ import pytest
 from repro.io.backends import (FilesystemBackend, IntegrityError,
                                MemoryBackend, ObjectNotFound, SlowDown,
                                StoreStats)
-from repro.io.middleware import (FaultProfile, LatencyBandwidthMiddleware,
+from repro.io.middleware import (FaultProfile, KillSwitchMiddleware,
+                                 LatencyBandwidthMiddleware,
                                  MetricsMiddleware, RetryMiddleware,
                                  RetryPolicy, ThrottlingMiddleware,
                                  fault_injected)
@@ -397,3 +398,75 @@ def test_tiered_builder_fault_stack_only_on_durable_tier(tmp_path):
     assert per["ssd"].retries == 0 and per["ssd"].throttled == 0
     assert per["ssd"].put_requests == 4
     assert per["durable"].put_requests == 4 + per["durable"].throttled
+
+
+# ---------------------------------------------------------------------------
+# Kill switch: request-budget kills are pre-commit-deterministic
+# ---------------------------------------------------------------------------
+
+
+def test_kill_switch_refuses_commits_after_trip(backend):
+    dead = KillSwitchMiddleware(
+        backend, exc_factory=lambda: RuntimeError("host dead"))
+    mp = dead.multipart("b", "out/p0", metadata={"reducer": 0})
+    mp.put_part(0, b"aaaa")
+    mp.put_part(1, b"bb")
+    dead.trip()
+    # A commit that BEGINS after the trip can never land: the task will
+    # be re-executed elsewhere, and a late duplicate commit from this
+    # host would race it.
+    with pytest.raises(RuntimeError, match="host dead"):
+        mp.complete()
+    with pytest.raises(ObjectNotFound):
+        backend.head("b", "out/p0")
+    mp.abort()  # cleanup outlives the host — no stray sessions
+
+
+def test_kill_switch_budget_trip_fences_open_sessions(backend):
+    # The request BUDGET (FaultyWorker's fail_after_requests) must give
+    # the same guarantee as an explicit trip(): once the budget request
+    # raises, a commit through an already-open session is refused, so a
+    # "worker died after N requests" schedule can never half-land — the
+    # kill point is strictly before or strictly after the durable commit.
+    view = KillSwitchMiddleware(
+        backend, exc_factory=lambda: RuntimeError("host dead"),
+        fail_after_requests=3)
+    mp = view.multipart("b", "out/p1")
+    mp.put_part(0, b"cccc")          # budget 3 -> 2
+    view.put("b", "scratch/x", b"s")  # 2 -> 1
+    view.get("b", "scratch/x")        # 1 -> 0
+    with pytest.raises(RuntimeError, match="host dead"):
+        view.get("b", "scratch/x")    # trips
+    assert view.tripped
+    with pytest.raises(RuntimeError, match="host dead"):
+        mp.complete()
+    with pytest.raises(ObjectNotFound):
+        backend.head("b", "out/p1")
+
+
+def test_kill_switch_commit_before_trip_is_durable(backend):
+    view = KillSwitchMiddleware(
+        backend, exc_factory=lambda: RuntimeError("host dead"))
+    mp = view.multipart("b", "out/p2")
+    mp.put_part(0, b"dddd")
+    meta = mp.complete()  # commit strictly before the kill: durable
+    view.trip()
+    assert backend.head("b", "out/p2").etag == meta.etag
+    assert backend.get("b", "out/p2") == b"dddd"
+
+
+def test_kill_switch_fences_sessions_opened_above_it(backend):
+    # The gate chains DOWN the middleware stack: a session opened through
+    # an outer metrics layer is still refused when the kill switch
+    # beneath it trips.
+    stats = StoreStats()
+    inner = KillSwitchMiddleware(
+        backend, exc_factory=lambda: RuntimeError("host dead"))
+    outer = MetricsMiddleware(inner, stats=stats)
+    mp = outer.multipart("b", "out/p3")
+    mp.put_part(0, b"eeee")
+    inner.trip()
+    with pytest.raises(RuntimeError, match="host dead"):
+        mp.complete()
+    with pytest.raises(ObjectNotFound):
+        backend.head("b", "out/p3")

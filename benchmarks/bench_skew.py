@@ -1,0 +1,177 @@
+"""Skew-adaptive partitioning: sampled splitters vs the equal split,
+plus the recursive multi-round sort on duplicate-heavy input.
+
+The Indy assumption (uniform keys -> equal key-space ranges balance
+themselves) breaks on skewed data: with the "zipf" gensort variant the
+low octaves carry exponentially more mass, so the equal split funnels
+most records into partition 0. The Daytona-style fallback (ISSUE-9) is
+a sampling pre-pass — evenly spaced ranged GETs over a
+`sample_fraction` of the input, billed and traced like any other
+phase — whose quantiles become the partition boundaries.
+
+Both imbalance rows route the SAME host-regenerated key population
+(zero extra GETs for either — the comparison is at equal GET counts by
+construction); the sampling pre-pass's own ranged GETs are the gated
+`sample_gets` row. On top, `recursive_rounds` runs the full recursive
+driver on the "dup" variant — a hot partition that NO key boundary can
+split (25% of records share one key) and that exceeds the reduce
+memory budget, so only the next-key-bits re-shuffle rounds can sort
+it — and asserts valsort cleanliness.
+
+Rows (name, us, derived):
+
+  skew/imbalance_equal   — max/mean partition bytes, equal key-space
+                           split (derived = the ratio; 1.0 is perfect)
+  skew/imbalance_sampled — same keys, sampled-quantile boundaries
+  skew/balance_gain      — equal/sampled imbalance ratio (gated,
+                           >= 2x is the acceptance bar)
+  skew/sample_gets       — ranged GETs billed to the sampling pre-pass
+                           (gated, deterministic: positions are pure
+                           arithmetic, no RNG)
+  skew/recursive_rounds  — rounds the dup-heavy recursive sort
+                           executed (>= 3: root + the id-split rounds),
+                           us = end-to-end wall time
+
+Standalone: PYTHONPATH=src python benchmarks/bench_skew.py [--smoke|--full]
+`run()` (the benchmarks/run.py entry) always uses smoke scale.
+"""
+from __future__ import annotations
+
+import time
+
+#: CI gate declarations (tools/bench_diff.py). sample_gets is a pure
+#: function of the input layout + knobs; balance_gain is data-derived
+#: but deterministic — the wide band tolerates legitimate sampling
+#: changes while catching the splitters collapsing back to equal-split
+#: behaviour.
+GATES = {
+    "skew/balance_gain": {"direction": "higher", "tolerance": 0.25},
+    "skew/sample_gets": {"direction": "lower", "tolerance": 0.02},
+}
+
+
+def _imbalance(counts) -> float:
+    """max/mean partition load (records and bytes give the same ratio —
+    every record is plan.record_bytes wide)."""
+    return float(counts.max() / counts.mean())
+
+
+def run(full: bool = False):
+    import dataclasses
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.core.compat import make_mesh
+    from repro.core.external_sort import ExternalSortPlan
+    from repro.data import gensort, valsort
+    from repro.io.object_store import ObjectStore
+    from repro.obs.events import Tracer
+    from repro.shuffle.job import sample_boundaries
+    from repro.shuffle.partition import RangePartitioner
+    from repro.shuffle.recursive import recursive_sort
+
+    w = len(jax.devices())
+    mesh = make_mesh((w,), ("w",))
+    parts = 32 if full else 16
+    n = 1 << (17 if full else 15)
+    pw = 2
+    plan = ExternalSortPlan(
+        records_per_wave=1 << 13,
+        num_rounds=2,
+        reducers_per_worker=max(2, parts // w),
+        payload_words=pw,
+        impl="ref",
+        input_records_per_partition=1 << 12,
+        output_part_records=1 << 11,
+        store_chunk_bytes=16 << 10,
+        parallel_reducers=2,
+        reduce_memory_budget_bytes=64 << 10,
+        # MAP-side all-to-all slack for the 25% duplicate mass in the
+        # recursive case — no boundary choice can move equal keys apart
+        # in one round; the REDUCE-side ceiling is what the recursion
+        # removes (see tests/test_shuffle.py for the same fixture).
+        capacity_factor=4.0,
+        sample_fraction=1 / 16,
+        max_rounds=3,
+    )
+
+    store = ObjectStore(tempfile.mkdtemp(prefix="bench-skew-"))
+    store.create_bucket("bench")
+
+    # --- splitter quality on the "zipf" variant ------------------------
+    in_ck, _ = gensort.write_to_store(
+        store, "bench", plan.input_prefix, n,
+        plan.input_records_per_partition, pw, skew="zipf", skew_seed=7)
+    samp = sample_boundaries(
+        store, "bench", input_prefix=plan.input_prefix, payload_words=pw,
+        sample_fraction=plan.sample_fraction, parts=parts)
+    assert samp.records_total == n, samp
+
+    # The full key population, regenerated host-side (keys are a pure
+    # function of the record id): both routings see identical data and
+    # spend identical GETs — zero — so the rows isolate splitter
+    # quality, not I/O strategy.
+    keys = gensort.skewed_keys(np.arange(n, dtype=np.uint32), "zipf", 7)
+    rows = []
+    imb = {}
+    for name, part in (
+            ("equal", RangePartitioner(parts)),
+            ("sampled", RangePartitioner(parts, boundaries=samp.boundaries))):
+        t0 = time.perf_counter()
+        dest = part.partition_of(keys)
+        us = (time.perf_counter() - t0) * 1e6
+        imb[name] = _imbalance(np.bincount(dest, minlength=parts))
+        rows.append((f"skew/imbalance_{name}", us, imb[name]))
+
+    gain = imb["equal"] / imb["sampled"]
+    assert gain >= 2.0, (
+        f"sampled boundaries balanced only {gain:.2f}x better than the "
+        f"equal split (bar: 2x; equal={imb['equal']:.2f}, "
+        f"sampled={imb['sampled']:.2f})")
+    rows.append(("skew/balance_gain", 0.0, gain))
+    rows.append(("skew/sample_gets", samp.seconds * 1e6,
+                 float(samp.get_requests)))
+
+    # --- recursive multi-round sort on the "dup" variant ---------------
+    in_ck, _ = gensort.write_to_store(
+        store, "bench", plan.input_prefix, n,
+        plan.input_records_per_partition, pw, skew="dup", skew_seed=3)
+    # The hot partition alone exceeds the reduce budget: recursion, not
+    # headroom, is what sorts this.
+    assert (n // 4) * plan.record_bytes > plan.reduce_memory_budget_bytes
+    tracer = Tracer(job="bench-skew")
+    t0 = time.perf_counter()
+    rep = recursive_sort(store, "bench", mesh=mesh, axis_names="w",
+                         plan=plan, tracer=tracer)
+    sort_us = (time.perf_counter() - t0) * 1e6
+    val = valsort.validate_from_store(store, "bench", plan.output_prefix,
+                                      in_ck)
+    assert val.ok and val.total_records == n, val
+    assert rep.num_rounds >= 3 and rep.recursed, rep.rounds
+    gauges = tracer.registry.snapshot()["gauges"]
+    assert "phase.seconds{phase=sample}" in gauges, sorted(gauges)
+    rows.append(("skew/recursive_rounds", sort_us, float(rep.num_rounds)))
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="2^15 records, 16 partitions (the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="2^17 records, 32 partitions")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(full=args.full):
+        print(f"{name},{us:.3f},{derived:.6g}")
+    print(f"# total {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

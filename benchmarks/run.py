@@ -10,6 +10,8 @@
   bench_device_merge    — §2.4–2.5 device-resident merge sink + pipelined
                           map: critical-path merge rate vs numpy
   bench_cluster_scaling — §2.6 cluster executor: worker count x failures
+  bench_skew            — skew-adaptive partitioning: sampled splitters
+                          vs equal split, recursive dup-heavy sort
   bench_elastic         — §2.6 elastic fleet: process parallelism,
                           25%-kill recovery, straggler speculation
   bench_groupby         — shuffle-as-a-library generality: group-by
@@ -57,6 +59,7 @@ BENCHES = [
     ("reduce_scaling", "benchmarks.bench_reduce_scaling"),
     ("device_merge", "benchmarks.bench_device_merge"),
     ("cluster_scaling", "benchmarks.bench_cluster_scaling"),
+    ("skew", "benchmarks.bench_skew"),
     ("elastic", "benchmarks.bench_elastic"),
     ("groupby", "benchmarks.bench_groupby"),
     ("roofline", "benchmarks.roofline"),

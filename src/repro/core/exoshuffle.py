@@ -51,12 +51,17 @@ class ShuffleConfig:
     capacity_factor: float = 1.5  # block slack over the uniform-key mean
     num_rounds: int = 1  # merge-controller rounds (streaming)
     impl: str = "pallas"  # "pallas" | "ref"
+    # R-1 explicit reducer boundaries (sampled quantiles); None = equal
+    # split. A tuple, not an array, so the frozen config stays hashable
+    # for jit closure; KeySpace converts back to uint32.
+    boundaries: tuple[int, ...] | None = None
 
     @property
     def keyspace(self) -> KeySpace:
         return KeySpace(
             num_reducers=self.num_workers * self.reducers_per_worker,
             num_workers=self.num_workers,
+            boundaries=self.boundaries,
         )
 
     def block_capacity(self, records_per_round: int) -> int:

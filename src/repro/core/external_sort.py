@@ -184,6 +184,14 @@ class ExternalSortPlan:
     part_upload_fanout: int = 2  # out-of-order part uploads per partition
     map_pipeline: bool = True  # overlap decode/device-sort/encode across waves
     reduce_merge_impl: str = "numpy"  # emit-window merge ("numpy" | "device")
+    # Skew-adaptive knobs, consumed by shuffle/recursive.recursive_sort:
+    # sample_fraction > 0 runs a sampling pre-pass (ranged GETs over that
+    # fraction of input records, traced/billed as phase "sample") whose
+    # quantiles become the partition boundaries; max_rounds > 1 allows
+    # partitions whose merged size exceeds reduce_memory_budget_bytes to
+    # be re-shuffled by the next key bits as composed child ShuffleJobs.
+    sample_fraction: float = 0.0  # fraction of input records to sample
+    max_rounds: int = 1  # recursive shuffle depth (1 = single pass)
 
     @property
     def record_bytes(self) -> int:
@@ -210,6 +218,16 @@ class ExternalSortPlan:
                 "reduce_merge_impl", self.reduce_merge_impl,
                 'must be "numpy" (host argsort merge) or "device" '
                 "(kernels/kway_merge tournament, double-buffered)")
+        require(0.0 <= self.sample_fraction <= 1.0, "sample_fraction",
+                self.sample_fraction,
+                "must be a fraction of input records in [0, 1]")
+        require(self.max_rounds >= 1, "max_rounds", self.max_rounds,
+                "must allow >= 1 shuffle round")
+        require(self.max_rounds == 1 or self.reduce_memory_budget_bytes > 0,
+                "max_rounds", self.max_rounds,
+                "recursive rounds need reduce_memory_budget_bytes > 0 — "
+                "the budget is the oversize criterion that triggers a "
+                "re-shuffle")
 
 
 def _spill_key(plan: ExternalSortPlan, wave: int, worker: int) -> str:
@@ -292,7 +310,8 @@ class WaveSorter:
     """
 
     def __init__(self, plan: ExternalSortPlan, mesh: jax.sharding.Mesh,
-                 axis_names: Sequence[str] | str):
+                 axis_names: Sequence[str] | str,
+                 boundaries: Sequence[int] | np.ndarray | None = None):
         axis = tuple([axis_names] if isinstance(axis_names, str)
                      else axis_names)
         self.plan = plan
@@ -300,12 +319,18 @@ class WaveSorter:
         self.r1 = plan.reducers_per_worker
         self.pw = plan.payload_words
         _validate_plan(plan, self.w)
+        # Explicit (sampled) reducer boundaries replace the equal split in
+        # BOTH device routing (worker boundaries = every R1-th entry, via
+        # the keyspace) and the host-side reducer_offsets searchsorted
+        # below, so spill offsets stay bit-consistent with routing.
         self.cfg = ShuffleConfig(
             num_workers=self.w,
             reducers_per_worker=self.r1,
             capacity_factor=plan.capacity_factor,
             num_rounds=plan.num_rounds,
             impl=plan.impl,
+            boundaries=(None if boundaries is None
+                        else tuple(int(b) for b in np.asarray(boundaries))),
         )
         self._sort = jax.jit(
             lambda k, i: streaming_sort(

@@ -30,15 +30,38 @@ KEY_SPACE = 1 << KEY_BITS
 
 @dataclasses.dataclass(frozen=True)
 class KeySpace:
-    """The paper's (R, W) range partition of the sort key space."""
+    """The paper's (R, W) range partition of the sort key space.
+
+    `boundaries`, when given, replaces the equal split with R-1 explicit
+    ascending uint32 reducer boundaries (the Daytona-style sampled
+    quantiles from `sampled_boundaries`): worker boundaries become every
+    R1-th reducer boundary and key routing falls back from the
+    power-of-two shift form to a searchsorted over the same values, so
+    the device shuffle routes by the measured key distribution while
+    staying bit-consistent with the host-side RangePartitioner.
+    """
 
     num_reducers: int  # R
     num_workers: int  # W
+    boundaries: tuple[int, ...] | None = None  # R-1 explicit reducer bounds
 
     def __post_init__(self):
         assert self.num_reducers % self.num_workers == 0, (
             "R must be a multiple of W (paper: R1 = R/W reducer ranges per worker)"
         )
+        if self.boundaries is not None:
+            # ValueError, not assert: sampled boundaries are data-derived
+            # and must be rejected under python -O too.
+            b = self.boundaries
+            if len(b) != self.num_reducers - 1:
+                raise ValueError(
+                    f"boundaries={len(b)} values: must supply "
+                    f"num_reducers-1 = {self.num_reducers - 1} internal "
+                    "boundaries")
+            if any(b[i + 1] < b[i] for i in range(len(b) - 1)):
+                raise ValueError(
+                    f"boundaries={b!r}: must be ascending "
+                    "(non-overlapping ranges)")
 
     @property
     def reducers_per_worker(self) -> int:  # R1
@@ -46,15 +69,24 @@ class KeySpace:
 
     def reducer_boundaries(self) -> jax.Array:
         """(R-1,) uint32 internal boundaries of the reducer ranges."""
+        if self.boundaries is not None:
+            return jnp.asarray(np.asarray(self.boundaries, np.uint32))
         return _equal_boundaries(self.num_reducers)
 
     def worker_boundaries(self) -> jax.Array:
         """(W-1,) uint32 internal boundaries of the worker ranges."""
+        if self.boundaries is not None:
+            # Worker w owns reducer ranges [w*R1, (w+1)*R1): its upper
+            # boundary is reducer boundary (w+1)*R1 - 1, i.e. every
+            # R1-th entry of the full reducer boundary vector.
+            full = np.asarray(self.boundaries, np.uint32)
+            return jnp.asarray(full[self.reducers_per_worker - 1
+                                    ::self.reducers_per_worker])
         return _equal_boundaries(self.num_workers)
 
     def local_reducer_boundaries(self) -> jax.Array:
         """(W, R1-1) uint32: per-worker internal boundaries of its R1 ranges."""
-        r = _equal_boundaries(self.num_reducers)  # (R-1,)
+        r = self.reducer_boundaries()  # (R-1,)
         # Worker w's internal boundaries are reducer boundaries w*R1 .. w*R1+R1-2.
         full = np.asarray(r).reshape(-1)
         out = np.stack(
@@ -75,7 +107,7 @@ class KeySpace:
         w = self.num_workers
         if w == 1:
             return jnp.zeros(keys.shape, jnp.int32)
-        if w & (w - 1) == 0:
+        if self.boundaries is None and w & (w - 1) == 0:
             # key >> (32 - log2(W)): pure-uint32 form of (key*W) >> 32.
             # (The multiply form needs uint64, which silently truncates
             # to uint32 under JAX's default x64-disabled mode.)
@@ -89,7 +121,7 @@ class KeySpace:
         r = self.num_reducers
         if r == 1:
             return jnp.zeros(keys.shape, jnp.int32)
-        if r & (r - 1) == 0:
+        if self.boundaries is None and r & (r - 1) == 0:
             shift = KEY_BITS - (r.bit_length() - 1)
             return (keys >> jnp.uint32(shift)).astype(jnp.int32)
         return jnp.searchsorted(
@@ -108,9 +140,16 @@ def sampled_boundaries(sample_keys: jax.Array, parts: int) -> jax.Array:
     """Daytona-style splitter estimation: quantiles of a key sample.
 
     Returns (parts-1,) uint32 internal boundaries that approximately balance
-    `parts` ranges for the sampled distribution.
+    `parts` ranges for the sampled distribution. A one-key sample is legal
+    (all boundaries collapse to that key); an empty sample is not.
     """
     srt = jnp.sort(sample_keys.reshape(-1))
     n = srt.shape[0]
+    if n == 0:
+        raise ValueError(
+            f"sample_keys={n} keys: need at least one sampled key to "
+            "estimate splitters")
+    if parts < 1:
+        raise ValueError(f"parts={parts}: must be >= 1")
     idx = (jnp.arange(1, parts) * n) // parts
     return srt[idx]

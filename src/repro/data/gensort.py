@@ -40,6 +40,66 @@ def gen_keys(start: int, n: int) -> tuple[jax.Array, jax.Array]:
     return splitmix32(ids), ids
 
 
+#: Deterministic skewed key variants (the Daytona-style test fixtures —
+#: gensort's -s "skewed keyspace" flag, adapted to the uint32 key):
+#:   "hot"  — zipf-ish hot range: 7/8 of keys squeezed into the low
+#:            2^24 span (key = u >> 8), the rest uniform.
+#:   "zipf" — log-uniform magnitudes: key = u >> (h % 24), every
+#:            octave [2^k, 2^{k+1}) carries ~equal mass, so low ranges
+#:            are exponentially denser (pure-integer construction — no
+#:            float pow, bit-identical everywhere).
+#:   "clustered" — a handful of hot high-byte prefixes: keys land under
+#:            4 seed-derived leading bytes (uniform low 24 bits), the
+#:            "everyone's data starts with the same tenant id" shape.
+#:   "dup"  — duplicate-heavy: every 4th record shares ONE hot key
+#:            (seed-derived); no key-range split can separate them, so
+#:            only a recursive round (re-shuffle by the next key bits,
+#:            i.e. the id) can break the partition up.
+SKEW_VARIANTS = ("hot", "zipf", "clustered", "dup")
+
+
+def _splitmix32_np(x: np.ndarray) -> np.ndarray:
+    # errstate: uint32 wraparound is the hash working as intended, but
+    # numpy warns on overflow for 0-d (scalar) inputs.
+    with np.errstate(over="ignore"):
+        x = np.asarray(x, dtype=np.uint32)
+        x = (x ^ (x >> np.uint32(16))) * np.uint32(0x85EBCA6B)
+        x = (x ^ (x >> np.uint32(13))) * np.uint32(0xC2B2AE35)
+        return x ^ (x >> np.uint32(16))
+
+
+def skewed_keys(ids: np.ndarray, skew: str, seed: int = 0) -> np.ndarray:
+    """Deterministic skewed key for each record id (host-side numpy).
+
+    Same contract as `gen_keys`: the key is a pure function of
+    (id, skew, seed), so any slice of the dataset can be regenerated
+    independently and the checksum/valsort gates work unchanged — ids
+    and payloads are untouched, only the key distribution changes.
+    """
+    if skew not in SKEW_VARIANTS:
+        raise ValueError(
+            f"skew={skew!r}: must be one of {SKEW_VARIANTS} (or None "
+            "for the uniform Indy keys)")
+    ids = np.asarray(ids, dtype=np.uint32)
+    mix = _splitmix32_np(np.uint32(seed) ^ np.uint32(0xDECAFBAD))
+    u = _splitmix32_np(ids ^ mix)
+    if skew == "hot":
+        return np.where(u % np.uint32(8) < np.uint32(7),
+                        u >> np.uint32(8), u)
+    if skew == "zipf":
+        h = _splitmix32_np(u ^ np.uint32(0x5BD1E995))
+        return u >> (h % np.uint32(24)).astype(np.uint32)
+    if skew == "clustered":
+        prefs = _splitmix32_np(
+            np.uint32(mix) + np.arange(4, dtype=np.uint32)) >> np.uint32(24)
+        sel = prefs[(u % np.uint32(4)).astype(np.int64)]
+        return (sel.astype(np.uint32) << np.uint32(24)) | (
+            _splitmix32_np(u) >> np.uint32(8))
+    # "dup": one seed-derived hot key on a fixed id stride.
+    hot = _splitmix32_np(mix ^ np.uint32(0x27220A95))
+    return np.where(ids % np.uint32(4) == 0, hot, u)
+
+
 def gen_payload(ids: jax.Array, words: int = PAYLOAD_WORDS) -> jax.Array:
     """(n, words) uint32 payload rows, derivable from ids alone."""
     base = ids.astype(jnp.uint32)[:, None] * jnp.uint32(words)
@@ -85,6 +145,8 @@ def write_to_store(
     payload_words: int = PAYLOAD_WORDS,
     *,
     start_id: int = 0,
+    skew: str | None = None,
+    skew_seed: int = 0,
 ) -> tuple[tuple[int, int], int]:
     """Generate the benchmark input directly into an object store.
 
@@ -93,10 +155,17 @@ def write_to_store(
     the out-of-core driver (core/external_sort.py) can stream them without
     the dataset ever existing in one memory. Returns the aggregate input
     checksum (the `gensort -c` sum) and the number of partitions written.
+
+    `skew` selects a deterministic skewed key variant (SKEW_VARIANTS,
+    seeded by `skew_seed`) instead of the uniform Indy keys — ids and
+    payloads are unchanged, so the checksum/valsort gates apply as-is.
     """
     from repro.io import records as rec
 
     assert total_records % records_per_partition == 0
+    if skew is not None and skew not in SKEW_VARIANTS:
+        raise ValueError(
+            f"skew={skew!r}: must be one of {SKEW_VARIANTS} or None")
     num_parts = total_records // records_per_partition
     # Overwrite semantics: the prefix holds exactly this dataset afterwards
     # (stale partitions from a previous, larger run would otherwise be swept
@@ -107,6 +176,9 @@ def write_to_store(
     for p in range(num_parts):
         keys, ids = gen_keys(start_id + p * records_per_partition,
                              records_per_partition)
+        if skew is not None:
+            keys = jnp.asarray(
+                skewed_keys(np.asarray(ids), skew, skew_seed))
         payload = gen_payload(ids, payload_words) if payload_words else None
         part_ck = checksum(keys, ids, payload)
         ck = combine_checksums(ck, (int(part_ck[0]), int(part_ck[1])))

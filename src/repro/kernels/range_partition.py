@@ -1,12 +1,23 @@
 """Pallas TPU kernel: range-partition offsets of sorted keys.
 
 TPU adaptation of the paper's range partitioner (§2.2): the key space
-[0, 2^64) is split into R equal ranges and every record is routed to the
+[0, 2^64) is split into R ranges and every record is routed to the
 range owner. On TPU the records are already sorted when partitioning happens
 (the map task sorts first, §2.3), so partitioning reduces to finding, for
 each boundary b_j, the offset of the first key >= b_j — i.e. a vectorized
 searchsorted. The slice [offsets[j-1], offsets[j]) of the sorted block is
 then exactly the paper's "slice sent to worker j".
+
+The kernel is boundary-generic: it never assumes the equal Indy split.
+Sampled quantile boundaries (core/keyspace.sampled_boundaries — the
+Daytona-style skew fallback, wired end-to-end by shuffle/recursive) flow
+through unchanged, including duplicate boundary values, which simply
+yield empty slices. The routing contract — offsets[j] = #{k < b_j}
+(searchsorted side="left"), so slice j holds exactly the keys with
+b_{j-1} <= k < b_j, the same membership the host-side
+RangePartitioner.partition_of computes with side="right" — is pinned
+bit-for-bit against `searchsorted_reference` below by
+tests/test_shuffle.py's property tests.
 
 Instead of a branchy binary search (log n dependent steps), the kernel
 computes offsets[j] = sum_i [key_i < b_j] by streaming the sorted block
@@ -25,6 +36,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 KEY_TILE = 2048  # keys compared per inner step; R x KEY_TILE bools in flight
+
+
+def searchsorted_reference(sorted_keys, boundaries):
+    """Host oracle for the kernel's contract: (num_blocks, R) int32 with
+    out[i, j] = #{k in row i : k < boundaries[j]} — numpy searchsorted
+    side="left" per row. The property tests pin the Pallas kernel to this
+    bit-for-bit on adversarial boundaries (duplicates, 0, boundary-equal
+    keys, all-equal rows)."""
+    import numpy as np
+
+    sk = np.asarray(sorted_keys, dtype=np.uint32)
+    bs = np.asarray(boundaries, dtype=np.uint32)
+    return np.stack([
+        np.searchsorted(row, bs, side="left") for row in sk
+    ]).astype(np.int32)
 
 
 def _partition_kernel(keys_ref, bounds_ref, out_ref, *, key_tile: int):

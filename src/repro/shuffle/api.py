@@ -305,6 +305,19 @@ class ReduceOp(abc.ABC):
     the op owns the data: which byte slices of which run objects feed
     partition r (`sources`), where the output goes (`output_key`), and
     how sorted fragments become bytes (`open` -> PartitionReducer).
+
+    Optional hooks (duck-typed, for ops that bypass the k-way merge —
+    shuffle/recursive's redirected partitions):
+
+      sequential_partition(r) -> bool — True makes the scheduler drain
+          partition r's run cursors ONE AT A TIME (source order, runs=1
+          budget grant) instead of merging them; the sink must accept
+          unmerged fragments (a concatenator, not a merger). This is
+          what removes the reduce fan-in ceiling for partitions headed
+          into another shuffle round.
+      feasibility_runs(num_tasks) -> int — the worst-case concurrent
+          run fan-in for the session's budget preflight
+          (runtime.reduce_chunking); defaults to num_tasks when absent.
     """
 
     payload_words: int = 0  # decode width of the spilled run records

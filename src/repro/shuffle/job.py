@@ -23,10 +23,14 @@ is the paper's point.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import threading
 import time
-from typing import Sequence
+from typing import Callable, Sequence
 
+import numpy as np
+
+from repro.io import records as rec
 from repro.io.backends import StoreBackend, StoreStats
 from repro.obs.context import use_context
 from repro.obs.events import Tracer
@@ -36,6 +40,113 @@ from repro.shuffle import runtime as rt
 from repro.shuffle.api import (ClusterShuffleReport, MapOp, Partitioner,
                                ReduceOp, ShuffleReport, require,
                                validate_dataflow_plan)
+from repro.shuffle.partition import quantile_boundaries
+
+
+@dataclasses.dataclass
+class KeySample:
+    """Result of the sampling pre-pass (`sample_boundaries`): the
+    splitter quantiles plus enough of the sampled distribution to
+    predict per-partition sizes (the recursive driver's oversize
+    criterion)."""
+
+    boundaries: np.ndarray  # (parts-1,) uint32 routed-domain quantiles
+    sample: np.ndarray  # sorted routed sample values (uint32)
+    records_total: int  # records under the sampled prefix
+    records_sampled: int
+    get_requests: int  # ranged GETs the pre-pass issued (billed)
+    seconds: float
+
+    def partition_records(self) -> np.ndarray:
+        """Estimated records per partition under `boundaries`: the
+        sample's per-partition counts scaled to the full input (ceil —
+        an overestimate errs toward re-shuffling, never toward an
+        oversized merge)."""
+        dest = np.searchsorted(self.boundaries, self.sample, side="right")
+        counts = np.bincount(dest, minlength=self.boundaries.size + 1)
+        scale = self.records_total / max(self.sample.size, 1)
+        return np.ceil(counts * scale).astype(np.int64)
+
+
+def sample_boundaries(store: StoreBackend, bucket: str, *, input_prefix: str,
+                      payload_words: int, sample_fraction: float, parts: int,
+                      tracer: Tracer | None = None,
+                      route: Callable[[np.ndarray, np.ndarray], np.ndarray]
+                      | None = None,
+                      block_records: int = 256) -> KeySample:
+    """The sampling pre-pass: Daytona-style splitter estimation over the
+    real store, billed and traced like any other phase.
+
+    Reads ~`sample_fraction` of every input object's records through
+    evenly spaced ranged GETs (contiguous blocks of up to
+    `block_records`, positions pure arithmetic — no RNG, so the
+    resulting boundaries are deterministic for a given input + knobs)
+    and returns the `parts`-way quantile splitters of the sampled keys.
+    Runs under TraceContext phase="sample": a tracing store stack
+    attributes the GETs/bytes to the sample phase, each fetch records a
+    `sample.fetch` span, and a `phase.seconds{phase=sample}` gauge lands
+    next to the map/reduce phase gauges.
+
+    `route` optionally maps (keys, ids) -> routed uint32 values before
+    the quantiles are taken — the recursive driver passes the
+    next-key-bits routing of a sub-range so child boundaries live in the
+    child's routed domain.
+    """
+    require(0.0 < sample_fraction <= 1.0, "sample_fraction", sample_fraction,
+            "the sampling pre-pass needs a fraction in (0, 1]")
+    require(parts >= 1, "parts", parts, "must split into >= 1 partition")
+    require(block_records >= 1, "block_records", block_records,
+            "must fetch >= 1 record per ranged GET")
+    rb = rec.record_bytes(payload_words)
+    tracer = tracer if tracer is not None else Tracer(job="shuffle")
+    ctx = tracer.root.with_phase("sample").with_worker("host")
+    t_start = time.perf_counter()
+    gets = 0
+    total = 0
+    sampled_k: list[np.ndarray] = []
+    sampled_i: list[np.ndarray] = []
+    with use_context(ctx):
+        inputs = store.list_objects(bucket, input_prefix)
+        require(bool(inputs), "input_prefix", input_prefix,
+                "no input objects to sample")
+        for meta in inputs:
+            n = (meta.size - rec.HEADER_BYTES) // rb
+            total += n
+            if n == 0:
+                continue
+            m = max(1, int(round(n * sample_fraction)))
+            nblocks = -(-m // block_records)
+            base, extra = divmod(m, nblocks)
+            for b in range(nblocks):
+                take = base + (1 if b < extra else 0)
+                start_rec = min((b * n) // nblocks, n - take)
+                off, length = rec.body_range(start_rec, take, payload_words)
+                t0 = time.perf_counter()
+                body = store.get_range(bucket, meta.key, off, length)
+                gets += 1
+                k, i, _ = rec.decode_body(body, payload_words)
+                tracer.event("sample.fetch", t0, ctx=ctx, key=meta.key,
+                             records=take, nbytes=length)
+                sampled_k.append(k)
+                sampled_i.append(i)
+    keys = (np.concatenate(sampled_k) if sampled_k
+            else np.empty((0,), np.uint32))
+    ids = (np.concatenate(sampled_i) if sampled_i
+           else np.empty((0,), np.uint32))
+    require(keys.size >= 1, "input_prefix", input_prefix,
+            "sampled zero records — every input object is empty")
+    routed = keys if route is None else route(keys, ids)
+    routed = np.sort(np.asarray(routed, np.uint32).reshape(-1))
+    bounds = quantile_boundaries(routed, parts)
+    seconds = time.perf_counter() - t_start
+    tracer.event("sample.boundaries", t_start, ctx=ctx, parts=parts,
+                 records_sampled=int(keys.size), records_total=int(total),
+                 get_requests=gets)
+    tracer.registry.gauge("phase.seconds", seconds, phase="sample")
+    return KeySample(boundaries=bounds, sample=routed,
+                     records_total=int(total),
+                     records_sampled=int(keys.size), get_requests=gets,
+                     seconds=seconds)
 
 
 class ShuffleSession:
@@ -67,9 +178,14 @@ class ShuffleSession:
         self.tracer = (job.tracer if job.tracer is not None
                        else Tracer(job="shuffle"))
         # Budget feasibility is pure plan validation (each partition
-        # streams at most one run per map task).
-        _, self.chunk_bytes = rt.reduce_chunking(
-            plan, self.num_tasks, self.slots)
+        # streams at most one run per map task). A ReduceOp that drains
+        # every partition sequentially (shuffle/recursive's redirected
+        # partitions pull one run at a time) reports its smaller
+        # worst-case fan-in through the optional feasibility_runs hook.
+        feas = getattr(job.reduce_op, "feasibility_runs", None)
+        feas_runs = (max(1, int(feas(self.num_tasks))) if callable(feas)
+                     else self.num_tasks)
+        _, self.chunk_bytes = rt.reduce_chunking(plan, feas_runs, self.slots)
         self.governor = rt.AdaptiveBudgetGovernor(
             budget=plan.reduce_memory_budget_bytes,
             chunk_cap=plan.merge_chunk_bytes,
@@ -334,4 +450,4 @@ class ShuffleJob:
         return session.run_cluster(crew)
 
 
-__all__ = ["ShuffleJob", "ShuffleSession"]
+__all__ = ["KeySample", "ShuffleJob", "ShuffleSession", "sample_boundaries"]

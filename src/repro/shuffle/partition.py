@@ -33,6 +33,21 @@ def equal_boundaries(parts: int) -> np.ndarray:
     return ((js * np.uint64(KEY_SPACE)) // np.uint64(parts)).astype(np.uint32)
 
 
+def quantile_boundaries(sample: np.ndarray, parts: int) -> np.ndarray:
+    """(parts-1,) uint32 internal boundaries from a routed-key sample —
+    the host-side twin of core/keyspace.sampled_boundaries, bit-for-bit
+    (sort, then take srt[(j * n) // parts]). A one-value sample is legal
+    (all boundaries collapse); an empty sample is not.
+    """
+    srt = np.sort(np.asarray(sample, dtype=np.uint32).reshape(-1))
+    n = srt.shape[0]
+    require(n >= 1, "sample", n,
+            "need at least one sampled key to estimate splitters")
+    require(parts >= 1, "parts", parts, "must be >= 1")
+    idx = (np.arange(1, parts, dtype=np.int64) * n) // parts
+    return srt[idx]
+
+
 def _splitmix32(x: np.ndarray) -> np.ndarray:
     """The gensort avalanche hash (data/gensort.splitmix32), host-side."""
     x = np.asarray(x, dtype=np.uint32)
@@ -86,4 +101,5 @@ class HashPartitioner(Partitioner):
         return _splitmix32(keys)
 
 
-__all__ = ["HashPartitioner", "RangePartitioner", "equal_boundaries"]
+__all__ = ["HashPartitioner", "RangePartitioner", "equal_boundaries",
+           "quantile_boundaries"]

@@ -730,6 +730,15 @@ class ReduceScheduler:
         slices, n_total = op.sources(r)
         registered = bool(slices)
         chunk_records = 0
+        # Optional ReduceOp extension (shuffle/recursive's redirected
+        # partitions): a sequential partition's sink concatenates runs in
+        # source order instead of merging them, so its cursors drain ONE
+        # AT A TIME — the budget grant covers a single run's chunk no
+        # matter how many map tasks spilled, which is what removes the
+        # reduce fan-in ceiling for partitions headed into another
+        # shuffle round.
+        seq_fn = getattr(op, "sequential_partition", None)
+        sequential = bool(seq_fn(r)) if callable(seq_fn) else False
         # Grant/peak accounting keys by ATTEMPT, not partition: under
         # speculation two attempts of one partition can merge at once,
         # and each must hold (and release) its own budget grant for the
@@ -737,7 +746,8 @@ class ReduceScheduler:
         akey = (r, next(_ATTEMPT_SEQ))
         if registered:
             chunk = governor.register(
-                akey, len(slices), abort=shared.control.cancel.is_set)
+                akey, 1 if sequential else len(slices),
+                abort=shared.control.cancel.is_set)
             if chunk is None:
                 raise SiblingFailed()
             chunk_records = chunk // rb
@@ -785,6 +795,40 @@ class ReduceScheduler:
             first_part = 1 if sink.deferred_part0 else 0
             next_part = first_part
             outbuf = bytearray(sink.begin())
+            if sequential:
+                # Sequential drain: one cursor at a time, run slices
+                # forwarded to the sink in source order (deterministic —
+                # the same bytes at any parallelism or worker count).
+                for ci, c in enumerate(cursors):
+                    while True:
+                        if shared.control.cancel.is_set():
+                            raise SiblingFailed()
+                        if (self.gate_poll and self.commit_gate is not None
+                                and not self.commit_gate(r)):
+                            raise AttemptLost()
+                        if registered:
+                            grown = governor.grow(akey) // rb
+                            if grown != chunk_records:
+                                chunk_records = grown
+                                c.set_chunk(grown)
+                        if c.k64.size == 0 and c.has_more_remote:
+                            t = time.perf_counter()
+                            c.refill()
+                            timeline.add("reduce.fetch", t, worker=tag)
+                        shared.peak.update(akey, c.buffered_bytes)
+                        t = time.perf_counter()
+                        frag = c.take_upto(None)
+                        done = ci == len(cursors) - 1 and c.exhausted
+                        body = sink.consume([frag], final=done)
+                        if body:
+                            outbuf += body
+                        timeline.add("reduce.merge", t, worker=tag)
+                        while len(outbuf) >= part_bytes:
+                            submit_part(bytes(outbuf[:part_bytes]))
+                            del outbuf[:part_bytes]
+                        if c.exhausted:
+                            break
+                cursors = []
             while cursors:
                 if shared.control.cancel.is_set():
                     raise SiblingFailed()

@@ -37,11 +37,12 @@ class SortMapOp(MapOp):
     the device mesh, spill one range-partitioned run per mesh worker
     (with per-reducer offsets in the spill metadata)."""
 
-    def __init__(self, plan, mesh, axis_names):
+    def __init__(self, plan, mesh, axis_names, boundaries=None):
         from repro.core import external_sort as xs
 
         self.plan = plan
-        self.sorter = xs.WaveSorter(plan, mesh, axis_names)
+        self.sorter = xs.WaveSorter(plan, mesh, axis_names,
+                                    boundaries=boundaries)
         self.num_mesh_workers = self.sorter.w
         self.spill_objects_per_task = self.sorter.w
         self.spill_offsets: dict[tuple[int, int], np.ndarray] = {}
@@ -249,20 +250,25 @@ class DeviceMergeReduceOp(MergeReduceOp):
 
 
 def sort_shuffle_job(store: StoreBackend, bucket: str, *, mesh, axis_names,
-                     plan, tracer=None) -> ShuffleJob:
+                     plan, tracer=None, boundaries=None) -> ShuffleJob:
     """Build the CloudSort ShuffleJob: SortMapOp + MergeReduceOp (or
     DeviceMergeReduceOp, per plan.reduce_merge_impl) over an
     order-preserving range partitioner. `plan` is a
     core/external_sort.ExternalSortPlan; run with
     `job.run(workers=N[, cluster=ClusterPlan(...)])`. `tracer` is an
     optional obs/events.Tracer the run records into (share it with the
-    store stack to get request-level child spans)."""
-    map_op = SortMapOp(plan, mesh, axis_names)
+    store stack to get request-level child spans). `boundaries` replaces
+    the equal key split with W*R1-1 explicit reducer boundaries (the
+    sampling pre-pass quantiles — shuffle/job.sample_boundaries); the
+    SAME values feed both the host RangePartitioner and the device
+    keyspace routing so the two stay bit-consistent."""
+    map_op = SortMapOp(plan, mesh, axis_names, boundaries=boundaries)
     if getattr(plan, "reduce_merge_impl", "numpy") == "device":
         reduce_op: MergeReduceOp = DeviceMergeReduceOp(plan, map_op)
     else:
         reduce_op = MergeReduceOp(plan, map_op)
-    partitioner = RangePartitioner(map_op.sorter.w * map_op.sorter.r1)
+    partitioner = RangePartitioner(map_op.sorter.w * map_op.sorter.r1,
+                                   boundaries=boundaries)
     return ShuffleJob(store, bucket, plan=plan, map_op=map_op,
                       reduce_op=reduce_op, partitioner=partitioner,
                       tracer=tracer)

@@ -275,8 +275,59 @@ def schedule_process_kill(h: Harness):
     assert h.events(tr, "cluster.spill_lost")
 
 
+def schedule_recursive_kill(h: Harness):
+    """A worker dies mid-round of a RECURSIVE shuffle: duplicate-heavy
+    input whose hot partition exceeds the reduce budget, so the sort
+    runs sampled boundaries + multi-round recursion (shuffle/recursive)
+    — and w0's death must leave every round's output byte/etag-identical
+    to the clean reference, with the recovery AND the recursion both
+    visible on the tracer."""
+    import dataclasses
+
+    from repro.shuffle.recursive import recursive_sort
+
+    plan = dataclasses.replace(
+        PLAN,
+        input_prefix="rec-input/", spill_prefix="rec-spill/",
+        output_prefix="rec-output/",
+        capacity_factor=4.0, sample_fraction=1 / 16, max_rounds=3)
+    in_ck, _ = gensort.write_to_store(
+        h.store, "sort", plan.input_prefix, N,
+        plan.input_records_per_partition, plan.payload_words,
+        skew="dup", skew_seed=3)
+
+    def rec_layout():
+        return [(m.key, m.etag, m.size, m.parts)
+                for m in h.store.list_objects("sort", plan.output_prefix)]
+
+    clean = recursive_sort(h.store, "sort", mesh=h.mesh, axis_names="w",
+                           plan=plan, workers=0)
+    assert clean.num_rounds >= 3 and clean.recursed, clean.rounds
+    want = rec_layout()
+    val = valsort.validate_from_store(h.store, "sort", plan.output_prefix,
+                                      in_ck)
+    assert val.ok and val.total_records == N, val
+
+    tr = Tracer("chaos-recursive-kill")
+    crew = [FaultyWorker(ThreadWorker("w0", h.store), fail_after_tasks=4),
+            ThreadWorker("w1", h.store)]
+    crep = recursive_sort(h.store, "sort", mesh=h.mesh, axis_names="w",
+                          plan=plan, worker_list=crew, fleet=FleetPlan(),
+                          tracer=tr)
+    assert rec_layout() == want, "recursive_kill: output bytes diverged"
+    val = valsort.validate_from_store(h.store, "sort", plan.output_prefix,
+                                      in_ck)
+    assert val.ok and val.total_records == N, val
+    assert any("w0" in getattr(r, "failed_workers", [])
+               for _, _, r in crep.rounds), "w0 never died"
+    assert h.events(tr, "cluster.worker_dead")
+    rounds = h.events(tr, "recursive.round")
+    assert len(rounds) == len(crep.rounds) >= 3, rounds
+    assert h.events(tr, "recursive.redirect")
+
+
 SMOKE = [schedule_clean, schedule_task_kill, schedule_heartbeat_mute,
-         schedule_speculation]
+         schedule_speculation, schedule_recursive_kill]
 FULL = SMOKE + [schedule_request_kill, schedule_membership,
                 schedule_multi_kill, schedule_process_kill]
 

@@ -24,6 +24,7 @@ from helpers import run_with_devices
 
 def _all_partitioners():
     from repro.shuffle.partition import HashPartitioner, RangePartitioner
+    from repro.shuffle.recursive import KeyRoute, SubrangePartitioner
 
     parts = []
     for p in (1, 2, 3, 7, 16, 1000):
@@ -33,6 +34,14 @@ def _all_partitioners():
     # included — degenerate empty ranges are legal, overlap is not.
     parts.append(RangePartitioner(
         5, boundaries=np.array([10, 10, 1 << 20, 1 << 31], np.uint32)))
+    # Recursive sub-range partitioners: a wide parent range (routing by
+    # the next key bits) and a single-duplicated-key range (routing by
+    # the record id — the only split a key boundary can't make).
+    wide = KeyRoute(lo64=1000 << 32, hi64=(1 << 24) << 32)
+    parts.append(SubrangePartitioner(4, wide, wide.equal_bounds(4)))
+    one_key = KeyRoute(lo64=77 << 32, hi64=78 << 32)
+    parts.append(SubrangePartitioner(
+        3, one_key, np.array([100, 5000], np.uint32)))
     return parts
 
 
@@ -102,6 +111,172 @@ def test_range_partitioner_matches_device_keyspace():
         keys = keys.astype(np.uint32)
         assert np.array_equal(np.asarray(ks.reducer_of_key(keys)),
                               part.partition_of(keys)), (r, w)
+
+
+def test_sampled_boundaries_host_and_device_bit_identical():
+    # The Daytona-style splitter estimation exists twice — host-side
+    # (shuffle/partition.quantile_boundaries feeds RangePartitioner) and
+    # device-side (core/keyspace.sampled_boundaries feeds the shuffle
+    # kernel) — and they MUST agree bit-for-bit, or the map (device) and
+    # reduce (host) halves route by different splitters. Pinned on
+    # adversarial samples: all-equal, one key, tiny samples, heavy
+    # duplicates, parts > sample size.
+    import jax.numpy as jnp
+
+    from repro.core import keyspace
+    from repro.shuffle.partition import quantile_boundaries
+
+    rng = np.random.default_rng(11)
+    samples = [
+        np.array([42], np.uint32),  # one key is legal
+        np.full(1000, 7, np.uint32),  # all-equal: every splitter collapses
+        np.array([3, 1, 2], np.uint32),  # tiny, unsorted
+        rng.integers(0, 1 << 32, size=4097, dtype=np.uint64).astype(np.uint32),
+        np.repeat(rng.integers(0, 100, size=64, dtype=np.uint64)
+                  .astype(np.uint32), 33),  # duplicate-heavy
+    ]
+    for sample in samples:
+        for parts in (1, 2, 3, 16, 255):
+            host = quantile_boundaries(sample, parts)
+            dev = np.asarray(
+                keyspace.sampled_boundaries(jnp.asarray(sample), parts))
+            assert host.dtype == np.uint32 and host.shape == (parts - 1,)
+            assert np.array_equal(host, dev), (sample[:8], parts)
+            # quantile splitters are ascending by construction
+            assert bool(np.all(host[1:] >= host[:-1]))
+
+    # both reject the degenerate inputs, naming the offending knob
+    with pytest.raises(ValueError, match="sample"):
+        quantile_boundaries(np.empty(0, np.uint32), 4)
+    with pytest.raises(ValueError, match="sample_keys"):
+        keyspace.sampled_boundaries(jnp.zeros((0,), jnp.uint32), 4)
+    with pytest.raises(ValueError, match="parts=0"):
+        quantile_boundaries(np.array([1], np.uint32), 0)
+    with pytest.raises(ValueError, match="parts=0"):
+        keyspace.sampled_boundaries(jnp.array([1], jnp.uint32), 0)
+
+
+def test_partition_kernel_matches_searchsorted_oracle_bit_for_bit():
+    # The device kernel's routing contract (offsets[j] = #{k < b_j},
+    # searchsorted side="left") against the numpy oracle, on adversarial
+    # boundaries: duplicates, zeros, boundary-equal keys, all-equal
+    # rows, the extremes of the key space. Bit-for-bit — an off-by-one
+    # here silently misroutes a slice boundary's records.
+    import jax.numpy as jnp
+
+    from repro.kernels.range_partition import (partition_offsets_blocks,
+                                               searchsorted_reference)
+    from repro.shuffle.partition import RangePartitioner
+
+    rng = np.random.default_rng(23)
+    B = 256
+    rows = [
+        np.sort(rng.integers(0, 1 << 32, size=B, dtype=np.uint64)
+                .astype(np.uint32)),
+        np.full(B, 12345, np.uint32),  # all-equal row
+        np.zeros(B, np.uint32),
+        np.full(B, 0xFFFFFFFF, np.uint32),
+        np.sort(np.repeat(rng.integers(0, 1 << 10, size=B // 8,
+                                       dtype=np.uint64), 8)
+                .astype(np.uint32)),  # duplicate-heavy low band
+    ]
+    sorted_keys = np.stack(rows)
+    bounds_cases = [
+        np.array([0, 12345, 12345, 1 << 20, 0xFFFFFFFF], np.uint32),
+        np.sort(rng.integers(0, 1 << 32, size=16, dtype=np.uint64)
+                .astype(np.uint32)),
+        np.zeros(3, np.uint32),
+        # sampled quantiles of the probe rows themselves: boundary
+        # values that EQUAL keys, the side="left"/"right" razor's edge
+        np.sort(sorted_keys.reshape(-1))[:: sorted_keys.size // 8][1:8],
+    ]
+    for bounds in bounds_cases:
+        got = np.asarray(partition_offsets_blocks(
+            jnp.asarray(sorted_keys), jnp.asarray(bounds), interpret=True))
+        want = searchsorted_reference(sorted_keys, bounds)
+        assert got.dtype == want.dtype and np.array_equal(got, want), bounds
+
+        # and the kernel's slices agree with the HOST membership rule:
+        # slice j of a sorted row holds exactly the keys RangePartitioner
+        # (searchsorted side="right") routes to partition j.
+        part = RangePartitioner(len(bounds) + 1, boundaries=bounds)
+        for i, row in enumerate(sorted_keys):
+            slice_sizes = np.diff(
+                np.concatenate(([0], got[i], [len(row)])))
+            member_counts = np.bincount(part.partition_of(row),
+                                        minlength=len(bounds) + 1)
+            assert np.array_equal(slice_sizes, member_counts), (i, bounds)
+
+
+def test_keyspace_explicit_boundaries_route_like_partitioner():
+    # KeySpace(boundaries=...) must route by the sampled splitters, not
+    # the equal-split shift fast path — including power-of-two R and W,
+    # where the fast path would otherwise silently ignore them.
+    from repro.core.keyspace import KeySpace
+    from repro.shuffle.partition import RangePartitioner
+
+    rng = np.random.default_rng(5)
+    for r, w in ((16, 8), (24, 8), (8, 2)):
+        bounds = np.sort(rng.integers(0, 1 << 28, size=r - 1,
+                                      dtype=np.uint64).astype(np.uint32))
+        ks = KeySpace(num_reducers=r, num_workers=w,
+                      boundaries=tuple(int(b) for b in bounds))
+        part = RangePartitioner(r, boundaries=bounds)
+        assert np.array_equal(np.asarray(ks.reducer_boundaries()), bounds)
+        # worker boundaries are every R1-th reducer boundary
+        r1 = r // w
+        assert np.array_equal(np.asarray(ks.worker_boundaries()),
+                              bounds[r1 - 1::r1])
+        keys = rng.integers(0, 1 << 32, size=4096,
+                            dtype=np.uint64).astype(np.uint32)
+        keys[:r - 1] = bounds  # boundary-equal keys included
+        assert np.array_equal(np.asarray(ks.reducer_of_key(keys)),
+                              part.partition_of(keys)), (r, w)
+        assert np.array_equal(np.asarray(ks.worker_of_key(keys)),
+                              part.partition_of(keys) // r1), (r, w)
+
+    with pytest.raises(ValueError, match="boundaries"):
+        KeySpace(num_reducers=4, num_workers=2, boundaries=(1, 2))
+    with pytest.raises(ValueError, match="ascending"):
+        KeySpace(num_reducers=4, num_workers=2, boundaries=(9, 4, 10))
+
+
+def test_subrange_route_splits_what_no_key_boundary_can():
+    # The recursion's "next key bits" routing: order-preserving over the
+    # parent sub-range's packed (key<<32|id) domain, tiling preimages,
+    # and — for a single duplicated key — a pure id split.
+    from repro.shuffle.recursive import KeyRoute, SubrangePartitioner
+
+    # Single-key parent range: span = 2^32, shift = 0, routed == id.
+    one = KeyRoute(lo64=77 << 32, hi64=78 << 32)
+    assert one.shift == 0 and one.routed_span == 1 << 32
+    ids = np.array([0, 99, 100, 5000, 1 << 20], np.uint32)
+    keys = np.full(ids.shape, 77, np.uint32)
+    assert np.array_equal(one.routed(keys, ids), ids)
+    sub = SubrangePartitioner(3, one, np.array([100, 5000], np.uint32))
+    assert np.array_equal(sub.partition_of64(keys, ids),
+                          [0, 0, 1, 2, 2])  # identical keys, split by id
+
+    # Wide parent range: shift > 0, routing is monotone in k64 and the
+    # sub-range preimages tile [lo64, hi64) exactly.
+    rng = np.random.default_rng(13)
+    wide = KeyRoute(lo64=1000 << 32, hi64=(1 << 24) << 32)
+    assert wide.shift > 0
+    keys = np.sort(rng.integers(1000, 1 << 24, size=2048,
+                                dtype=np.uint64)).astype(np.uint32)
+    ids = rng.integers(0, 1 << 16, size=2048, dtype=np.uint64).astype(np.uint32)
+    k64 = keys.astype(np.uint64) << np.uint64(32) | ids
+    order = np.argsort(k64, kind="stable")
+    routed = wide.routed(keys[order], ids[order])
+    assert bool(np.all(routed[1:] >= routed[:-1])), "routing must be monotone"
+    bounds = wide.equal_bounds(5)
+    assert bounds.shape == (4,) and bool(np.all(bounds[1:] >= bounds[:-1]))
+    lo = wide.lo64
+    for j in range(5):
+        slo, shi = wide.sub_range64(bounds, j)
+        assert slo == lo, f"sub-range {j} must start where {j-1} ended"
+        lo = shi
+    assert lo == wide.hi64, "sub-ranges must tile the parent range"
 
 
 def test_partitioner_validation_errors_name_knob_and_value():
@@ -186,11 +361,20 @@ def test_external_sort_and_cluster_plan_validation():
     for knob, value in (("records_per_wave", 0), ("num_rounds", 0),
                         ("reducers_per_worker", 0),
                         ("capacity_factor", 0.0),
-                        ("parallel_reducers", 0)):
+                        ("parallel_reducers", 0),
+                        ("sample_fraction", -0.1),
+                        ("sample_fraction", 1.5),
+                        ("max_rounds", 0)):
         plan = dataclasses.replace(
             ExternalSortPlan(records_per_wave=1 << 12), **{knob: value})
         with pytest.raises(ValueError, match=f"{knob}="):
             plan.validate()
+    # recursion needs a budget to define "oversized": max_rounds > 1
+    # with an uncapped reduce budget is a contradiction, not a default
+    with pytest.raises(ValueError, match="max_rounds=2"):
+        dataclasses.replace(ExternalSortPlan(records_per_wave=1 << 12),
+                            max_rounds=2,
+                            reduce_memory_budget_bytes=0).validate()
 
     with pytest.raises(ValueError, match="num_workers=0"):
         ClusterPlan(num_workers=0)
@@ -413,31 +597,25 @@ print("OK")
 """, timeout=900)
 
 
-def test_skewed_keys_sort_byte_identical_across_schedules():
-    # Satellite gate: a skewed (non-uniform) key distribution — most
-    # keys crammed into a narrow low band, plus heavy duplicates — must
-    # produce byte-identical sorted output at every parallelism and
-    # worker count, even though partition sizes are wildly unbalanced.
+def test_skewed_keys_sort_with_sampled_boundaries_at_default_capacity():
+    # Satellite gate: skew is handled by MEASURING the distribution, not
+    # by buying headroom. The equal Indy split on a hot-band + duplicate
+    # distribution overflows the all-to-all capacity at the DEFAULT
+    # capacity_factor; the sampling pre-pass feeds quantile splitters
+    # end-to-end (device keyspace + host partitioner) and the same plan
+    # then sorts clean — byte-identical at every parallelism and worker
+    # count.
     run_with_devices(SORT_SETUP + """
 from repro.io import records as rec
-
-# Equal key ranges + heavy skew means one mesh worker absorbs most of
-# every wave: capacity_factor is exactly the knob that buys that slack
-# (the Daytona-style alternative is sampled boundaries — see
-# shuffle/partition.RangePartitioner(boundaries=...)).
-plan = dataclasses.replace(plan, capacity_factor=8.0)
-
-def job():
-    return sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
-                            plan=plan)
+from repro.shuffle.job import sample_boundaries
 
 rpp = plan.input_records_per_partition
 ids = np.arange(N, dtype=np.uint32)
 u = np.asarray(gensort.splitmix32(ids))
-# 7/8 of keys land in [0, 2^24); the rest spread uniformly; every 5th
+# 7/8 of keys land in [0, 2^24); the rest spread uniformly; every 16th
 # key is a duplicate of a fixed hot key (ties broken by id).
 keys = np.where(u % 8 < 7, u >> np.uint32(8), u).astype(np.uint32)
-keys[::5] = 12345
+keys[::16] = 12345
 in_ck = (0, 0)
 for p in range(N // rpp):
     sl = slice(p * rpp, (p + 1) * rpp)
@@ -448,24 +626,143 @@ for p in range(N // rpp):
               rec.encode_records(keys[sl], ids[sl], payload),
               metadata={"records": rpp})
 
-rep0 = job().run(workers=0)
+# Equal split: ~7/8 of every wave converges on one mesh worker — the
+# shuffle block overflows at the default capacity_factor.
+try:
+    job().run(workers=0)
+    raise AssertionError("equal split must overflow on this distribution")
+except RuntimeError as e:
+    assert "shuffle block overflow" in str(e), e
+
+samp = sample_boundaries(store, "sort", input_prefix=plan.input_prefix,
+                         payload_words=plan.payload_words,
+                         sample_fraction=1 / 16, parts=16)
+assert samp.get_requests > 0 and samp.records_total == N
+
+def sampled_job(p=None):
+    return sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
+                            plan=p or plan, boundaries=samp.boundaries)
+
+rep0 = sampled_job().run(workers=0)
 want = layout()
 val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
 assert val.ok and val.total_records == N, val
-# skew is real: partition sizes differ by >= 8x
+# the duplicate key still skews OUTPUT partition sizes (quantiles can't
+# split equal keys) — but no longer the per-worker wave capacity
 sizes = [m.size for m in store.list_objects("sort", plan.output_prefix)]
 assert max(sizes) >= 8 * min(sizes), sizes
 
 for par in (1, 4):
-    p2 = dataclasses.replace(plan, parallel_reducers=par,
-                             capacity_factor=8.0)
-    sort_shuffle_job(store, "sort", mesh=mesh, axis_names="w",
-                     plan=p2).run(workers=0)
+    p2 = dataclasses.replace(plan, parallel_reducers=par)
+    sampled_job(p2).run(workers=0)
     assert layout() == want, f"parallel_reducers={par} changed skewed bytes"
 for W in (1, 2):
-    job().run(workers=W)
+    sampled_job().run(workers=W)
     assert layout() == want, f"W={W} changed skewed bytes"
 val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
 assert val.ok, val
 print("OK", max(sizes), min(sizes))
+""", timeout=900)
+
+
+def test_recursive_sort_dup_heavy_end_to_end():
+    # The ISSUE-9 acceptance gate: a duplicate-heavy gensort input whose
+    # hottest partition would exceed reduce_memory_budget_bytes under
+    # any single-round split sorts valsort-clean through sampled
+    # boundaries + recursive rounds — byte-identical at W in {1, 4} and
+    # under a mid-round worker kill, with the sampling pre-pass visible
+    # as its own traced/billed phase and >= 2 recursive rounds actually
+    # executed.
+    run_with_devices("""
+import dataclasses
+import tempfile
+import numpy as np
+from repro.core.external_sort import ExternalSortPlan
+from repro.core.compat import make_mesh
+from repro.data import gensort, valsort
+from repro.io.object_store import ObjectStore
+from repro.obs.events import Tracer
+from repro.shuffle.executor import ClusterPlan
+from repro.shuffle.recursive import recurse_prefix, recursive_sort
+
+mesh = make_mesh((8,), ("w",))
+# capacity_factor buys MAP-side all-to-all slack for the 25% duplicate
+# mass (no boundary choice can move equal keys apart in one round —
+# that is the point of this fixture); the REDUCE-side ceiling is what
+# the recursion removes.
+plan = ExternalSortPlan(
+    records_per_wave=1 << 13,
+    num_rounds=2,
+    reducers_per_worker=2,
+    payload_words=2,
+    impl="ref",
+    input_records_per_partition=1 << 12,
+    output_part_records=1 << 11,
+    store_chunk_bytes=16 << 10,
+    parallel_reducers=2,
+    reduce_memory_budget_bytes=64 << 10,
+    capacity_factor=4.0,
+    sample_fraction=1 / 16,
+    max_rounds=3,
+)
+N = 1 << 15
+store = ObjectStore(tempfile.mkdtemp(prefix="recursive-sort-test-"))
+store.create_bucket("sort")
+# "dup" skew: every 4th record shares ONE key -> the hot partition holds
+# >= N/4 records = 128 KiB, twice the 64 KiB reduce budget. A
+# single-round sort cannot keep that partition's merge under budget.
+in_ck, _ = gensort.write_to_store(
+    store, "sort", plan.input_prefix, N,
+    plan.input_records_per_partition, plan.payload_words,
+    skew="dup", skew_seed=3)
+assert (N // 4) * plan.record_bytes > plan.reduce_memory_budget_bytes
+
+tracer = Tracer(job="recursive")
+rep = recursive_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan,
+                     tracer=tracer)
+
+# >= 2 recursive rounds really ran (the id-split of the duplicated key)
+child_rounds = [(d, p) for d, p, _ in rep.rounds if d >= 2]
+assert len(child_rounds) >= 2, rep.rounds
+assert rep.num_rounds >= 3, rep.rounds
+assert rep.recursed, "the hot partition must have been redirected"
+
+# the sampling pre-pass is its own traced/billed phase
+assert rep.sample is not None and rep.sample.get_requests > 0
+evs = tracer.log.events()
+sample_evs = [e for e in evs if e["phase"] == "sample"]
+assert any(e["name"] == "sample.fetch" for e in sample_evs)
+assert any(e["name"] == "sample.boundaries" for e in sample_evs)
+rounds_evs = [e for e in evs if e["name"] == "recursive.round"]
+assert len(rounds_evs) == len(rep.rounds)
+assert any(e["name"] == "recursive.redirect" for e in evs)
+gauges = tracer.registry.snapshot()["gauges"]
+assert "phase.seconds{phase=sample}" in gauges
+
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok and val.total_records == N, val
+
+def layout():
+    return [(m.key, m.etag, m.size, m.parts)
+            for m in store.list_objects("sort", plan.output_prefix)]
+want = layout()
+# recursion staged nothing permanent: the .rounds/ prefix is gone
+assert not store.list_objects("sort", recurse_prefix(plan))
+# recursed partitions exist only as their sub-objects, in list order
+assert any("/sub-" in k for k, _, _, _ in want), want
+
+for W in (1, 4):
+    recursive_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan,
+                   workers=W)
+    assert layout() == want, f"W={W} changed recursive output bytes"
+
+# mid-round worker kill (every round's fleet loses w1 after 2 tasks)
+crep = recursive_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan,
+                      cluster=ClusterPlan(num_workers=4,
+                                          fail_after_tasks={1: 2}))
+assert layout() == want, "worker kill changed recursive output bytes"
+assert any(getattr(r, "failed_workers", []) for _, _, r in crep.rounds)
+val = valsort.validate_from_store(store, "sort", plan.output_prefix, in_ck)
+assert val.ok and val.total_records == N, val
+print("OK", len(rep.rounds), rep.recursed)
 """, timeout=900)

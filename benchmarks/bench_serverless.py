@@ -1,0 +1,176 @@
+"""Serverless FunctionWorker: per-invocation billing and the TCO crossover.
+
+The paper's §2.6 deployment is a provisioned VM cluster billed by the
+hour; the serverless execution mode trades that provisioning floor for
+per-invocation GB-second billing. This bench runs the same CloudSort job
+through the FunctionWorker fleet (one task per invocation, world rebuilt
+from a JSON event, FakeS3 as the only shared state) and prices the run
+two ways:
+
+  * measured: every invocation's wall-clock and peak memory feed the
+    GB-second leg; the fleet's retry-inflated request counters feed the
+    access legs (exactly like the VM cost model — retries are billed);
+  * modeled: the closed-form serverless-vs-cluster sweep scaled from
+    the paper's 100 TB profile, bisected for the dataset size where the
+    two totals cross (the cluster's 5-minute provisioning floor loses
+    below it, the GB-second premium loses above it).
+
+Invariants: output byte/etag-identical to the single-host reference,
+valsort-clean, exactly one task per invocation (no warm-state reuse
+across tasks beyond the compiled-kernel sandbox).
+
+Rows (name, us = end-to-end wall time, derived):
+
+  serverless/fn_w{W}               — derived = end-to-end records/s
+  serverless/fn_invocations        — derived = invocation count (exact)
+  serverless/fn_get_requests       — derived = fleet GET attempts (W=1)
+  serverless/fn_put_requests       — derived = fleet PUT attempts (W=1)
+  serverless/fn_gb_seconds         — derived = billed GB-seconds (timing)
+  serverless/fn_tco_usd            — derived = measured run TCO (timing)
+  serverless/crossover_tb          — derived = modeled crossover dataset
+  serverless/model_fn_total_at_1tb — derived = modeled serverless $ @1TB
+  serverless/model_vm_total_at_1tb — derived = modeled cluster $ @1TB
+
+The modeled rows and the request/invocation counts are deterministic
+(pure arithmetic; memory-plane store, no faults) and GATED; the timing
+rows are informational.
+
+Standalone: PYTHONPATH=src python benchmarks/bench_serverless.py [--smoke|--full]
+`run()` (the benchmarks/run.py entry) always uses smoke scale.
+"""
+from __future__ import annotations
+
+import time
+
+#: Regression gates for tools/bench_diff.py. All five are deterministic:
+#: the model rows are closed-form arithmetic from pinned pricing
+#: constants, and the count rows come from a fault-free run on the
+#: in-memory FakeS3 plane (request totals are a function of the plan,
+#: not of scheduling).
+GATES = {
+    "serverless/fn_invocations": {"tolerance": 0.0, "direction": "lower"},
+    "serverless/fn_get_requests": {"tolerance": 0.02, "direction": "lower"},
+    "serverless/fn_put_requests": {"tolerance": 0.02, "direction": "lower"},
+    "serverless/crossover_tb": {"tolerance": 0.02, "direction": "lower"},
+    "serverless/model_fn_total_at_1tb": {"tolerance": 0.02,
+                                         "direction": "lower"},
+    "serverless/model_vm_total_at_1tb": {"tolerance": 0.02,
+                                         "direction": "lower"},
+}
+
+
+def run(full: bool = False):
+    from repro.cloud import FakeS3Backend, InvocationDriver
+    from repro.core.cost_model import (billed_gb_seconds, cluster_tco_at,
+                                       serverless_crossover_tb,
+                                       serverless_tco_at)
+    from repro.core.external_sort import ExternalSortPlan
+    from repro.data import gensort, valsort
+    from repro.io.middleware import MetricsMiddleware
+
+    # Geometry is PINNED to a 1-device mesh so the gated counts do not
+    # depend on the ambient XLA device count: 4 map tasks x 16 output
+    # partitions = 20 invocations at any worker count.
+    plan = ExternalSortPlan(
+        records_per_wave=1 << (14 if full else 13),
+        num_rounds=2,
+        reducers_per_worker=16,
+        payload_words=2,
+        impl="ref",
+        input_records_per_partition=1 << (13 if full else 12),
+        output_part_records=1 << 11,
+        store_chunk_bytes=16 << 10,
+        parallel_reducers=1,
+        reduce_memory_budget_bytes=64 << 10,
+    )
+    total = plan.records_per_wave * 4  # 4 map waves
+    store = MetricsMiddleware(FakeS3Backend(chunk_size=16 << 10))
+    store.create_bucket("bench")
+    in_ck, _ = gensort.write_to_store(
+        store, "bench", plan.input_prefix, total,
+        plan.input_records_per_partition, plan.payload_words)
+
+    def layout():
+        return [(m.key, m.etag, m.size, m.parts)
+                for m in store.list_objects("bench", plan.output_prefix)]
+
+    # Single-host reference layout: the byte-identity bar for every run.
+    from repro.core.compat import make_mesh
+    from repro.shuffle.sort import sort_shuffle_job
+    mesh = make_mesh((1,), ("w",))
+    sort_shuffle_job(store, "bench", mesh=mesh, axis_names="w",
+                     plan=plan).run(workers=0)
+    want = layout()
+    num_invocations = 4 + len(want)
+
+    def check(tag):
+        assert layout() == want, f"{tag} changed output bytes"
+        val = valsort.validate_from_store(store, "bench", plan.output_prefix,
+                                          in_ck)
+        assert val.ok and val.total_records == total, (tag, val)
+
+    rows = []
+    stats = gbs = tco = None
+    for W in (1, 4):
+        drv = InvocationDriver(store, "bench", plan=plan, workers=W,
+                               mesh_devices=1)
+        t0 = time.perf_counter()
+        crep = drv.run()
+        secs = time.perf_counter() - t0
+        check(f"fn W={W}")
+        assert not crep.failed_workers, crep.failed_workers
+        invs = drv.invocations()
+        assert len(invs) == num_invocations, (W, len(invs))
+        rows.append((f"serverless/fn_w{W}", secs * 1e6, total / secs))
+        if W == 1:
+            stats = drv.request_stats()
+            gbs = sum(billed_gb_seconds(p) for p in drv.profiles())
+            tco = drv.tco(data_bytes=total * plan.record_bytes)
+    rows.append(("serverless/fn_invocations", 0.0, float(num_invocations)))
+    rows.append(("serverless/fn_get_requests", 0.0,
+                 float(stats.get_requests)))
+    rows.append(("serverless/fn_put_requests", 0.0,
+                 float(stats.put_requests)))
+    rows.append(("serverless/fn_gb_seconds", 0.0, gbs))
+    rows.append(("serverless/fn_tco_usd", 0.0, tco.total))
+
+    # -- the modeled crossover: where GB-seconds beat the hourly floor ----
+    x = serverless_crossover_tb()
+    fn1 = serverless_tco_at(1.0).total
+    vm1 = cluster_tco_at(1.0).total
+    # The bracket property IS the claim: serverless wins small datasets
+    # (the cluster pays its provisioning floor regardless), the cluster
+    # wins big ones (the GB-second premium compounds).
+    assert serverless_tco_at(x / 4).total < cluster_tco_at(x / 4).total
+    assert serverless_tco_at(x * 4).total > cluster_tco_at(x * 4).total
+    rows.append(("serverless/crossover_tb", 0.0, x))
+    rows.append(("serverless/model_fn_total_at_1tb", 0.0, fn1))
+    rows.append(("serverless/model_vm_total_at_1tb", 0.0, vm1))
+    return rows
+
+
+def main():
+    import argparse
+    import os
+
+    # The bench pins its own 1-device geometry; this only quiets jax on
+    # hosts where XLA_FLAGS is already set for more.
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=1")
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--smoke", action="store_true",
+                      help="small dataset (the default)")
+    mode.add_argument("--full", action="store_true",
+                      help="4x dataset; same invariants")
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(full=args.full):
+        print(f"{name},{us:.3f},{derived:.6g}")
+    print(f"# total {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,6 +14,8 @@
                           vs equal split, recursive dup-heavy sort
   bench_elastic         — §2.6 elastic fleet: process parallelism,
                           25%-kill recovery, straggler speculation
+  bench_serverless      — serverless FunctionWorker mode: per-invocation
+                          GB-second billing, TCO crossover vs the cluster
   bench_groupby         — shuffle-as-a-library generality: group-by
                           aggregation with a map-side combiner
   roofline              — §Roofline rows from the dry-run artifacts
@@ -61,6 +63,7 @@ BENCHES = [
     ("cluster_scaling", "benchmarks.bench_cluster_scaling"),
     ("skew", "benchmarks.bench_skew"),
     ("elastic", "benchmarks.bench_elastic"),
+    ("serverless", "benchmarks.bench_serverless"),
     ("groupby", "benchmarks.bench_groupby"),
     ("roofline", "benchmarks.roofline"),
 ]

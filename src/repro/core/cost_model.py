@@ -225,6 +225,239 @@ def measured_tiered_cloudsort_tco(
 
 
 # ---------------------------------------------------------------------------
+# Serverless: the per-invocation GB-second pricing leg (ROADMAP item 2)
+# ---------------------------------------------------------------------------
+
+
+def _require(cond: bool, knob: str, value, why: str) -> None:
+    if not cond:
+        raise ValueError(f"{knob}={value!r}: {why}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerlessCostParams:
+    """Lambda-style function pricing (x86 on-demand, us-west-2, late 2022).
+
+    The compute leg bills GB-seconds: billed duration (rounded UP to
+    `duration_step_ms`) times the function's memory size (peak usage
+    rounded UP to `memory_step_mib`, floored at `memory_floor_mib` — the
+    smallest size the platform sells), plus a flat `per_invocation` fee.
+    The object-store legs are unchanged from the paper's S3 model
+    (`s3`): serverless-sort and BlobShuffle both show the request fees,
+    not the compute meter, are where object-store shuffle cost lives.
+
+    `equivalent_worker_memory_gb` / `invocations_per_100tb` parameterize
+    the closed-form sweep (`serverless_tco_at`): a function fleet doing
+    the paper's 100 TB job buys the same GB-hours the 40 i4i.4xlarge
+    workers (128 GB each) held for `job_hours`, sliced into the paper's
+    50k map + 25k reduce task invocations.
+    """
+
+    gb_second: float = 1.66667e-5  # $ per GB-second of billed duration
+    per_invocation: float = 2e-7  # $0.20 per 1M requests
+    memory_floor_mib: int = 128  # smallest purchasable function size
+    memory_step_mib: int = 1  # memory-size granularity
+    duration_step_ms: float = 1.0  # billed-duration granularity
+    equivalent_worker_memory_gb: float = 128.0  # i4i.4xlarge
+    invocations_per_100tb: int = 75_000  # 50k maps + 25k reduces
+    s3: Ec2CostParams = Ec2CostParams()
+
+    def __post_init__(self):
+        _require(self.gb_second > 0, "gb_second", self.gb_second,
+                 "the GB-second rate must be positive")
+        _require(self.per_invocation >= 0, "per_invocation",
+                 self.per_invocation, "the per-request fee must be >= 0")
+        _require(self.memory_floor_mib > 0, "memory_floor_mib",
+                 self.memory_floor_mib,
+                 "the smallest function size must be positive")
+        _require(self.memory_step_mib > 0, "memory_step_mib",
+                 self.memory_step_mib,
+                 "the memory-size granularity must be positive")
+        _require(self.duration_step_ms > 0, "duration_step_ms",
+                 self.duration_step_ms,
+                 "the billed-duration granularity must be positive")
+        _require(self.equivalent_worker_memory_gb > 0,
+                 "equivalent_worker_memory_gb",
+                 self.equivalent_worker_memory_gb,
+                 "the per-worker memory equivalence must be positive")
+        _require(self.invocations_per_100tb >= 0, "invocations_per_100tb",
+                 self.invocations_per_100tb,
+                 "the invocation count must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class InvocationProfile:
+    """One function invocation as the meter saw it: billed wall-clock
+    and measured peak memory (cloud.function_worker.InvocationRecord
+    carries the measurement; this is the pricing-facing slice)."""
+
+    seconds: float
+    peak_bytes: int
+
+    def __post_init__(self):
+        _require(self.seconds >= 0, "seconds", self.seconds,
+                 "billed duration must be >= 0")
+        _require(self.peak_bytes >= 0, "peak_bytes", self.peak_bytes,
+                 "peak memory must be >= 0")
+
+
+def billed_gb_seconds(profile: InvocationProfile,
+                      params: ServerlessCostParams = ServerlessCostParams(),
+                      ) -> float:
+    """GB-seconds the platform bills for one invocation: measured peak
+    memory rounded up to the size granularity (floored at the smallest
+    purchasable size) times duration rounded up to the billing step —
+    a minimum of one step, since a 0 ms invocation still bills one."""
+    import math
+
+    mib = profile.peak_bytes / float(1 << 20)
+    step = params.memory_step_mib
+    billed_mib = max(params.memory_floor_mib, math.ceil(mib / step) * step)
+    # Epsilon guards the float division so exact multiples of the step
+    # don't round up an extra step (2.0 s at a 1 ms step bills 2000 ms).
+    steps = max(1, math.ceil(profile.seconds * 1000.0
+                             / params.duration_step_ms - 1e-9))
+    billed_s = steps * params.duration_step_ms / 1000.0
+    return (billed_mib / 1024.0) * billed_s
+
+
+def serverless_compute_cost(
+    invocations,
+    params: ServerlessCostParams = ServerlessCostParams(),
+) -> float:
+    """The serverless compute leg: sum of billed GB-seconds across the
+    run's invocations at the GB-second rate, plus the flat request fee
+    per invocation. Re-executed / speculated attempts appear as extra
+    invocations and are billed — like VM re-execution traffic, retries
+    are real, billed compute."""
+    profiles = list(invocations)
+    gbs = sum(billed_gb_seconds(p, params) for p in profiles)
+    return gbs * params.gb_second + len(profiles) * params.per_invocation
+
+
+def measured_serverless_tco(
+    invocations,
+    stats,
+    *,
+    job_hours: float,
+    reduce_hours: float,
+    data_bytes: float,
+    params: ServerlessCostParams = ServerlessCostParams(),
+) -> CostBreakdown:
+    """Table 2 with the VM compute row replaced by the measured
+    per-invocation GB-second leg.
+
+    Measured vs. assumed follows measured_cloudsort_tco exactly for the
+    storage/access legs (same arithmetic via `params.s3`, same
+    retry-inflated attempt-count billing basis — `stats` is the sum of
+    every invocation's own MetricsMiddleware counters, so a SlowDown'd
+    and retried GET bills twice here too). The compute leg is measured
+    from each invocation's wall-clock and peak memory; the price sheet
+    (`ServerlessCostParams` rates) is assumed.
+    """
+    base = measured_cloudsort_tco(
+        stats, job_hours=job_hours, reduce_hours=reduce_hours,
+        data_bytes=data_bytes, params=params.s3)
+    return dataclasses.replace(
+        base, compute=serverless_compute_cost(invocations, params))
+
+
+def cluster_tco_at(
+    data_tb: float,
+    *,
+    params: Ec2CostParams = Ec2CostParams(),
+    profile: JobProfile = JobProfile(),
+    provision_hours: float = 1 / 12,
+) -> CostBreakdown:
+    """Closed-form VM-cluster TCO at an arbitrary dataset size, for the
+    crossover sweep: job time and request counts scale linearly from the
+    100 TB profile, but the compute leg has a PROVISIONING FLOOR — a
+    cluster bills from boot, and nobody gets a 40-node fleet up, sorted,
+    and torn down in under ~`provision_hours` (default 5 minutes)
+    however small the dataset. The storage legs use the unfloored scaled
+    hours: data sits in S3 for the data's time, not the idle VMs'."""
+    _require(data_tb > 0, "data_tb", data_tb, "dataset size must be positive")
+    _require(provision_hours >= 0, "provision_hours", provision_hours,
+             "the cluster provisioning floor must be >= 0 hours")
+    frac = data_tb / 100.0
+    job_h = profile.job_hours * frac
+    s3_hr = params.s3_hourly_per_100tb() * frac
+    return CostBreakdown(
+        compute=params.cluster_hourly * max(job_h, provision_hours),
+        storage_input=s3_hr * job_h,
+        storage_output=s3_hr * profile.reduce_hours * frac,
+        access_get=params.get_per_1000 * profile.get_requests * frac / 1000,
+        access_put=params.put_per_1000 * profile.put_requests * frac / 1000,
+    )
+
+
+def serverless_tco_at(
+    data_tb: float,
+    *,
+    fn: ServerlessCostParams = ServerlessCostParams(),
+    vm_profile: JobProfile = JobProfile(),
+) -> CostBreakdown:
+    """Closed-form serverless TCO at an arbitrary dataset size: the
+    function fleet buys the same GB-hours the paper's VM cluster held
+    for the (scaled) job, with NO provisioning floor — functions bill
+    per invocation from the first millisecond, which is exactly why
+    serverless wins small datasets and loses big ones (the per-GB-second
+    rate is ~5.5x the amortized VM rate). Storage/access legs match
+    cluster_tco_at so the crossover isolates the compute-meter shape."""
+    _require(data_tb > 0, "data_tb", data_tb, "dataset size must be positive")
+    frac = data_tb / 100.0
+    gb_hours = (fn.equivalent_worker_memory_gb * fn.s3.num_workers
+                * vm_profile.job_hours * frac)
+    compute = (gb_hours * 3600.0 * fn.gb_second
+               + fn.invocations_per_100tb * frac * fn.per_invocation)
+    job_h = vm_profile.job_hours * frac
+    s3_hr = fn.s3.s3_hourly_per_100tb() * frac
+    return CostBreakdown(
+        compute=compute,
+        storage_input=s3_hr * job_h,
+        storage_output=s3_hr * vm_profile.reduce_hours * frac,
+        access_get=fn.s3.get_per_1000 * vm_profile.get_requests * frac / 1000,
+        access_put=fn.s3.put_per_1000 * vm_profile.put_requests * frac / 1000,
+    )
+
+
+def serverless_crossover_tb(
+    *,
+    fn: ServerlessCostParams = ServerlessCostParams(),
+    vm: Ec2CostParams = Ec2CostParams(),
+    profile: JobProfile = JobProfile(),
+    provision_hours: float = 1 / 12,
+    lo_tb: float = 1e-3,
+    hi_tb: float = 1e3,
+) -> float:
+    """Dataset size (TB) where serverless and cluster TCO cross.
+
+    Below the crossover the cluster's provisioning floor dominates and
+    per-invocation billing wins; above it the GB-second premium does.
+    Bisection over [lo_tb, hi_tb]; raises ValueError if the gap doesn't
+    change sign over the bracket (no crossover under these prices).
+    With default parameters the crossover sits just above 1 TB.
+    """
+
+    def gap(tb: float) -> float:
+        return (serverless_tco_at(tb, fn=fn, vm_profile=profile).total
+                - cluster_tco_at(tb, params=vm, profile=profile,
+                                 provision_hours=provision_hours).total)
+
+    glo, ghi = gap(lo_tb), gap(hi_tb)
+    _require(glo * ghi <= 0, "crossover_bracket", (lo_tb, hi_tb),
+             "serverless-vs-cluster cost gap does not change sign over "
+             "the bracket — no crossover under these prices")
+    for _ in range(200):
+        mid = (lo_tb + hi_tb) / 2.0
+        if gap(mid) * glo <= 0:
+            hi_tb = mid
+        else:
+            lo_tb = mid
+    return (lo_tb + hi_tb) / 2.0
+
+
+# ---------------------------------------------------------------------------
 # TPU-pod re-parameterization (the adapted system of DESIGN.md §2)
 # ---------------------------------------------------------------------------
 

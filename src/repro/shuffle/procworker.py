@@ -250,7 +250,11 @@ class ProcessWorker(Worker):
             st = {
                 "event": threading.Event(), "error": None,
                 "on_done": on_done,
-                "commit_gate": ctx.commit_gate if phase == "reduce" else None,
+                # Map attempts gate on the speculation claim pool too
+                # (the child polls the commit RPC per fetched chunk);
+                # the reduce gate additionally covers requeue routing.
+                "commit_gate": (ctx.commit_gate if phase == "reduce"
+                                else ctx.map_commit_gate),
                 "on_requeue": ctx.on_requeue if phase == "reduce" else None,
             }
             with self._state_lock:
@@ -259,7 +263,9 @@ class ProcessWorker(Worker):
                 target=self._pop_server, args=(st, pop_next), daemon=True,
                 name=f"procworker-{self.name}-pop")
             server.start()
-            self._send({"cmd": "phase", "phase": phase})
+            self._send({"cmd": "phase", "phase": phase,
+                        "gated": phase == "map"
+                        and ctx.map_commit_gate is not None})
             st["event"].wait()
             self._need.put(None)
             server.join()

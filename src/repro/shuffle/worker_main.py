@@ -225,13 +225,19 @@ def main() -> int:
         while not stop.wait(interval):
             proto.send({"ev": "hb"})
 
-    def run_phase(phase: str) -> None:
+    def run_phase(phase: str, gated: bool) -> None:
         control = rt.JobControl()
         timeline = rt.PhaseTimeline(origin=time.perf_counter())
         if phase == "map":
+            # `gated` means the parent runs a speculation claim pool for
+            # this phase: poll the commit RPC per fetched map chunk (and
+            # at commit) so a beaten attempt aborts at its next chunk
+            # instead of loading the whole wave — the process-fleet
+            # mirror of the reduce side's _AbandonGatedReads.
             rt.run_map_tasks(store, bucket, map_op, rpc_pop, plan=plan,
                              timeline=timeline, control=control,
-                             tag_prefix=f"{name}/", on_done=rpc_done)
+                             tag_prefix=f"{name}/", on_done=rpc_done,
+                             commit_gate=rpc_commit if gated else None)
         else:
             refresh_offsets()
             slots = min(plan.parallel_reducers, num_partitions)
@@ -267,7 +273,7 @@ def main() -> int:
                 return 0
             phase = cmd["phase"]
             try:
-                run_phase(phase)
+                run_phase(phase, bool(cmd.get("gated", False)))
             except BaseException:
                 proto.send({"ev": "error", "phase": phase,
                             "detail": traceback.format_exc(limit=20)})

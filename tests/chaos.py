@@ -275,6 +275,73 @@ def schedule_process_kill(h: Harness):
     assert h.events(tr, "cluster.spill_lost")
 
 
+def schedule_process_map_gate(h: Harness):
+    """PR-8 pin: the process child's MAP chunk loop must poll the
+    speculation commit gate per fetched chunk. An always-False gate
+    (every attempt already lost its race) must make the child abandon
+    every task at its FIRST gated read — zero confirmations, zero spill
+    bytes — and the gate RPC must have been consulted for every task."""
+    import dataclasses
+
+    from repro.shuffle import executor as ex
+    from repro.shuffle.procworker import ProcessWorker
+
+    plan = dataclasses.replace(PLAN, spill_prefix="gate-spill/",
+                               output_prefix="gate-output/")
+    session = sort_shuffle_job(h.store, "sort", mesh=h.mesh, axis_names="w",
+                               plan=plan).prepare()
+    calls = []
+    lock = threading.Lock()
+
+    def gate(worker, g):
+        with lock:
+            calls.append((worker, g))
+        return False  # every attempt has already lost: must abandon
+
+    ctx = ex.WorkerContext(
+        plan=plan, bucket="sort", map_op=session.job.map_op,
+        reduce_shared=session.shared, timeline=session.timeline,
+        control=session.control, num_map_tasks=session.num_tasks,
+        map_commit_gate=gate)
+    tasks = iter(range(session.num_tasks))
+    done = []
+    wk = ProcessWorker("pg0", store=h.store, bucket="sort", plan=plan)
+    try:
+        wk.run_map_phase(ctx, lambda: next(tasks, None), done.append)
+    finally:
+        wk.close()
+    assert not done, f"lost attempts confirmed map tasks: {done}"
+    assert {g for _, g in calls} == set(range(session.num_tasks)), calls
+    spills = h.store.list_objects("sort", plan.spill_prefix)
+    assert not list(spills), "abandoned map attempts spilled bytes"
+
+
+def schedule_process_map_speculation(h: Harness):
+    """End-to-end flavour of the same pin: a straggling PROCESS worker's
+    map task is speculated, the fast copy commits first, and the
+    straggler's in-flight attempt abandons mid-fetch via the commit RPC
+    instead of streaming its whole wave."""
+    from repro.shuffle.procworker import ProcessWorker
+
+    tr = Tracer("chaos-process-map-speculation")
+    crew = [ProcessWorker("p0", store=h.store, bucket="sort", plan=PLAN,
+                          fault={"latency_s": 0.3}),
+            ProcessWorker("p1", store=h.store, bucket="sort", plan=PLAN)]
+    fleet = FleetPlan(speculation=True, speculation_min_samples=2,
+                      speculation_quantile=0.5, speculation_factor=1.5,
+                      speculation_min_s=0.1)
+    try:
+        crep = h.run(crew, fleet, tr)
+    finally:
+        for wk in crew:
+            wk.close()
+    h.check_bytes("process_map_speculation")
+    assert not crep.failed_workers, crep.failed_workers
+    assert crep.speculated_tasks >= 1 and crep.speculation_wins >= 1, crep
+    spec = h.events(tr, "cluster.speculate")
+    assert any(e.get("phase") == "map" for e in spec), spec
+
+
 def schedule_recursive_kill(h: Harness):
     """A worker dies mid-round of a RECURSIVE shuffle: duplicate-heavy
     input whose hot partition exceeds the reduce budget, so the sort
@@ -327,9 +394,11 @@ def schedule_recursive_kill(h: Harness):
 
 
 SMOKE = [schedule_clean, schedule_task_kill, schedule_heartbeat_mute,
-         schedule_speculation, schedule_recursive_kill]
+         schedule_speculation, schedule_process_map_gate,
+         schedule_recursive_kill]
 FULL = SMOKE + [schedule_request_kill, schedule_membership,
-                schedule_multi_kill, schedule_process_kill]
+                schedule_multi_kill, schedule_process_kill,
+                schedule_process_map_speculation]
 
 
 def main(argv=None):

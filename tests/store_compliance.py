@@ -1,0 +1,187 @@
+"""Reusable StoreBackend protocol-compliance suite.
+
+Every data plane that claims the repo's S3 contract —
+io/backends.FilesystemBackend, io/backends.MemoryBackend,
+cloud/fake_s3.FakeS3Backend, and (run manually against real buckets)
+cloud/remote.S3Backend / GCSBackend — must pass the SAME suite, so the
+contract is pinned once instead of re-asserted ad hoc per plane.
+
+Usage: subclass `StoreBackendCompliance` in a test module and provide a
+`backend` fixture returning a fresh backend with bucket "b" created
+(see tests/test_store_middleware.py, which parameterizes over
+`BACKEND_KINDS` via `make_backend`). This module deliberately has no
+`test_` prefix so pytest collects the suite only through subclasses.
+
+What the suite pins (and what it doesn't): byte semantics of ranged
+GETs, multipart assembly/atomicity/abort, key hygiene, listing order,
+and that the etag is a DETERMINISTIC, part-order-independent function
+of the object bytes. It does NOT pin the etag algorithm itself — the
+local planes use crc32, real S3 uses md5-of-md5s — because the shuffle
+only ever compares etags from the same plane.
+"""
+import threading
+
+import pytest
+
+from repro.cloud.fake_s3 import FakeS3Backend
+from repro.io.backends import FilesystemBackend, MemoryBackend, ObjectNotFound
+
+BACKEND_KINDS = ("fs", "mem", "fake_s3")
+
+
+def make_backend(kind: str, tmp_path, *, chunk_size: int = 64):
+    """A fresh backend of `kind` with bucket "b" created."""
+    if kind == "fs":
+        b = FilesystemBackend(str(tmp_path / "fs"), chunk_size=chunk_size)
+    elif kind == "mem":
+        b = MemoryBackend(chunk_size=chunk_size)
+    elif kind == "fake_s3":
+        b = FakeS3Backend(chunk_size=chunk_size)
+    else:
+        raise ValueError(f"kind={kind!r}: unknown backend kind")
+    b.create_bucket("b")
+    return b
+
+
+class StoreBackendCompliance:
+    """The contract. Subclass + provide a `backend` fixture to run."""
+
+    # -- objects ----------------------------------------------------------
+
+    def test_roundtrip_and_head(self, backend):
+        meta = backend.put("b", "in/p0", b"0123456789",
+                           metadata={"records": 1})
+        assert backend.get("b", "in/p0") == b"0123456789"
+        h = backend.head("b", "in/p0")
+        assert h.size == 10 and h.parts == 1
+        assert h.etag == meta.etag and h.metadata == {"records": 1}
+        backend.delete("b", "in/p0")
+        with pytest.raises(ObjectNotFound):
+            backend.get("b", "in/p0")
+
+    def test_get_range_truncates_like_s3(self, backend):
+        backend.put("b", "k", b"0123456789")
+        assert backend.get_range("b", "k", 2, 4) == b"2345"
+        assert backend.get_range("b", "k", 8, 100) == b"89"  # EOF truncation
+        assert backend.get_range("b", "k", 20, 4) == b""
+
+    def test_list_by_prefix_in_key_order(self, backend):
+        for k in ["out/p-2", "in/p-1", "in/p-0", "spill/x"]:
+            backend.put("b", k, b"d")
+        assert [m.key for m in backend.list_objects("b", "in/")] == [
+            "in/p-0", "in/p-1"]
+        assert len(backend.list_objects("b")) == 4
+
+    def test_missing_key_and_bucket_raise(self, backend):
+        with pytest.raises(ObjectNotFound):
+            backend.get("b", "nope")
+        with pytest.raises(ObjectNotFound):
+            backend.list_objects("no-bucket")
+        with pytest.raises(ObjectNotFound):
+            backend.put("no-bucket", "k", b"")
+
+    def test_bad_keys_rejected(self, backend):
+        # ValueError, not AssertionError: the guard must survive python -O
+        for bad in ["/abs", "../up", "a/../b", ".hidden", ""]:
+            with pytest.raises(ValueError):
+                backend.put("b", bad, b"")
+
+    def test_zero_length_get_chunks_issues_no_get(self, backend):
+        from repro.io.middleware import MetricsMiddleware
+
+        s = MetricsMiddleware(backend)
+        s.put("b", "empty", b"")
+        before = s.stats_snapshot()
+        assert list(s.get_chunks("b", "empty")) == []
+        d = s.stats_snapshot() - before
+        assert d.get_requests == 0 and d.bytes_read == 0  # S3: no ranged GET
+        assert d.head_requests == 1  # sizing is metadata
+
+    def test_etag_deterministic_function_of_bytes(self, backend):
+        # Same bytes -> same etag wherever/whenever written; different
+        # bytes -> different etag. (The algorithm itself is per-plane.)
+        a = backend.put("b", "e/a", b"identical-bytes")
+        c = backend.put("b", "e/c", b"identical-bytes")
+        d = backend.put("b", "e/d", b"different-bytes!")
+        assert a.etag == c.etag
+        assert a.etag != d.etag
+
+    # -- multipart --------------------------------------------------------
+
+    def test_multipart_session_streams(self, backend):
+        mp = backend.multipart("b", "out/p0", metadata={"reducer": 3})
+        mp.put_part(0, b"aaaa")
+        mp.put_part(1, b"bb")
+        # parts invisible until complete
+        with pytest.raises(ObjectNotFound):
+            backend.head("b", "out/p0")
+        meta = mp.complete()
+        assert meta.parts == 2 and meta.size == 6
+        assert backend.get("b", "out/p0") == b"aaaabb"
+        assert backend.head("b", "out/p0").metadata == {"reducer": 3}
+
+        aborted = backend.multipart("b", "out/p1")
+        aborted.put_part(0, b"zzz")
+        aborted.abort()
+        with pytest.raises(ObjectNotFound):
+            backend.head("b", "out/p1")
+
+    def test_multipart_on_missing_bucket_raises(self, backend):
+        with pytest.raises(ObjectNotFound):
+            backend.multipart("no-bucket", "k")
+
+    def test_out_of_order_parts_byte_and_etag_identical(self, backend):
+        # S3 UploadPart semantics: part numbers decide assembly order,
+        # wire order is free. 3,1,2 must complete to an object byte- AND
+        # etag-identical to the same parts uploaded sequentially.
+        parts = [b"alpha-" * 7, b"bravo!" * 5, b"charlie" * 3]
+        seq = backend.put_multipart("b", "seq", parts)
+
+        mp = backend.multipart("b", "ooo")
+        mp.put_part(2, parts[2])
+        mp.put_part(0, parts[0])
+        mp.put_part(1, parts[1])
+        ooo = mp.complete()
+        assert backend.get("b", "ooo") == b"".join(parts)
+        assert backend.get("b", "ooo") == backend.get("b", "seq")
+        assert ooo.etag == seq.etag and ooo.size == seq.size
+        assert ooo.parts == seq.parts == 3
+
+    def test_same_index_reupload_is_last_write_wins(self, backend):
+        mp = backend.multipart("b", "k")
+        mp.put_part(0, b"stale-part")
+        mp.put_part(1, b"-tail")
+        mp.put_part(0, b"fresh")  # re-uploading a part number replaces it
+        meta = mp.complete()
+        assert backend.get("b", "k") == b"fresh-tail"
+        assert meta.parts == 2
+
+    def test_parallel_part_uploads_complete_exact(self, backend):
+        # 16 parts uploaded from racing threads complete to the exact
+        # sequential byte string — the reduce path's part fan-out.
+        parts = [bytes([40 + i]) * (64 + i) for i in range(16)]
+        mp = backend.multipart("b", "out/wide")
+        order = [11, 3, 15, 0, 7, 12, 1, 9, 14, 2, 10, 5, 13, 4, 8, 6]
+        threads = [threading.Thread(target=mp.put_part, args=(i, parts[i]))
+                   for i in order]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        meta = mp.complete()
+        assert meta.parts == 16
+        assert backend.get("b", "out/wide") == b"".join(parts)
+
+    def test_abort_with_racing_parts_leaves_no_object(self, backend):
+        mp = backend.multipart("b", "out/doomed")
+        threads = [threading.Thread(target=mp.put_part,
+                                    args=(i, bytes([i]) * 512))
+                   for i in (3, 0, 2, 1)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        mp.abort()
+        with pytest.raises(ObjectNotFound):
+            backend.head("b", "out/doomed")
+        assert backend.list_objects("b", "out/") == []

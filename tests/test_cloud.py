@@ -1,0 +1,375 @@
+"""Cloud subsystem: FakeS3 wire semantics, gated real backends, and the
+serverless FunctionWorker execution mode.
+
+The acceptance contract (ISSUE 10): a FunctionWorker fleet on
+FakeS3Backend — one task per invocation, no shared state except the
+store — produces output byte/etag-identical to the thread fleet at
+W∈{1,4}, including under a mid-phase invocation kill, with recovery via
+durable multipart commit ONLY (the elastic driver is reused unchanged).
+End-to-end runs need the 8-device host mesh, so they go through
+helpers.run_with_devices subprocesses like the rest of the cluster
+suite; the handler-level event test runs in-process on a 1-device mesh.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from helpers import run_with_devices
+from repro.cloud import FakeS3Backend, GCSBackend, S3Backend, invoke, register_endpoint
+from repro.cloud.remote import _require_dep
+from repro.io.backends import ObjectNotFound, SlowDown, StoreStats
+from repro.io.middleware import (MetricsMiddleware, RetryMiddleware,
+                                 RetryPolicy)
+
+
+# ---------------------------------------------------------------------------
+# gated optional dependencies
+# ---------------------------------------------------------------------------
+
+
+def test_missing_dependency_gate_names_the_extra():
+    # The mechanism, independent of what this container happens to have
+    # installed: a missing module raises ValueError naming the pip extra
+    # and pointing at the hermetic double.
+    with pytest.raises(ValueError, match="boto3"):
+        _require_dep("a_module_that_does_not_exist", "S3Backend", "boto3")
+    with pytest.raises(ValueError, match="FakeS3Backend"):
+        _require_dep("a_module_that_does_not_exist", "GCSBackend", "gcsfs")
+
+
+def test_s3_backend_gates_on_boto3():
+    try:
+        import boto3  # noqa: F401
+    except ImportError:
+        with pytest.raises(ValueError, match="boto3"):
+            S3Backend()
+    else:
+        pytest.skip("boto3 installed here: the import gate is unreachable")
+
+
+def test_gcs_backend_gates_on_gcsfs():
+    try:
+        import gcsfs  # noqa: F401
+    except ImportError:
+        with pytest.raises(ValueError, match="gcsfs"):
+            GCSBackend()
+    else:
+        pytest.skip("gcsfs installed here: the import gate is unreachable")
+
+
+# ---------------------------------------------------------------------------
+# FakeS3Backend: the S3-only wire behaviours (the shared contract is
+# covered by tests/store_compliance.py via test_store_middleware.py)
+# ---------------------------------------------------------------------------
+
+
+def test_fake_s3_validates_knobs():
+    with pytest.raises(ValueError, match="slowdown_every"):
+        FakeS3Backend(slowdown_every=-1)
+    with pytest.raises(ValueError, match="min_part_bytes"):
+        FakeS3Backend(min_part_bytes=-1)
+
+
+def test_fake_s3_min_part_bytes_entity_too_small():
+    b = FakeS3Backend(min_part_bytes=5)
+    b.create_bucket("b")
+    # only the last (highest-indexed) part may be short
+    mp = b.multipart("b", "ok")
+    mp.put_part(0, b"x" * 10)
+    mp.put_part(1, b"y" * 3)
+    assert mp.complete().size == 13
+
+    mp = b.multipart("b", "bad")
+    mp.put_part(0, b"x" * 3)
+    mp.put_part(1, b"y" * 10)
+    with pytest.raises(ValueError, match="min_part_bytes"):
+        mp.complete()
+    with pytest.raises(ObjectNotFound):
+        b.head("b", "bad")  # rejected completes commit nothing
+
+    # a single small part is its own last part: fine
+    mp = b.multipart("b", "single")
+    mp.put_part(0, b"z")
+    assert mp.complete().size == 1
+
+
+def test_fake_s3_slowdown_is_deterministic_under_retry():
+    stats = StoreStats()
+    backend = FakeS3Backend(slowdown_every=3)
+    s = RetryMiddleware(
+        MetricsMiddleware(backend, stats=stats),
+        RetryPolicy(max_attempts=8, base_delay_s=0.001, max_delay_s=0.01,
+                    jitter=0.0),
+        stats=stats, sleep=lambda _: None)
+    s.create_bucket("b")
+    payload = bytes(range(256))
+    for i in range(8):
+        s.put("b", f"k{i}", payload)  # puts throttle only via UploadPart
+    for i in range(8):
+        assert s.get("b", f"k{i}") == payload  # retried to completion
+    assert backend.throttled > 0
+    # The fixed point: every Nth data-plane attempt 503'd, regardless of
+    # interleaving — attempts = logical + throttled, throttled = ⌊attempts/N⌋.
+    assert backend.throttled == backend._data_attempts // 3
+    d = s.stats_snapshot()
+    assert d.throttled == backend.throttled  # billed attempts include 503s
+    assert d.retries == d.throttled
+
+
+def test_fake_s3_slowdown_without_retry_surfaces():
+    b = FakeS3Backend(slowdown_every=2)
+    b.create_bucket("b")
+    b.put("b", "k", b"d")  # UploadPart attempt 1: allowed
+    with pytest.raises(SlowDown):
+        b.get("b", "k")  # attempt 2: every Nth attempt 503s
+    assert b.get("b", "k") == b"d"  # attempt 3: allowed again
+    assert b.throttled == 1
+
+
+# ---------------------------------------------------------------------------
+# the handler: one task from one JSON event, nothing else
+# ---------------------------------------------------------------------------
+
+
+def _tiny_plan():
+    from repro.core.external_sort import ExternalSortPlan
+
+    return ExternalSortPlan(
+        records_per_wave=1 << 12,
+        num_rounds=2,
+        reducers_per_worker=2,
+        payload_words=2,
+        impl="ref",
+        input_records_per_partition=1 << 11,
+        output_part_records=1 << 10,
+        store_chunk_bytes=16 << 10,
+        parallel_reducers=1,
+        reduce_memory_budget_bytes=64 << 10,
+    )
+
+
+def test_invoke_rebuilds_world_from_event_alone():
+    # Hand-built JSON events — no Worker, no driver, no shared Python
+    # state except the endpoint-registered store — must sort end to end:
+    # 1 map invocation + one reduce invocation per partition, valsort-
+    # accepted output. This is the statelessness thesis at handler level.
+    from repro.data import gensort, valsort
+
+    plan = _tiny_plan()
+    store = MetricsMiddleware(FakeS3Backend(chunk_size=16 << 10))
+    store.create_bucket("sort")
+    n = 1 << 12
+    in_ck, _ = gensort.write_to_store(
+        store, "sort", plan.input_prefix, n,
+        plan.input_records_per_partition, plan.payload_words)
+    token = register_endpoint(store)
+
+    def event(phase, task):
+        e = {
+            "version": 1, "worker": "hand", "phase": phase, "task": task,
+            "bucket": "sort", "plan": dataclasses.asdict(plan),
+            "mesh_devices": 1, "axis": "w", "boundaries": None,
+            "store": {"kind": "endpoint", "token": token},
+            "memory_limit_bytes": 1 << 20,
+        }
+        return json.loads(json.dumps(e))  # the wire: pure JSON only
+
+    res = invoke(event("map", 0))
+    assert res["committed"] and res["phase"] == "map"
+    assert res["seconds"] >= 0 and res["stats"]["get_requests"] > 0
+
+    num_partitions = 1 * plan.reducers_per_worker  # w=1 on a 1-device mesh
+    peaks = []
+    for r in range(num_partitions):
+        res = invoke(event("reduce", r))
+        assert res["committed"], r
+        peaks.append(res["peak_bytes"])
+    assert all(0 < p <= (1 << 20) for p in peaks)
+
+    val = valsort.validate_from_store(store, "sort", plan.output_prefix,
+                                      in_ck)
+    assert val.ok and val.total_records == n
+
+
+def test_invoke_requires_a_memory_bound():
+    plan = dataclasses.replace(_tiny_plan(), reduce_memory_budget_bytes=0)
+    store = FakeS3Backend()
+    store.create_bucket("sort")
+    token = register_endpoint(store)
+    ev = {"version": 1, "worker": "w", "phase": "map", "task": 0,
+          "bucket": "sort", "plan": dataclasses.asdict(plan),
+          "mesh_devices": 1, "axis": "w", "boundaries": None,
+          "store": {"kind": "endpoint", "token": token}}
+    with pytest.raises(ValueError, match="memory_limit_bytes"):
+        invoke(json.loads(json.dumps(ev)))
+
+
+def test_invoke_rejects_unknown_store_spec_and_stale_token():
+    plan = _tiny_plan()
+    ev = {"version": 1, "worker": "w", "phase": "map", "task": 0,
+          "bucket": "sort", "plan": dataclasses.asdict(plan),
+          "mesh_devices": 1, "axis": "w", "boundaries": None,
+          "memory_limit_bytes": 1 << 20,
+          "store": {"kind": "endpoint", "token": "ep-never-registered"}}
+    with pytest.raises(ValueError, match="endpoint"):
+        invoke(json.loads(json.dumps(ev)))
+    ev["store"] = {"kind": "martian"}
+    with pytest.raises(ValueError, match="store"):
+        invoke(json.loads(json.dumps(ev)))
+
+
+def test_function_worker_validates_knobs():
+    from repro.cloud import FunctionWorker, InvocationDriver
+
+    store = FakeS3Backend()
+    with pytest.raises(ValueError, match="cold_start_s"):
+        FunctionWorker("f", store=store, bucket="b", plan=_tiny_plan(),
+                       cold_start_s=-1.0)
+    with pytest.raises(ValueError, match="memory_limit_bytes"):
+        FunctionWorker("f", store=store, bucket="b", plan=_tiny_plan(),
+                       memory_limit_bytes=0)
+    with pytest.raises(ValueError, match="workers"):
+        InvocationDriver(store, "b", plan=_tiny_plan(), workers=0)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: FunctionWorker fleet vs thread fleet (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+CLOUD_SETUP = """
+import tempfile
+from repro.cloud import FakeS3Backend, InvocationDriver
+from repro.core.external_sort import ExternalSortPlan, external_sort
+from repro.core.compat import make_mesh
+from repro.data import gensort, valsort
+from repro.io.middleware import MetricsMiddleware
+from repro.shuffle.elastic import FleetPlan
+
+mesh = make_mesh((8,), ("w",))
+plan = ExternalSortPlan(
+    records_per_wave=1 << 13,
+    num_rounds=2,
+    reducers_per_worker=2,
+    payload_words=2,
+    impl="ref",
+    input_records_per_partition=1 << 12,
+    output_part_records=1 << 11,
+    store_chunk_bytes=16 << 10,
+    parallel_reducers=2,
+    reduce_memory_budget_bytes=64 << 10,
+)
+N = 1 << 15  # 4 map tasks; 16 output partitions
+store = MetricsMiddleware(FakeS3Backend(chunk_size=16 << 10))
+store.create_bucket("sort")
+in_ck, nparts = gensort.write_to_store(
+    store, "sort", plan.input_prefix, N,
+    plan.input_records_per_partition, plan.payload_words)
+
+def layout():
+    return [(m.key, m.etag, m.size, m.parts)
+            for m in store.list_objects("sort", plan.output_prefix)]
+
+# The reference bytes come from the THREAD fleet path (single host):
+# byte/etag-identity across execution substrates is the claim.
+rep0 = external_sort(store, "sort", mesh=mesh, axis_names="w", plan=plan)
+want = layout()
+assert len(want) == 16
+
+def check_bytes(tag):
+    assert layout() == want, f"{tag} changed output bytes"
+    val = valsort.validate_from_store(store, "sort", plan.output_prefix,
+                                      in_ck)
+    assert val.ok and val.total_records == N, (tag, val)
+
+def drive(**kw):
+    drv = InvocationDriver(store, "sort", plan=plan, workers=kw.pop("W"),
+                           mesh_devices=8, axis="w", **kw)
+    crep = drv.run()
+    return drv, crep
+"""
+
+
+def test_function_worker_sort_matches_thread_fleet():
+    # Clean serverless runs at W=1 (with an injected cold start) and
+    # W=4: byte/etag-identical output, exactly one committed invocation
+    # per task, every reduce invocation's measured peak within the
+    # per-invocation budget, no heartbeat machinery involved.
+    run_with_devices(CLOUD_SETUP + """
+drv, crep = drive(W=1, cold_start_s=0.005)
+check_bytes("serverless W=1")
+assert not crep.failed_workers and crep.heartbeat_misses == 0
+inv = drv.invocations()
+assert sum(1 for r in inv if r.committed) == 4 + 16
+assert inv[0].cold_start_s == 0.005  # first invocation paid the cold start
+assert all(r.cold_start_s == 0.0 for r in inv[1:])  # warm sandbox after
+assert all(r.peak_bytes <= plan.reduce_memory_budget_bytes
+           for r in inv if r.phase == "reduce"), "invocation memory bound"
+assert all(r.stats.get_requests > 0 for r in inv)  # each billed its own I/O
+
+drv, crep = drive(W=4)
+check_bytes("serverless W=4")
+assert not crep.failed_workers
+inv = drv.invocations()
+assert sum(1 for r in inv if r.committed) == 4 + 16
+assert len({r.worker for r in inv}) == 4  # the fleet actually fanned out
+
+# per-invocation GB-second accounting feeds a positive, finite TCO
+tco = drv.tco(data_bytes=N * plan.record_bytes)
+assert tco.compute > 0 and tco.total > tco.compute
+print("OK")
+""", timeout=900)
+
+
+def test_function_worker_recovers_from_invocation_kills():
+    # (a) fn0's platform stops granting invocations after 3 (dies at the
+    # 4th pop); (b) fn1's store view dies mid-invocation after 40
+    # requests, stranding an open multipart session. Both recover purely
+    # through the elastic driver's durable-commit accounting — the
+    # output must stay byte-identical with real re-executed work.
+    run_with_devices(CLOUD_SETUP + """
+drv, crep = drive(W=4, die_after_invocations={0: 3})
+check_bytes("serverless kill at pop")
+assert "fn0" in crep.failed_workers
+# fn0's commits were durable before it died and a function loses no
+# spill tier with it, so exactly one commit per task still lands.
+assert sum(1 for r in drv.invocations() if r.committed) == 4 + 16
+
+drv, crep = drive(W=4, fail_after_requests={1: 40})
+check_bytes("serverless kill mid-invocation")
+assert "fn1" in crep.failed_workers
+# the invocation died mid-task: that task re-ran on a survivor
+assert crep.reexecuted_map_tasks + crep.reexecuted_reduce_tasks >= 1
+inv = drv.invocations()
+assert sum(1 for r in inv if r.committed) == 4 + 16
+print("OK")
+""", timeout=900)
+
+
+def test_function_worker_sorts_through_slowdown_regime():
+    # Hermetic cloud-path CI: the same serverless sort through a FakeS3
+    # that 503s every 40th data-plane attempt, with the store-level
+    # retry layer absorbing them — bytes identical, throttles observed.
+    run_with_devices(CLOUD_SETUP + """
+from repro.io.middleware import RetryMiddleware, RetryPolicy
+throttled = FakeS3Backend(chunk_size=16 << 10, slowdown_every=40)
+flaky = RetryMiddleware(
+    MetricsMiddleware(throttled),
+    RetryPolicy(max_attempts=8, base_delay_s=0.001, max_delay_s=0.01,
+                jitter=0.0),
+    sleep=lambda _: None)
+flaky.create_bucket("sort")
+gensort.write_to_store(flaky, "sort", plan.input_prefix, N,
+                       plan.input_records_per_partition, plan.payload_words)
+drv = InvocationDriver(flaky, "sort", plan=plan, workers=4,
+                       mesh_devices=8, axis="w")
+crep = drv.run()
+assert not crep.failed_workers
+got = [(m.key, m.etag, m.size, m.parts)
+       for m in flaky.list_objects("sort", plan.output_prefix)]
+assert got == want, "slowdown regime changed output bytes"
+assert throttled.throttled > 0  # the regime actually fired
+val = valsort.validate_from_store(flaky, "sort", plan.output_prefix, in_ck)
+assert val.ok and val.total_records == N
+print("OK")
+""", timeout=900)

@@ -77,6 +77,109 @@ def test_paper_breakdown_has_zero_spill_leg():
     assert dict(b.rows())["data_storage_spill_ssd"] == 0.0
 
 
+# ---------------------------------------------------------------------------
+# serverless: the per-invocation GB-second leg (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+
+def test_gb_seconds_price_from_measured_peak_and_wall_clock():
+    from repro.core.cost_model import (InvocationProfile, ServerlessCostParams,
+                                       billed_gb_seconds,
+                                       serverless_compute_cost)
+
+    p = ServerlessCostParams()
+    # 512 MiB measured peak for 2.0 s: exactly 0.5 GB x 2 s = 1 GB-s
+    prof = InvocationProfile(seconds=2.0, peak_bytes=512 << 20)
+    assert billed_gb_seconds(prof, p) == pytest.approx(1.0)
+    assert serverless_compute_cost([prof], p) == pytest.approx(
+        1.0 * p.gb_second + p.per_invocation)
+
+    # one byte over 512 MiB rounds UP to the next memory step (513 MiB)
+    over = InvocationProfile(seconds=2.0, peak_bytes=(512 << 20) + 1)
+    assert billed_gb_seconds(over, p) == pytest.approx(513 / 1024 * 2.0)
+
+    # tiny invocations hit both floors: 128 MiB and one duration step
+    tiny = InvocationProfile(seconds=0.0, peak_bytes=1)
+    assert billed_gb_seconds(tiny, p) == pytest.approx(
+        (128 / 1024) * (p.duration_step_ms / 1000.0))
+
+
+def test_measured_serverless_tco_uses_retry_inflated_requests():
+    from repro.io.backends import StoreStats
+
+    from repro.core.cost_model import (InvocationProfile, ServerlessCostParams,
+                                       measured_serverless_tco)
+
+    p = ServerlessCostParams()
+    invs = [InvocationProfile(seconds=1.0, peak_bytes=1 << 30)
+            for _ in range(4)]
+    # counters are attempt counts: 500 of these GETs were throttled
+    # re-issues, and they bill exactly like the logical ones
+    stats = StoreStats(get_requests=10_500, put_requests=2_000,
+                       retries=500, throttled=500)
+    tco = measured_serverless_tco(
+        invs, stats, job_hours=1.0, reduce_hours=0.5, data_bytes=1e12)
+    assert tco.access_get == pytest.approx(p.s3.get_per_1000 * 10_500 / 1000)
+    assert tco.access_put == pytest.approx(p.s3.put_per_1000 * 2_000 / 1000)
+    # compute leg = measured GB-seconds, not any VM hourly rate
+    assert tco.compute == pytest.approx(
+        4 * (1.0 * p.gb_second) + 4 * p.per_invocation)
+    # storage legs follow the same arithmetic as the VM model
+    assert tco.storage_input == pytest.approx(
+        p.s3.s3_hourly_per_100tb() * 0.01 * 1.0)
+
+
+def test_serverless_crossover_sits_just_above_one_tb():
+    from repro.core.cost_model import (cluster_tco_at, serverless_crossover_tb,
+                                       serverless_tco_at)
+
+    x = serverless_crossover_tb()
+    assert x == pytest.approx(1.01, rel=0.05)
+    # at the crossover the two totals agree ...
+    gap = serverless_tco_at(x).total - cluster_tco_at(x).total
+    assert abs(gap) < 1e-6
+    # ... and the bracket property holds: serverless wins small datasets
+    # (the cluster pays its provisioning floor), loses big ones (the
+    # GB-second premium)
+    assert serverless_tco_at(0.1).total < cluster_tco_at(0.1).total
+    assert serverless_tco_at(10.0).total > cluster_tco_at(10.0).total
+
+
+def test_serverless_pricing_knob_validation():
+    from repro.core.cost_model import (InvocationProfile, ServerlessCostParams,
+                                       cluster_tco_at, serverless_tco_at)
+
+    ServerlessCostParams()  # defaults are valid
+    for knob, bad in [("gb_second", 0.0), ("per_invocation", -1.0),
+                      ("memory_floor_mib", 0), ("memory_step_mib", 0),
+                      ("duration_step_ms", 0.0),
+                      ("equivalent_worker_memory_gb", 0.0),
+                      ("invocations_per_100tb", -1)]:
+        with pytest.raises(ValueError, match=knob):
+            dataclasses.replace(ServerlessCostParams(), **{knob: bad})
+    with pytest.raises(ValueError, match="seconds"):
+        InvocationProfile(seconds=-1.0, peak_bytes=0)
+    with pytest.raises(ValueError, match="peak_bytes"):
+        InvocationProfile(seconds=0.0, peak_bytes=-1)
+    with pytest.raises(ValueError, match="data_tb"):
+        cluster_tco_at(0.0)
+    with pytest.raises(ValueError, match="provision_hours"):
+        cluster_tco_at(1.0, provision_hours=-1.0)
+    with pytest.raises(ValueError, match="data_tb"):
+        serverless_tco_at(-1.0)
+
+
+def test_serverless_crossover_requires_a_sign_change():
+    from repro.core.cost_model import (ServerlessCostParams,
+                                       serverless_crossover_tb)
+
+    # a free function fleet never crosses the cluster's cost: no root
+    free = dataclasses.replace(ServerlessCostParams(),
+                               gb_second=1e-12, per_invocation=0.0)
+    with pytest.raises(ValueError, match="crossover_bracket"):
+        serverless_crossover_tb(fn=free)
+
+
 def test_tpu_model_late_beats_through_on_memory():
     t_through = tpu_sort_time_model(100e12, payload_mode="through")
     t_late = tpu_sort_time_model(100e12, payload_mode="late")

@@ -24,24 +24,11 @@ def store(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# object store: S3 contract
+# object store: request accounting on top of the S3 contract. (The
+# contract itself — roundtrip/ranged-GET/multipart/key semantics — is
+# pinned once for every data plane by tests/store_compliance.py; this
+# module keeps only what's specific to the metered ObjectStore facade.)
 # ---------------------------------------------------------------------------
-
-
-def test_put_get_roundtrip_and_head(store):
-    data = bytes(range(256))
-    meta = store.put("b", "in/part-0", data, metadata={"records": 4})
-    assert store.get("b", "in/part-0") == data
-    h = store.head("b", "in/part-0")
-    assert h.size == 256 and h.parts == 1 and h.metadata == {"records": 4}
-    assert h.etag == meta.etag
-
-
-def test_get_range_truncates_like_s3(store):
-    store.put("b", "k", b"0123456789")
-    assert store.get_range("b", "k", 2, 4) == b"2345"
-    assert store.get_range("b", "k", 8, 100) == b"89"  # past-EOF truncation
-    assert store.get_range("b", "k", 20, 4) == b""
 
 
 def test_chunked_get_counts_one_request_per_chunk(store):
@@ -64,36 +51,12 @@ def test_multipart_counts_one_put_per_part(store):
     assert store.get("b", "out/p0") == b"".join(parts)
 
 
-def test_manifest_lists_by_prefix_in_key_order(store):
-    for k in ["out/p-2", "in/p-1", "in/p-0", "spill/x"]:
-        store.put("b", k, b"d")
-    keys = [m.key for m in store.list_objects("b", "in/")]
-    assert keys == ["in/p-0", "in/p-1"]
-    assert len(store.list_objects("b")) == 4
-
-
 def test_manifest_persists_across_reopen(store):
     store.put("b", "k", b"payload", metadata={"wave": 3})
     reopened = ObjectStore(store.root)
     m = reopened.head("b", "k")
     assert m.size == 7 and m.metadata == {"wave": 3}
     assert reopened.get("b", "k") == b"payload"
-
-
-def test_missing_key_and_bucket_raise(store):
-    with pytest.raises(ObjectNotFound):
-        store.get("b", "nope")
-    with pytest.raises(ObjectNotFound):
-        store.list_objects("no-bucket")
-    with pytest.raises(ObjectNotFound):
-        store.put("no-bucket", "k", b"")
-
-
-def test_bad_keys_rejected(store):
-    # ValueError, not AssertionError: the traversal guard must survive -O
-    for bad in ["/abs", "../up", "a/../b", ".hidden", ""]:
-        with pytest.raises(ValueError):
-            store.put("b", bad, b"")
 
 
 def test_delete_removes_object_and_is_counted(store):

@@ -9,6 +9,9 @@ import os
 
 import pytest
 
+from store_compliance import (BACKEND_KINDS, StoreBackendCompliance,
+                              make_backend)
+
 from repro.io.backends import (FilesystemBackend, IntegrityError,
                                MemoryBackend, ObjectNotFound, SlowDown,
                                StoreStats)
@@ -21,68 +24,19 @@ from repro.io.tiered import TieredStore, tiered_cloudsort_store
 
 
 # ---------------------------------------------------------------------------
-# backends: same S3 contract from both data planes
+# backends: the same S3 contract from every data plane, pinned by ONE
+# suite (tests/store_compliance.py) run against fs, mem, and the
+# in-process S3 double the cloud code paths use.
 # ---------------------------------------------------------------------------
 
 
-@pytest.fixture(params=["fs", "mem"])
+@pytest.fixture(params=BACKEND_KINDS)
 def backend(request, tmp_path):
-    if request.param == "fs":
-        b = FilesystemBackend(str(tmp_path / "fs"), chunk_size=64)
-    else:
-        b = MemoryBackend(chunk_size=64)
-    b.create_bucket("b")
-    return b
+    return make_backend(request.param, tmp_path)
 
 
-def test_backend_contract_roundtrip(backend):
-    meta = backend.put("b", "in/p0", b"0123456789", metadata={"records": 1})
-    assert backend.get("b", "in/p0") == b"0123456789"
-    assert backend.get_range("b", "in/p0", 2, 4) == b"2345"
-    assert backend.get_range("b", "in/p0", 8, 100) == b"89"  # EOF truncation
-    h = backend.head("b", "in/p0")
-    assert h.size == 10 and h.etag == meta.etag and h.metadata == {"records": 1}
-    assert [m.key for m in backend.list_objects("b", "in/")] == ["in/p0"]
-    backend.delete("b", "in/p0")
-    with pytest.raises(ObjectNotFound):
-        backend.get("b", "in/p0")
-    with pytest.raises(ObjectNotFound):
-        backend.put("nope", "k", b"")
-
-
-def test_backend_multipart_session_streams(backend):
-    mp = backend.multipart("b", "out/p0", metadata={"reducer": 3})
-    mp.put_part(0, b"aaaa")
-    mp.put_part(1, b"bb")
-    # parts invisible until complete
-    with pytest.raises(ObjectNotFound):
-        backend.head("b", "out/p0")
-    meta = mp.complete()
-    assert meta.parts == 2 and meta.size == 6
-    assert backend.get("b", "out/p0") == b"aaaabb"
-
-    aborted = backend.multipart("b", "out/p1")
-    aborted.put_part(0, b"zzz")
-    aborted.abort()
-    with pytest.raises(ObjectNotFound):
-        backend.head("b", "out/p1")
-
-
-def test_out_of_order_parts_assemble_identical(backend):
-    # S3 UploadPart semantics: part numbers decide assembly order, wire
-    # order is free. 3,1,2 must complete to an object byte- AND etag-
-    # identical to the same parts uploaded sequentially.
-    parts = [b"alpha-" * 7, b"bravo!" * 5, b"charlie" * 3]
-    seq = backend.put_multipart("b", "seq", parts)
-
-    mp = backend.multipart("b", "ooo")
-    mp.put_part(2, parts[2])
-    mp.put_part(0, parts[0])
-    mp.put_part(1, parts[1])
-    ooo = mp.complete()
-    assert backend.get("b", "ooo") == b"".join(parts) == backend.get("b", "seq")
-    assert ooo.etag == seq.etag and ooo.size == seq.size
-    assert ooo.parts == seq.parts == 3
+class TestBackendCompliance(StoreBackendCompliance):
+    """fs / mem / fake_s3 all speak the identical contract."""
 
 
 def test_out_of_order_parts_through_middleware_stack(tmp_path):
@@ -108,68 +62,24 @@ def test_out_of_order_parts_through_middleware_stack(tmp_path):
     assert d.put_requests == 4 and d.bytes_written == sum(map(len, parts))
 
 
-def test_same_index_reupload_is_last_write_wins(backend):
-    mp = backend.multipart("b", "k")
-    mp.put_part(0, b"stale-part")
-    mp.put_part(1, b"-tail")
-    mp.put_part(0, b"fresh")  # S3: re-uploading a part number replaces it
-    meta = mp.complete()
-    assert backend.get("b", "k") == b"fresh-tail"
-    assert meta.parts == 2
-
-
-def test_abort_with_inflight_parallel_parts_leaves_no_object(backend, tmp_path):
-    import threading
-
-    mp = backend.multipart("b", "out/doomed")
-    threads = [threading.Thread(target=mp.put_part, args=(i, bytes([i]) * 512))
-               for i in (3, 0, 2, 1)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
+def test_fs_abort_sweeps_unregistered_part_files(tmp_path):
+    # Filesystem-plane specific (the generic abort atomicity lives in
+    # the compliance suite): an in-flight put_part that wrote its tmp
+    # file but had not yet registered it when abort ran must be swept
+    # by the tmp-prefix glob, not leak on disk.
+    b = FilesystemBackend(str(tmp_path / "fs"), chunk_size=64)
+    b.create_bucket("b")
+    objdir = os.path.join(b.root, "b", "objects", "out")
+    mp = b.multipart("b", "out/doomed")
+    mp.put_part(0, b"registered")
+    straggler = mp._part_path(9)
+    with open(straggler, "wb") as f:
+        f.write(b"written-but-unregistered")
     mp.abort()
     with pytest.raises(ObjectNotFound):
-        backend.head("b", "out/doomed")
-    assert backend.list_objects("b", "out/") == []
-    if isinstance(backend, FilesystemBackend):
-        # no orphaned part tmp files on disk either
-        objdir = os.path.join(backend.root, "b", "objects", "out")
-        leftovers = os.listdir(objdir) if os.path.isdir(objdir) else []
-        assert leftovers == [], leftovers
-
-        # The genuinely-in-flight race, made deterministic: a put_part
-        # that wrote its file but had not yet registered it when abort
-        # ran must be swept by the tmp-prefix glob, not leak.
-        mp2 = backend.multipart("b", "out/doomed2")
-        mp2.put_part(0, b"registered")
-        straggler = mp2._part_path(9)
-        with open(straggler, "wb") as f:
-            f.write(b"written-but-unregistered")
-        mp2.abort()
-        with pytest.raises(ObjectNotFound):
-            backend.head("b", "out/doomed2")
-        leftovers = os.listdir(objdir) if os.path.isdir(objdir) else []
-        assert leftovers == [], leftovers
-
-
-def test_parallel_part_uploads_complete_exact(backend):
-    # 16 parts uploaded from 8 racing threads complete to the exact
-    # sequential byte string — the reduce path's part fan-out contract.
-    import threading
-
-    parts = [bytes([40 + i]) * (64 + i) for i in range(16)]
-    mp = backend.multipart("b", "out/wide")
-    order = [11, 3, 15, 0, 7, 12, 1, 9, 14, 2, 10, 5, 13, 4, 8, 6]
-    threads = [threading.Thread(target=mp.put_part, args=(i, parts[i]))
-               for i in order]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    meta = mp.complete()
-    assert meta.parts == 16
-    assert backend.get("b", "out/wide") == b"".join(parts)
+        b.head("b", "out/doomed")
+    leftovers = os.listdir(objdir) if os.path.isdir(objdir) else []
+    assert leftovers == [], leftovers
 
 
 def test_integrity_error_on_corruption(tmp_path):
